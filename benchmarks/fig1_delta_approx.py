@@ -1,0 +1,43 @@
+"""Paper Fig. 1: Δ+ approximation quality (LUT size 20 & bit-shift vs exact).
+
+Emits max/mean absolute approximation error over d ∈ [0, 12] for each
+Δ-approximation at both paper formats.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_SOFTMAX,
+                        LNS12, LNS16, DeltaEngine, delta_plus_float)
+
+
+def run():
+    rows = []
+    d = np.linspace(0.0, 12.0, 2401)
+    exact_p = delta_plus_float(d)
+    ln2 = np.log(2.0)
+    exact_m = np.where(d > 0, np.log2(-np.expm1(-np.maximum(d, 1e-9) * ln2)),
+                       -np.inf)
+    for fmt in (LNS16, LNS12):
+        for name, spec in [("lut20", DELTA_DEFAULT),
+                           ("lut640", DELTA_SOFTMAX),
+                           ("bitshift", DELTA_BITSHIFT)]:
+            eng = DeltaEngine(spec, fmt)
+            t0 = time.perf_counter()
+            ap = eng.plus_float(d)
+            us = (time.perf_counter() - t0) * 1e6 / d.size
+            err_p = np.abs(ap - exact_p)
+            am = eng.minus_float(d[d > 0.5])
+            err_m = np.abs(am - exact_m[d > 0.5])
+            rows.append((f"fig1/delta_{name}_{fmt.name}", us,
+                         f"max_err_plus={err_p.max():.4f};"
+                         f"mean_err_plus={err_p.mean():.5f};"
+                         f"max_err_minus_d>.5={err_m.max():.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

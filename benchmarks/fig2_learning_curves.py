@@ -1,0 +1,26 @@
+"""Paper Fig. 2: validation-accuracy learning curves, 12/16-bit log vs
+linear.  Reuses the cached Table-1 runs (val_curve field)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .table1_accuracy import RESULTS_DIR
+
+
+def run(mode="quick"):
+    cache = os.path.join(RESULTS_DIR, f"table1_{mode}.json")
+    if not os.path.exists(cache):
+        return [("fig2/missing", 0.0, "run table1 first")]
+    with open(cache) as f:
+        results = json.load(f)
+    rows = []
+    for tag, rr in sorted(results.items()):
+        curve = ";".join(f"{v:.3f}" for v in rr["val_curve"])
+        rows.append((f"fig2/{tag}", rr["seconds"] * 1e6, f"curve={curve}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

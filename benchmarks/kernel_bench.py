@@ -1,0 +1,55 @@
+"""LNS ⊞-MAC microbenchmarks: Pallas kernel (interpret), jnp emulation,
+and the float matmul reference.
+
+CPU wall times characterize the *emulation*, not TPU performance (the
+container has no TPU); the structural TPU cost model lives in
+EXPERIMENTS.md §Roofline.  Shapes follow the paper MLP's hot matmul.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, LNS16,
+                        DeltaEngine, encode)
+from repro.core.arithmetic import lns_matmul
+from repro.kernels.lns_matmul import lns_matmul_kernel
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    m, k, n = 64, 784, 100
+    X = rng.normal(size=(m, k)).astype(np.float32)
+    W = rng.normal(size=(k, n)).astype(np.float32)
+    x, w = encode(X, LNS16), encode(W, LNS16)
+    rows = []
+    rows.append(("kernel/float_matmul_64x784x100",
+                 _time(jax.jit(jnp.matmul), X, W), "ref"))
+    for name, spec in [("lut20", DELTA_DEFAULT), ("bitshift", DELTA_BITSHIFT)]:
+        eng = DeltaEngine(spec, LNS16)
+        emu = jax.jit(lambda a, b, e=eng: lns_matmul(a, b, e).code)
+        rows.append((f"kernel/emulated_{name}_64x784x100",
+                     _time(emu, x, w), "pairwise tree"))
+        pal = lambda a, b, s=spec: lns_matmul_kernel(
+            a, b, fmt=LNS16, spec=s, block_m=32, block_n=32, block_k=98,
+            interpret=True).code
+        rows.append((f"kernel/pallas_interp_{name}_64x784x100",
+                     _time(pal, x, w, reps=2), "sequential MAC"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

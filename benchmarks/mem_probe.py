@@ -1,0 +1,48 @@
+"""Memory bisection probe for a single dry-run cell.
+
+Lowers variants of one cell with individual features toggled and prints
+per-device temp bytes — the measurement loop behind §Perf iterations.
+
+Usage: PYTHONPATH=src python -m benchmarks.mem_probe command-r-35b train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.dryrun import build_cell, run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.nn.config import SHAPE_CELLS
+
+
+def probe(arch: str, cell_name: str, variants: dict):
+    mesh = make_production_mesh()
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    for name, kw in variants.items():
+        try:
+            rec = run_cell(cfg.with_(**kw), cell, mesh, text=False)
+            print(f"{name:34s} temp {rec['temp_bytes']/2**30:7.2f} GiB  "
+                  f"args {rec['arg_bytes']/2**30:5.2f}  "
+                  f"compile {rec['compile_s']:.0f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name:34s} FAILED {type(e).__name__}: {str(e)[:90]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "command-r-35b"
+    cell = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    variants = {
+        "baseline": {},
+        "remat=none": dict(remat="none"),
+        "q_chunk=256": dict(q_chunk=256),
+        "bands=16": dict(attn_bands=16),
+        "layers=2(scan)": dict(layer_override=2),
+        "layers=2(unroll)": dict(layer_override=2, scan_layers=False),
+    }
+    probe(arch, cell, variants)

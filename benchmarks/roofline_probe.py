@@ -1,0 +1,45 @@
+"""Roofline iteration probe: lower config variants of one cell and print
+the three roofline terms + per-kind collective bytes — the measurement
+loop for §Perf hillclimbing.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.roofline_probe yi-6b train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import sys
+
+from repro.configs import get_config
+from repro.launch.dryrun import roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.nn.config import SHAPE_CELLS
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def probe(arch: str, cell_name: str, variants: dict):
+    mesh = make_production_mesh()
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    for name, kw in variants.items():
+        try:
+            full, _ = roofline_terms(cfg.with_(**kw), cell, mesh)
+            comp = full["flops"] / PEAK
+            mem = full["bytes"] / HBM
+            coll = sum(v for k, v in full.items()
+                       if k.startswith("coll_")) / LINK
+            kinds = {k[5:]: f"{v/1e9:.0f}G" for k, v in full.items()
+                     if k.startswith("coll_") and v > 5e9}
+            dom = max(("compute", comp), ("memory", mem),
+                      ("collective", coll), key=lambda t: t[1])[0]
+            print(f"{name:30s} comp {comp:6.2f}s mem {mem:6.2f}s "
+                  f"coll {coll:6.2f}s  [{dom}]  {kinds}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name:30s} FAILED {type(e).__name__}: {str(e)[:90]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "yi-6b"
+    cell = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    probe(arch, cell, {"baseline": {}})

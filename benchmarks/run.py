@@ -1,0 +1,35 @@
+"""Benchmark harness — one section per paper table/figure + kernels.
+
+Prints ``name,us_per_call,derived`` CSV.  Default is the quick budget
+(reduced datasets/steps, suitable for this CPU container); pass ``--full``
+for the paper's 20-epoch protocol on all four dataset presets, and
+``--with-roofline`` to include the dry-run roofline summary (requires
+``python -m repro.launch.dryrun`` artifacts).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    rows = []
+    from . import fig1_delta_approx, fig2_learning_curves, kernel_bench
+    from . import table1_accuracy
+    rows += fig1_delta_approx.run()
+    mode = "full" if full else "quick"
+    ds = ("mnist", "fmnist", "emnistd", "emnistl") if full \
+        else ("mnist", "fmnist")
+    rows += table1_accuracy.run(ds, mode)
+    rows += fig2_learning_curves.run(mode)
+    rows += kernel_bench.run()
+    if "--with-roofline" in sys.argv:
+        from . import roofline
+        rows += roofline.run()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper Table 1: test accuracy of float / linear fixed-point / LNS training.
+
+Grid: {float} ∪ {fxp, lns} × {12, 16} bits (+ lns bit-shift variants), per
+dataset.  Results cached to benchmarks/results/table1_<mode>.json.
+
+The linear fixed-point baselines use stochastic rounding on the weight
+update (without it, 12-bit linear training collapses — see EXPERIMENTS.md
+§Repro; the paper's C implementation detail is not specified).  The LNS
+runs need no SR: log-domain codes do not underflow at lr·g magnitudes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.paper import run_experiment
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+QUICK = dict(epochs=4, max_steps_per_epoch=150)
+FULL = dict(epochs=20, max_steps_per_epoch=None)
+
+CONFIGS = [
+    ("float", dict()),
+    ("fxp", dict(bits=16, stochastic_round=True)),
+    ("fxp", dict(bits=12, stochastic_round=True)),
+    ("fxp", dict(bits=12)),                      # no-SR ablation
+    ("lns", dict(bits=16, approx="lut")),
+    ("lns", dict(bits=12, approx="lut")),
+    ("lns", dict(bits=16, approx="bitshift")),
+    ("lns", dict(bits=12, approx="bitshift")),
+]
+
+
+def run(datasets=("mnist",), mode="quick", force=False):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cache = os.path.join(RESULTS_DIR, f"table1_{mode}.json")
+    results = {}
+    if os.path.exists(cache) and not force:
+        with open(cache) as f:
+            results = json.load(f)
+    budget = QUICK if mode == "quick" else FULL
+    rows = []
+    for ds in datasets:
+        for backend, kw in CONFIGS:
+            tag = "_".join([ds, backend] + [
+                f"{k}={v}" for k, v in sorted(kw.items())])
+            if tag not in results:
+                t0 = time.time()
+                r = run_experiment(backend, ds, **kw, **budget)
+                results[tag] = dict(test_acc=r.test_acc,
+                                    val_curve=r.val_curve,
+                                    seconds=time.time() - t0)
+                with open(cache, "w") as f:
+                    json.dump(results, f, indent=1)
+            rr = results[tag]
+            rows.append((f"table1/{tag}", rr["seconds"] * 1e6,
+                         f"test_acc={rr['test_acc']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    mode = sys.argv[1] if len(sys.argv) > 1 else "quick"
+    ds = ("mnist", "fmnist", "emnistd", "emnistl") if mode == "full" \
+        else ("mnist",)
+    for r in run(ds, mode):
+        print(",".join(map(str, r)))

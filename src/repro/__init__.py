@@ -1,0 +1,7 @@
+"""repro: multiplication-free log-domain (LNS) training framework.
+
+Reproduction + scale-out of "Neural Network Training with Approximate
+Logarithmic Computations" (Sanyal, Beerel, Chugg, 2019).  See README.md.
+"""
+
+__version__ = "1.0.0"

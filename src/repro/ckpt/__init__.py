@@ -1,0 +1,6 @@
+"""Checkpointing + fault tolerance."""
+from .checkpoint import (CheckpointManager, latest_step, load_checkpoint,
+                         save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,156 @@
+"""Lightweight orbax-style checkpointing: atomic, async, keep-k, elastic.
+
+Layout:  <dir>/step_<n>/
+            manifest.json          — tree structure + leaf metadata
+            leaf_<i>.npy           — one array per leaf (np.save)
+
+Properties needed at 1000-node scale, scaled to this container:
+* **Atomicity** — writes go to ``step_<n>.tmp`` and are renamed only after
+  fsync; a crashed writer never corrupts the latest checkpoint.
+* **Async** — ``CheckpointManager.save(..., blocking=False)`` snapshots to
+  host memory (device_get) and writes on a background thread, overlapping
+  I/O with training.
+* **Keep-k** — old steps garbage-collected after a successful save.
+* **Elastic / mesh-agnostic restore** — leaves are saved *unsharded*
+  (gathered logical arrays); ``load_checkpoint(..., shardings=...)`` places
+  them under any new mesh topology, so restarts may change pod/data/model
+  sizes freely (re-sharding happens at device_put).
+* **Deterministic data resume** — the train state carries ``step``; the
+  data pipeline (repro/data) is seeded per step, so a restart replays
+  exactly the batches that were not yet consumed.
+
+On a real multi-host cluster the np.save writer is swapped for a
+per-process sharded writer (same manifest format, one shard-file per
+process); the manager logic is unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    """Atomic synchronous save of a pytree; returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _tree_paths(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(host),
+        "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for a in host],
+        "time": time.time(),
+    }
+    for i, a in enumerate(host):
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), a)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like, shardings=None):
+    """Restore a pytree saved by save_checkpoint.
+
+    ``like`` supplies the tree structure; ``shardings`` (optional pytree of
+    NamedSharding for the *current* mesh) re-shards each leaf on load —
+    this is the elastic-restart path.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _tree_paths(like)
+    assert manifest["n_leaves"] == len(leaves), \
+        f"checkpoint has {manifest['n_leaves']} leaves, tree has {len(leaves)}"
+    arrs = [np.load(os.path.join(path, f"leaf_{i}.npy"))
+            for i in range(len(leaves))]
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_flatten(shardings)[0]
+        arrs = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves)]
+    else:
+        arrs = [jax.device_put(a) for a in arrs]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+class CheckpointManager:
+    """Keep-k async checkpointer with crash-safe GC."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree, blocking: bool = True):
+        self.wait()
+        # snapshot to host before returning control (device buffers may be
+        # donated by the next step)
+        leaves, treedef = _tree_paths(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        snapshot = jax.tree_util.tree_unflatten(treedef, host)
+
+        def _write():
+            save_checkpoint(self.directory, step, snapshot)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, like, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return load_checkpoint(self.directory, step, like, shardings), step
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+        # stale tmp dirs from crashed writers
+        for d in os.listdir(self.directory):
+            if d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d),
+                              ignore_errors=True)

@@ -1,0 +1,35 @@
+"""Core LNS library — the paper's contribution.
+
+Sub-modules:
+  formats        fixed-point format descriptors (+ eq. 15 bit-width bound)
+  lns            LNSArray pytree + float codecs
+  delta          Δ± exact / LUT / bit-shift engines (paper Sec. 3)
+  arithmetic     ⊡ ⊞ ⊟, reductions, emulated log-domain matmul (eq. 10)
+  conversions    log ↔ linear fixed point (Mitchell / LUT / exact)
+  activations    log-leaky-ReLU + derivative (eq. 11)
+  softmax        log-domain softmax + CE gradient init (eq. 14)
+  initializers   log-domain weight init (eq. 12)
+  linear_fixed   linear-domain fixed-point baseline arithmetic
+  sgd            pure-LNS SGD (+momentum, weight decay)
+  qat            straight-through LNS quantization / emulated-MAC dot
+  numerics       per-op numerics policy registry (fp32/bf16/lns*)
+"""
+from .arithmetic import (boxabs_max, boxdiv, boxdot, boxminus, boxneg,
+                         boxplus, boxsum, lns_affine, lns_matmul)
+from .activations import beta_code, llrelu, llrelu_grad
+from .conversions import code_to_lns, lns_value_to_code
+from .delta import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, DELTA_SOFTMAX,
+                    DeltaEngine, DeltaSpec, delta_minus_float,
+                    delta_plus_float)
+from .formats import (FORMATS, FXP12, FXP16, LNS12, LNS16,
+                      FixedPointFormat, LNSFormat, required_log_width)
+from .initializers import (encode_init, he_sigma, log_density_normal,
+                           log_normal_init)
+from .lns import (LNSArray, decode, encode, from_parts, quantization_bound,
+                  scalar, zeros)
+from .numerics import POLICIES, NumericsPolicy, get_policy
+from .qat import lns_dot_exact, lns_quantize_ste
+from .sgd import LogSGDConfig, apply_update, init_momentum
+from .softmax import ce_grad_init, ce_loss_readout, log_softmax_lns
+
+__all__ = [n for n in dir() if not n.startswith("_")]

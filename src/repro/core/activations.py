@@ -1,0 +1,39 @@
+"""Log-domain activation functions (paper eq. 11)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import LNSFormat
+from .lns import LNSArray
+
+
+def beta_code(alpha: float, fmt: LNSFormat) -> int:
+    """β = log2(α) as an integer code for the llReLU leak slope α."""
+    return fmt.to_code(math.log2(alpha))
+
+
+def llrelu(a: LNSArray, beta: int, fmt: LNSFormat) -> LNSArray:
+    """log-leaky-ReLU: identity on positives; code += β on negatives.
+
+    (β < 0 encodes a leak slope α = 2^β; eq. 11.)
+    """
+    neg = a.sign == 1
+    shifted = a.code + np.int32(beta)
+    shifted = jnp.where(shifted < fmt.min_nonzero_code,
+                        np.int32(fmt.zero_code), shifted)
+    code = jnp.where(neg, shifted, a.code)
+    code = jnp.where(a.code == fmt.zero_code, np.int32(fmt.zero_code), code)
+    return LNSArray(code, a.sign)
+
+
+def llrelu_grad(a: LNSArray, beta: int, fmt: LNSFormat) -> LNSArray:
+    """d llReLU/dz in the log domain: 1 for positives, α = 2^β for negatives.
+
+    Both are positive constants → sign = 0; code 0 (=log2 1) or β.
+    """
+    code = jnp.where(a.sign == 1, np.int32(beta), np.int32(0))
+    code = jnp.broadcast_to(code, a.code.shape)
+    return LNSArray(code, jnp.zeros_like(a.sign))

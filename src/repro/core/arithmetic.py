@@ -1,0 +1,157 @@
+"""Signed LNS arithmetic: ⊡ (mul), ⊞ (add), ⊟ (sub), reductions.
+
+Paper eqs. (2)-(5).  All ops are elementwise over broadcast-compatible
+:class:`LNSArray` operands, carried on int32 codes with explicit saturation
+to the target format width.  Sign convention here: 1 = negative (see lns.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .delta import DeltaEngine
+from .formats import LNSFormat
+from .lns import LNSArray
+
+
+def _sat(code, fmt: LNSFormat):
+    """Saturate into the representable non-zero range, flushing underflow to
+    the reserved zero code."""
+    over = jnp.minimum(code, fmt.code_max)
+    return jnp.where(over < fmt.min_nonzero_code, np.int32(fmt.zero_code), over)
+
+
+def boxdot(a: LNSArray, b: LNSArray, fmt: LNSFormat) -> LNSArray:
+    """⊡: linear-domain multiply = log-domain add (eq. 2)."""
+    zero = (a.code == fmt.zero_code) | (b.code == fmt.zero_code)
+    code = _sat(a.code + b.code, fmt)
+    code = jnp.where(zero, np.int32(fmt.zero_code), code)
+    sign = (a.sign ^ b.sign).astype(jnp.int8)
+    sign = jnp.where(zero, jnp.int8(0), sign)
+    return LNSArray(code, sign)
+
+
+def boxneg(a: LNSArray) -> LNSArray:
+    return LNSArray(a.code, (a.sign ^ 1).astype(jnp.int8))
+
+
+def boxplus(a: LNSArray, b: LNSArray, eng: DeltaEngine) -> LNSArray:
+    """⊞: linear-domain add = max + Δ±(|X-Y|) (eq. 3)."""
+    fmt = eng.fmt
+    za = a.code == fmt.zero_code
+    zb = b.code == fmt.zero_code
+    m = jnp.maximum(a.code, b.code)
+    d = jnp.abs(a.code - b.code)
+    same = a.sign == b.sign
+    delta = jnp.where(same, eng.plus(d), eng.minus(d))
+    code = _sat(m + delta, fmt)
+    # Opposite signs with equal magnitudes cancel exactly.
+    cancel = (~same) & (d == 0)
+    code = jnp.where(cancel, np.int32(fmt.zero_code), code)
+    # Sign of the larger-magnitude operand (eq. 3c).
+    sign = jnp.where(a.code > b.code, a.sign, b.sign).astype(jnp.int8)
+    sign = jnp.where(same, a.sign, sign)
+    # Zero-operand handling: x ⊞ 0 = x.
+    code = jnp.where(za, b.code, jnp.where(zb, a.code, code))
+    sign = jnp.where(za, b.sign, jnp.where(zb, a.sign, sign))
+    zero_out = (code == fmt.zero_code)
+    return LNSArray(code, jnp.where(zero_out, jnp.int8(0), sign))
+
+
+def boxminus(a: LNSArray, b: LNSArray, eng: DeltaEngine) -> LNSArray:
+    """⊟: a - b = a ⊞ (-b) (eq. 5)."""
+    return boxplus(a, boxneg(b), eng)
+
+
+def boxdiv(a: LNSArray, b: LNSArray, fmt: LNSFormat) -> LNSArray:
+    """Linear-domain divide = log-domain subtract of codes."""
+    zero = a.code == fmt.zero_code
+    code = _sat(a.code - b.code, fmt)
+    code = jnp.where(zero, np.int32(fmt.zero_code), code)
+    sign = (a.sign ^ b.sign).astype(jnp.int8)
+    return LNSArray(code, jnp.where(zero, jnp.int8(0), sign))
+
+
+def boxabs_max(a: LNSArray, axis: int, keepdims: bool = False):
+    """Signed max over ``axis`` (value order, not magnitude order).
+
+    Larger value = (positive beats negative); among positives larger code,
+    among negatives smaller code.  Used e.g. for max-shifted softmax.
+    """
+    # Build a sortable key: positives -> +code, negatives -> -code - 1 offset.
+    key = jnp.where(a.sign == 0, a.code, -a.code)
+    big = jnp.int32(1 << 30)
+    key = jnp.where(a.sign == 0, key + big, key - big)
+    idx = jnp.argmax(key, axis=axis, keepdims=True)
+    code = jnp.take_along_axis(a.code, idx, axis=axis)
+    sign = jnp.take_along_axis(a.sign, idx, axis=axis)
+    if not keepdims:
+        code = jnp.squeeze(code, axis=axis)
+        sign = jnp.squeeze(sign, axis=axis)
+    return LNSArray(code, sign)
+
+
+def boxsum(a: LNSArray, axis: int, eng: DeltaEngine,
+           order: str = "pairwise") -> LNSArray:
+    """⊞-reduction along ``axis``.
+
+    ``pairwise``   — balanced tree (log2 K vectorized ⊞ steps); the order a
+                     blocked TPU kernel would use across tiles.
+    ``sequential`` — left fold, matching a scalar MAC pipeline (the paper's
+                     C implementation); traced with lax.scan.
+    The approximation is order-sensitive; both are valid instances of the
+    paper's arithmetic and tests bound their disagreement.
+    """
+    fmt = eng.fmt
+    code = jnp.moveaxis(a.code, axis, 0)
+    sign = jnp.moveaxis(a.sign, axis, 0)
+    k = code.shape[0]
+    if order == "sequential":
+        init = LNSArray(jnp.full(code.shape[1:], fmt.zero_code, jnp.int32),
+                        jnp.zeros(code.shape[1:], jnp.int8))
+
+        def step(acc, xs):
+            c, s = xs
+            return boxplus(acc, LNSArray(c, s), eng), None
+
+        out, _ = jax.lax.scan(step, init, (code, sign))
+        return out
+    # pairwise tree; pad to a power of two with zeros.
+    n = 1
+    while n < k:
+        n *= 2
+    if n != k:
+        pad = [(0, n - k)] + [(0, 0)] * (code.ndim - 1)
+        code = jnp.pad(code, pad, constant_values=fmt.zero_code)
+        sign = jnp.pad(sign, pad, constant_values=0)
+    cur = LNSArray(code, sign)
+    while cur.code.shape[0] > 1:
+        h = cur.code.shape[0] // 2
+        cur = boxplus(LNSArray(cur.code[:h], cur.sign[:h]),
+                      LNSArray(cur.code[h:], cur.sign[h:]), eng)
+    return LNSArray(cur.code[0], cur.sign[0])
+
+
+def lns_matmul(x: LNSArray, w: LNSArray, eng: DeltaEngine,
+               order: str = "pairwise") -> LNSArray:
+    """Emulated log-domain matmul: Z[m,n] = ⊞_k (X[m,k] ⊡ W[k,n]) (eq. 10).
+
+    ``x``: (..., M, K), ``w``: (K, N).  Materializes the (..., M, K, N)
+    product tensor — intended for paper-scale layers and as the oracle for
+    the Pallas kernel; large models use the QAT path (core/qat.py).
+    """
+    fmt = eng.fmt
+    px = LNSArray(x.code[..., :, :, None], x.sign[..., :, :, None])
+    pw = LNSArray(w.code[None, :, :], w.sign[None, :, :])
+    prod = boxdot(px, pw, fmt)
+    return boxsum(prod, axis=prod.ndim - 2, eng=eng, order=order)
+
+
+def lns_affine(x: LNSArray, w: LNSArray, b: LNSArray, eng: DeltaEngine,
+               order: str = "pairwise") -> LNSArray:
+    """z = W x + b in the log domain (eq. 10 with bias)."""
+    z = lns_matmul(x, w, eng, order=order)
+    bb = LNSArray(jnp.broadcast_to(b.code, z.shape),
+                  jnp.broadcast_to(b.sign, z.shape))
+    return boxplus(z, bb, eng)

@@ -1,0 +1,71 @@
+"""Log-domain <-> linear-domain fixed point conversions.
+
+Needed for the log-domain softmax (eq. 14: treating ``a·log2(e)`` — a linear
+value — as the new log-magnitude of ``e^a``), for dataset conversion, and
+for the loss readout.  In hardware these are a barrel shifter plus either a
+small 2^frac / log2(1+m) LUT or the Mitchell approximation
+``2^f ≈ 1+f``, ``log2(1+m) ≈ m`` (pure shifts — the same spirit as eq. 9).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import LNSFormat
+from .lns import LNSArray
+
+
+def lns_value_to_code(a: LNSArray, fmt: LNSFormat, mode: str = "exact"):
+    """Return the *signed fixed-point value* of the LNS number on the qf grid.
+
+    value = ±2^(code/2^qf); output = round(value · 2^qf) as int32, saturated
+    to the format's code range.  This is exactly the (log→linear) conversion
+    a hardware softmax block performs.
+    """
+    qf = fmt.qf
+    if mode == "exact":
+        mag = jnp.exp2(a.code.astype(jnp.float32) / fmt.scale + qf)
+        v = jnp.round(mag).astype(jnp.int32)
+    elif mode == "mitchell":
+        # u = code + qf<<qf is log2 of the scaled magnitude, in code units.
+        u = a.code + (qf << qf)
+        n = u >> qf                      # floor(log2 .)
+        f = u - (n << qf)                # fractional code in [0, 2^qf)
+        mant = (1 << qf) + f             # 2^qf · (1 + f/2^qf)  ≈ 2^qf·2^frac
+        sh_r = jnp.clip(qf - n, 0, 31)
+        sh_l = jnp.clip(n - qf, 0, 31)
+        v = jnp.where(n >= qf, mant << sh_l, mant >> sh_r).astype(jnp.int32)
+        # magnitudes too small to represent round to 0
+        v = jnp.where(n < -1, 0, v)
+    else:
+        raise ValueError(mode)
+    v = jnp.minimum(v, fmt.code_max)
+    v = jnp.where(a.code == fmt.zero_code, 0, v)
+    return jnp.where(a.sign == 1, -v, v)
+
+
+def code_to_lns(value_code, fmt: LNSFormat, mode: str = "exact") -> LNSArray:
+    """Inverse: treat a signed fixed-point value (qf fraction bits) as a real
+    and produce its LNS encoding.  (linear → log conversion.)"""
+    qf = fmt.qf
+    mag = jnp.abs(value_code)
+    sign = (value_code < 0).astype(jnp.int8)
+    if mode == "exact":
+        safe = jnp.maximum(mag, 1).astype(jnp.float32)
+        x = jnp.log2(safe) - qf
+        code = jnp.round(x * fmt.scale).astype(jnp.int32)
+    elif mode == "mitchell":
+        # n = position of MSB; log2(mag) ≈ n + (mag/2^n - 1).
+        safe = jnp.maximum(mag, 1)
+        n = jnp.floor(jnp.log2(safe.astype(jnp.float32))).astype(jnp.int32)
+        # frac code = (mag - 2^n) scaled to qf bits: (mag << qf >> n) - 2^qf
+        sh_l = jnp.clip(qf - n, 0, 31)
+        sh_r = jnp.clip(n - qf, 0, 31)
+        scaled = jnp.where(n >= qf, safe >> sh_r, safe << sh_l)
+        frac = scaled - (1 << qf)
+        code = ((n - qf) << qf) + frac
+    else:
+        raise ValueError(mode)
+    code = jnp.clip(code, fmt.min_nonzero_code, fmt.code_max)
+    code = jnp.where(mag == 0, np.int32(fmt.zero_code), code)
+    return LNSArray(code, jnp.where(mag == 0, jnp.int8(0), sign))

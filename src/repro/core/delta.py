@@ -1,0 +1,164 @@
+"""Δ± correction terms for log-domain addition (paper Sec. 3).
+
+Exact:      Δ+(d) = log2(1 + 2^-d)   (d >= 0)
+            Δ-(d) = log2(1 - 2^-d)   (d > 0;  Δ-(0) = -inf → exact cancel)
+
+Approximations:
+* ``lut``      — uniform table over [0, d_max] with resolution ``r``
+                 (size d_max / r); nearest-sample lookup; Δ := 0 beyond d_max.
+                 Paper default: d_max=10, r=1/2 (20 entries); the softmax path
+                 uses r=1/64 (640 entries).
+* ``bitshift`` — eq. (9): Δ+(d) ≈ BS(1, -d) = 2^-d,
+                 Δ-(d) ≈ -BS(1.5, -d) = -1.5 · 2^-d, with the shift amount
+                 taken as the integer part of d (pure shifter hardware).
+* ``exact``    — float evaluation, quantized to the code grid (oracle).
+
+All engines operate on *integer difference codes* ``d_code = |X-Y|·2^qf``
+and return *integer Δ codes* on the same grid.  ``minus`` at d=0 returns the
+``UNDERFLOW`` sentinel (more negative than any representable code) so a
+saturating add flushes the result to the reserved zero code, matching the
+paper ("its value at 0 is set to be the most negative number").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import LNSFormat
+
+
+def delta_plus_float(d):
+    """Exact Δ+ on floats (for Fig. 1 and oracles)."""
+    return np.log2(1.0 + np.exp2(-np.asarray(d, np.float64)))
+
+
+def delta_minus_float(d):
+    """Exact Δ- on floats; d must be > 0."""
+    d = np.asarray(d, np.float64)
+    return np.log2(-np.expm1(-d * np.log(2.0))) if d.ndim == 0 else np.log2(
+        -np.expm1(-d * np.log(2.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSpec:
+    """Configuration of the Δ approximation."""
+
+    kind: str = "lut"  # 'exact' | 'lut' | 'bitshift'
+    d_max: float = 10.0
+    r: float = 0.5
+
+    @property
+    def table_size(self) -> int:
+        return int(round(self.d_max / self.r))
+
+
+# Paper defaults (Sec. 5 / Fig. 2).
+DELTA_DEFAULT = DeltaSpec(kind="lut", d_max=10.0, r=0.5)
+DELTA_SOFTMAX = DeltaSpec(kind="lut", d_max=10.0, r=1.0 / 64.0)
+DELTA_BITSHIFT = DeltaSpec(kind="bitshift")
+DELTA_EXACT = DeltaSpec(kind="exact")
+
+
+class DeltaEngine:
+    """Evaluates Δ± on integer d-codes for a given LNS format."""
+
+    def __init__(self, spec: DeltaSpec, fmt: LNSFormat):
+        self.spec = spec
+        self.fmt = fmt
+        # Sentinel that guarantees flush-to-zero through a saturating add:
+        # more negative than (code_max - code_min).
+        self.underflow = np.int32(-(1 << (fmt.qi + fmt.qf + 2)))
+        if spec.kind == "lut":
+            r_code = spec.r * fmt.scale
+            if abs(r_code - round(r_code)) > 1e-9 or round(r_code) < 1:
+                raise ValueError(
+                    f"LUT resolution r={spec.r} is not representable on the "
+                    f"qf={fmt.qf} grid (r*2^qf must be a positive integer)")
+            self.r_code = int(round(r_code))
+            n = spec.table_size
+            d = np.arange(n, dtype=np.float64) * spec.r
+            plus = np.round(delta_plus_float(d) * fmt.scale).astype(np.int32)
+            minus = np.zeros(n, np.int32)
+            minus[0] = self.underflow  # Δ-(0) → flush to zero (paper Sec. 5)
+            if n > 1:
+                minus[1:] = np.round(
+                    np.log2(-np.expm1(-d[1:] * np.log(2.0))) * fmt.scale
+                ).astype(np.int32)
+            self._tab_plus = jnp.asarray(plus)
+            self._tab_minus = jnp.asarray(minus)
+            self.d_max_code = int(round(spec.d_max * fmt.scale))
+
+    # -- integer-code evaluation ------------------------------------------
+    def plus(self, d_code):
+        fmt = self.fmt
+        if self.spec.kind == "exact":
+            d = d_code.astype(jnp.float32) / fmt.scale
+            val = jnp.log2(1.0 + jnp.exp2(-d))
+            return jnp.round(val * fmt.scale).astype(jnp.int32)
+        if self.spec.kind == "bitshift":
+            d_int = jnp.minimum(d_code >> fmt.qf, 31).astype(jnp.int32)
+            return (jnp.int32(1 << fmt.qf) >> d_int).astype(jnp.int32)
+        # LUT, nearest sample; Δ+ := 0 beyond d_max.
+        idx = (d_code + self.r_code // 2) // self.r_code
+        idx_c = jnp.clip(idx, 0, self.spec.table_size - 1)
+        val = jnp.take(self._tab_plus, idx_c)
+        return jnp.where(idx >= self.spec.table_size, 0, val)
+
+    def minus(self, d_code):
+        """Δ- on d_code; caller must special-case d_code == 0 (exact cancel).
+
+        Still returns the flush sentinel at index 0 so that un-special-cased
+        uses behave like the paper.
+        """
+        fmt = self.fmt
+        if self.spec.kind == "exact":
+            d = jnp.maximum(d_code, 1).astype(jnp.float32) / fmt.scale
+            val = jnp.log2(-jnp.expm1(-d * jnp.log(2.0).astype(jnp.float32)))
+            code = jnp.round(val * fmt.scale).astype(jnp.int32)
+            return jnp.where(d_code <= 0, self.underflow, code)
+        if self.spec.kind == "bitshift":
+            d_int = jnp.minimum(d_code >> fmt.qf, 30).astype(jnp.int32)
+            mag = (jnp.int32(3 << fmt.qf) >> (d_int + 1)).astype(jnp.int32)
+            return jnp.where(d_code == 0, self.underflow, -mag)
+        idx = (d_code + self.r_code // 2) // self.r_code
+        idx_c = jnp.clip(idx, 0, self.spec.table_size - 1)
+        val = jnp.take(self._tab_minus, idx_c)
+        val = jnp.where(idx >= self.spec.table_size, 0, val)
+        return jnp.where(d_code == 0, self.underflow, val)
+
+    # -- float-domain evaluation of the *approximation* (Fig. 1 / analysis)
+    def plus_float(self, d):
+        d = np.asarray(d, np.float64)
+        fmt = self.fmt
+        code = np.round(d * fmt.scale).astype(np.int64)
+        if self.spec.kind == "exact":
+            return delta_plus_float(d)
+        if self.spec.kind == "bitshift":
+            return np.exp2(-(np.floor(d)))
+        idx = (code + self.r_code // 2) // self.r_code
+        out = np.where(
+            idx >= self.spec.table_size,
+            0.0,
+            np.asarray(self._tab_plus)[np.clip(idx, 0, self.spec.table_size - 1)]
+            / fmt.scale,
+        )
+        return out
+
+    def minus_float(self, d):
+        d = np.asarray(d, np.float64)
+        fmt = self.fmt
+        code = np.round(d * fmt.scale).astype(np.int64)
+        if self.spec.kind == "exact":
+            return np.log2(-np.expm1(-d * np.log(2.0)))
+        if self.spec.kind == "bitshift":
+            return -1.5 * np.exp2(-(np.floor(d)))
+        idx = (code + self.r_code // 2) // self.r_code
+        tab = np.asarray(self._tab_minus).astype(np.float64) / fmt.scale
+        out = np.where(
+            idx >= self.spec.table_size,
+            0.0,
+            tab[np.clip(idx, 0, self.spec.table_size - 1)],
+        )
+        return out

@@ -1,0 +1,59 @@
+"""Log-domain weight initialization (paper eq. 12).
+
+For a symmetric linear-domain density f_w, the log-magnitude W = log2|w| has
+
+    f_W(y) = 2^{y+1} · ln(2) · f_w(2^y)
+
+and the sign is Bernoulli(1/2).  Sampling (sign, Y) directly is equivalent to
+sampling w ~ f_w and transforming — we do the latter (the transform *is* the
+paper's change of measure) and also expose f_W for distribution tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import LNSFormat
+from .lns import LNSArray, encode
+
+
+def he_sigma(fan_in: int) -> float:
+    """He-normal std for (leaky-)ReLU layers [20]."""
+    return math.sqrt(2.0 / fan_in)
+
+
+def log_normal_init(key, shape, sigma: float, fmt: LNSFormat) -> LNSArray:
+    """Initialize LNS weights equivalent to w ~ N(0, sigma^2).
+
+    Implemented in the log domain: sign ~ Bernoulli(1/2);
+    Y = log2(sigma) + log2|n|, n ~ N(0,1) — identical in law to
+    encode(sigma·n) but expressed as the paper's eq. (12) measure change.
+    """
+    k1, k2 = jax.random.split(key)
+    n = jax.random.normal(k1, shape, jnp.float32)
+    y = jnp.log2(jnp.maximum(jnp.abs(n), 1e-30)) + math.log2(sigma)
+    code = jnp.round(y * fmt.scale).astype(jnp.int32)
+    code = jnp.clip(code, fmt.min_nonzero_code, fmt.code_max)
+    sign = jax.random.bernoulli(k2, 0.5, shape).astype(jnp.int8)
+    return LNSArray(code, sign)
+
+
+def log_density_normal(y, sigma: float):
+    """f_W(y) for w ~ N(0, sigma^2) per eq. (12) — used by tests."""
+    y = np.asarray(y, np.float64)
+    x = np.exp2(y)
+    f_w = np.exp(-x * x / (2 * sigma * sigma)) / (
+        math.sqrt(2 * math.pi) * sigma)
+    return np.exp2(y + 1) * math.log(2.0) * f_w
+
+
+def linear_normal_init(key, shape, sigma: float):
+    return sigma * jax.random.normal(key, shape, jnp.float32)
+
+
+def encode_init(key, shape, sigma: float, fmt: LNSFormat) -> LNSArray:
+    """Reference path: sample in linear domain then encode (same law)."""
+    return encode(linear_normal_init(key, shape, sigma), fmt)

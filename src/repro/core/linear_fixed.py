@@ -1,0 +1,72 @@
+"""Linear-domain fixed-point arithmetic — the paper's Table 1 baseline.
+
+Two's-complement codes with ``bf`` fraction bits carried as int32 with
+explicit width saturation.  Multiplies rescale (round-half-up shift toward
+zero-corrected) back to the ``bf`` grid *before* accumulation, emulating a
+MAC whose products are rounded to the bus width (accumulating raw int
+products over K=784 would overflow any 32-bit accumulator).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import FixedPointFormat
+
+
+def fxp_encode(v, fmt: FixedPointFormat):
+    c = jnp.round(jnp.asarray(v, jnp.float32) * fmt.scale).astype(jnp.int32)
+    return jnp.clip(c, fmt.code_min, fmt.code_max)
+
+
+def fxp_decode(c, fmt: FixedPointFormat):
+    return c.astype(jnp.float32) / fmt.scale
+
+
+def fxp_sat(c, fmt: FixedPointFormat):
+    return jnp.clip(c, fmt.code_min, fmt.code_max)
+
+
+def fxp_add(a, b, fmt: FixedPointFormat):
+    return fxp_sat(a + b, fmt)
+
+
+def _rescale(prod, fmt: FixedPointFormat):
+    """Shift a raw product (2·bf fraction bits) back to bf bits, rounding to
+    nearest (ties away from zero), symmetric in sign."""
+    half = np.int32(1 << (fmt.bf - 1))
+    mag = jnp.abs(prod)
+    r = (mag + half) >> fmt.bf
+    return jnp.where(prod < 0, -r, r)
+
+
+def fxp_mul(a, b, fmt: FixedPointFormat):
+    # |a|,|b| <= 2^15 for the formats used here → product fits int32.
+    return fxp_sat(_rescale(a * b, fmt), fmt)
+
+
+def fxp_matmul(x, w, fmt: FixedPointFormat):
+    """(..., M, K) @ (K, N) with per-product rescaling then int accumulate.
+
+    Post-rescale products are <= code_max, so the int32 accumulator holds
+    sums over K up to 2^16 elements without overflow; the final sum is
+    saturated to the format.
+    """
+    prod = x[..., :, :, None] * w[None, :, :]
+    acc = jnp.sum(_rescale(prod, fmt), axis=-2)
+    return fxp_sat(acc, fmt)
+
+
+def fxp_affine(x, w, b, fmt: FixedPointFormat):
+    return fxp_sat(fxp_matmul(x, w, fmt) + b, fmt)
+
+
+def fxp_leaky_relu(z, alpha_code, fmt: FixedPointFormat):
+    """leaky-ReLU with the leak slope given as a fixed-point code."""
+    neg = _rescale(z * alpha_code, fmt)
+    return jnp.where(z > 0, z, fxp_sat(neg, fmt))
+
+
+def fxp_leaky_relu_grad(z, alpha_code, fmt: FixedPointFormat):
+    one = np.int32(fmt.scale)
+    return jnp.where(z > 0, one, alpha_code).astype(jnp.int32)

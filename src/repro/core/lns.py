@@ -1,0 +1,116 @@
+"""LNS tensor type and float <-> LNS codecs.
+
+An :class:`LNSArray` carries two integer arrays of identical shape:
+
+* ``code``: int32, fixed-point encoding of ``X = log2|v|`` (``qf`` fraction
+  bits), with ``fmt.zero_code`` as the reserved exact-zero sentinel;
+* ``sign``: int8, **1 = negative**, 0 = positive.  (The paper uses
+  ``s=1 ⇔ v>0``; this is a pure convention flip, the XOR algebra is
+  identical.  All tests are roundtrip-based.)
+
+It is registered as a pytree so it flows through jit/scan/vmap untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import LNSFormat
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LNSArray:
+    code: jax.Array  # int32
+    sign: jax.Array  # int8, 1 = negative
+
+    def tree_flatten(self):
+        return (self.code, self.sign), None
+
+    @classmethod
+    def tree_unflatten(cls, aux: Any, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.code.shape
+
+    @property
+    def ndim(self):
+        return self.code.ndim
+
+    def __getitem__(self, idx):
+        return LNSArray(self.code[idx], self.sign[idx])
+
+    def reshape(self, *shape):
+        return LNSArray(self.code.reshape(*shape), self.sign.reshape(*shape))
+
+    def transpose(self, *axes):
+        axes = axes or None
+        return LNSArray(self.code.transpose(*axes) if axes else self.code.T,
+                        self.sign.transpose(*axes) if axes else self.sign.T)
+
+    @property
+    def T(self):
+        return LNSArray(self.code.T, self.sign.T)
+
+
+def encode(v: jax.Array, fmt: LNSFormat) -> LNSArray:
+    """Quantize a float array into LNS fixed point (paper eq. 1).
+
+    Zeros (and magnitudes underflowing the format) map to the reserved
+    ``zero_code``; magnitudes overflowing saturate to ``code_max``.
+    """
+    v = jnp.asarray(v, jnp.float32)
+    mag = jnp.abs(v)
+    # Avoid log2(0): the zero lanes are overwritten below.
+    safe = jnp.where(mag > 0, mag, 1.0)
+    x = jnp.log2(safe)
+    code = jnp.round(x * fmt.scale).astype(jnp.int32)
+    code = jnp.clip(code, fmt.min_nonzero_code, fmt.code_max)
+    code = jnp.where(mag > 0, code, np.int32(fmt.zero_code))
+    # Flush-to-zero for true underflow (rounded below representable range).
+    underflow = jnp.round(x * fmt.scale) < fmt.min_nonzero_code
+    code = jnp.where((mag > 0) & underflow, np.int32(fmt.zero_code), code)
+    sign = (v < 0).astype(jnp.int8)
+    return LNSArray(code, sign)
+
+
+def decode(a: LNSArray, fmt: LNSFormat) -> jax.Array:
+    """Map LNS codes back to float32: v = ±2^(code / 2^qf)."""
+    x = a.code.astype(jnp.float32) / fmt.scale
+    mag = jnp.exp2(x)
+    mag = jnp.where(a.code == fmt.zero_code, 0.0, mag)
+    s = jnp.where(a.sign == 1, -1.0, 1.0)
+    return s * mag
+
+
+def zeros(shape, fmt: LNSFormat) -> LNSArray:
+    return LNSArray(
+        jnp.full(shape, fmt.zero_code, jnp.int32),
+        jnp.zeros(shape, jnp.int8),
+    )
+
+
+def from_parts(code, sign) -> LNSArray:
+    return LNSArray(jnp.asarray(code, jnp.int32), jnp.asarray(sign, jnp.int8))
+
+
+def scalar(v: float, fmt: LNSFormat) -> LNSArray:
+    """Host-side scalar constant in LNS (e.g. learning rate, log2(e))."""
+    if v == 0:
+        return LNSArray(jnp.int32(fmt.zero_code), jnp.int8(0))
+    code = fmt.to_code(float(np.log2(abs(v))))
+    return LNSArray(jnp.int32(code), jnp.int8(1 if v < 0 else 0))
+
+
+def quantization_bound(fmt: LNSFormat) -> float:
+    """Max relative error of encode/decode for in-range values.
+
+    |v̂ - v| / |v| <= 2^(2^-(qf+1)) - 1  (half-ulp of the log code).
+    """
+    return float(2.0 ** (0.5 / fmt.scale) - 1.0)

@@ -1,0 +1,68 @@
+"""Pluggable numerics policies — the paper's technique as a first-class mode.
+
+Every linear layer in `repro.nn` routes its weight matmuls through a
+:class:`NumericsPolicy`.  Selecting ``lns16-qat`` (etc.) turns any assigned
+architecture into an LNS-grid-quantized model without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .delta import DELTA_DEFAULT, DeltaSpec
+from .formats import LNS12, LNS16, LNSFormat
+from .qat import lns_dot_exact, lns_quantize_ste
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    name: str
+    compute_dtype: str = "bfloat16"          # dtype fed to the MXU
+    param_lns: Optional[LNSFormat] = None    # LNS grid for parameters
+    act_lns: Optional[LNSFormat] = None      # LNS grid for activations
+    exact_spec: Optional[DeltaSpec] = None   # if set: emulated ⊞-MAC forward
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def q_param(self, w):
+        if self.param_lns is not None:
+            w = lns_quantize_ste(w, self.param_lns)
+        return w.astype(self.dtype)
+
+    def q_act(self, x):
+        if self.act_lns is not None:
+            x = lns_quantize_ste(x, self.act_lns)
+        return x.astype(self.dtype)
+
+    def linear(self, x, w):
+        """Contract x's last dim against w's first dim under this policy."""
+        if self.exact_spec is not None:
+            fmt = self.param_lns or LNS16
+            return lns_dot_exact(x, w, fmt, self.exact_spec)
+        return jnp.matmul(self.q_act(x), self.q_param(w))
+
+
+POLICIES = {
+    "fp32": NumericsPolicy("fp32", compute_dtype="float32"),
+    "bf16": NumericsPolicy("bf16", compute_dtype="bfloat16"),
+    "lns16-qat": NumericsPolicy(
+        "lns16-qat", compute_dtype="bfloat16", param_lns=LNS16, act_lns=LNS16),
+    "lns12-qat": NumericsPolicy(
+        "lns12-qat", compute_dtype="bfloat16", param_lns=LNS12, act_lns=LNS12),
+    "lns16-w-only": NumericsPolicy(
+        "lns16-w-only", compute_dtype="bfloat16", param_lns=LNS16),
+    "lns16-exact": NumericsPolicy(
+        "lns16-exact", compute_dtype="float32", param_lns=LNS16,
+        act_lns=LNS16, exact_spec=DELTA_DEFAULT),
+}
+
+
+def get_policy(name: str) -> NumericsPolicy:
+    if name not in POLICIES:
+        raise KeyError(f"unknown numerics policy {name!r}; "
+                       f"have {sorted(POLICIES)}")
+    return POLICIES[name]

@@ -1,0 +1,83 @@
+"""LNS quantization-aware training ops for large models.
+
+Two integration levels of the paper's arithmetic into float-graph models
+(see DESIGN.md §3):
+
+* ``lns_quantize_ste`` — snap a float tensor to the LNS fixed-point grid
+  (encode→decode) with a straight-through gradient.  Composable with any
+  jnp op; this is the `lns-qat` mode (MXU-friendly: values live on the LNS
+  grid, matmuls run in bf16 on the MXU).
+
+* ``lns_dot_exact`` — forward pass through the *emulated* ⊞-MAC log-domain
+  matmul (bit-accurate LNS, order-sensitive Δ approximation included),
+  backward pass via straight-through bf16 matmul grads.  This is the
+  `lns-exact` mode; O(M·K·N) element ops, intended for small/reduced configs
+  and kernel validation, not production shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .arithmetic import lns_matmul
+from .delta import DeltaEngine, DeltaSpec
+from .formats import LNSFormat
+from .lns import decode, encode
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def lns_quantize_ste(x, fmt: LNSFormat):
+    # dtype-preserving (encode/decode compute in f32 internally) so the
+    # straight-through cotangent matches the primal under jax.grad.
+    return decode(encode(x, fmt), fmt).astype(x.dtype)
+
+
+def _q_fwd(x, fmt):
+    return lns_quantize_ste(x, fmt), None
+
+
+def _q_bwd(fmt, _res, g):
+    return (g,)
+
+
+lns_quantize_ste.defvjp(_q_fwd, _q_bwd)
+
+
+_ENGINES: dict = {}
+
+
+def _engine(spec: DeltaSpec, fmt: LNSFormat) -> DeltaEngine:
+    key = (spec, fmt.name)
+    if key not in _ENGINES:
+        _ENGINES[key] = DeltaEngine(spec, fmt)
+    return _ENGINES[key]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lns_dot_exact(x, w, fmt: LNSFormat, spec: DeltaSpec):
+    """(..., K) @ (K, N) through the emulated log-domain MAC."""
+    eng = _engine(spec, fmt)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    z = lns_matmul(encode(x2, fmt), encode(w, fmt), eng)
+    return decode(z, fmt).reshape(lead + (w.shape[-1],))
+
+
+def _d_fwd(x, w, fmt, spec):
+    return lns_dot_exact(x, w, fmt, spec), (x, w)
+
+
+def _d_bwd(fmt, spec, res, g):
+    x, w = res
+    # Straight-through: gradients of the ideal linear matmul at the
+    # LNS-quantized operands.
+    xq = decode(encode(x, fmt), fmt)
+    wq = decode(encode(w, fmt), fmt)
+    gx = jnp.einsum("...n,kn->...k", g, wq)
+    gw = jnp.einsum("...k,...n->kn", xq, g)
+    return gx, gw
+
+
+lns_dot_exact.defvjp(_d_fwd, _d_bwd)

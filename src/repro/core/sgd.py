@@ -1,0 +1,64 @@
+"""Log-domain SGD with weight decay and optional momentum (paper Sec. 5).
+
+Update rule (linear domain):  w ← w − lr·g − lr·λ·w
+Log domain:                   W ← W ⊟ (LR ⊡ G) ⊟ (LRλ ⊡ W)
+
+With momentum μ:              M ← (μ ⊡ M) ⊞ G ;  W ← W ⊟ (LR ⊡ M)
+All quantities stay in LNS fixed point end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from .arithmetic import boxdot, boxminus, boxplus
+from .delta import DeltaEngine
+from .lns import LNSArray, scalar, zeros
+
+
+@dataclasses.dataclass(frozen=True)
+class LogSGDConfig:
+    lr: float = 0.01
+    weight_decay: float = 0.0
+    momentum: float = 0.0
+
+
+def init_momentum(params, cfg: LogSGDConfig, fmt):
+    if cfg.momentum == 0.0:
+        return None
+    return jax.tree.map(lambda p: zeros(p.shape, fmt), params,
+                        is_leaf=lambda x: isinstance(x, LNSArray))
+
+
+def apply_update(params, grads, momentum, cfg: LogSGDConfig,
+                 eng: DeltaEngine):
+    """Pure-LNS parameter update; returns (params, momentum)."""
+    fmt = eng.fmt
+    lr = scalar(cfg.lr, fmt)
+    is_lns = lambda x: isinstance(x, LNSArray)
+
+    def upd(w: LNSArray, g: LNSArray, m):
+        if cfg.momentum != 0.0:
+            mu = scalar(cfg.momentum, fmt)
+            m = boxplus(boxdot(mu, m, fmt), g, eng)
+            g_eff = m
+        else:
+            g_eff = g
+        w = boxminus(w, boxdot(lr, g_eff, fmt), eng)
+        if cfg.weight_decay != 0.0:
+            wd = scalar(cfg.lr * cfg.weight_decay, fmt)
+            w = boxminus(w, boxdot(wd, w, fmt), eng)
+        return w, m
+
+    if momentum is None:
+        out = jax.tree.map(lambda w, g: upd(w, g, None)[0], params, grads,
+                           is_leaf=is_lns)
+        return out, None
+    pairs = jax.tree.map(lambda w, g, m: upd(w, g, m), params, grads,
+                         momentum, is_leaf=is_lns)
+    new_p = jax.tree.map(lambda pr: pr[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda pr: pr[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_m

@@ -1,0 +1,72 @@
+"""Log-domain soft-max and cross-entropy gradient initialization (eq. 14).
+
+    log2 p_ij = (a_ij · log2 e) − ⊞_j (a_ij · log2 e, +)
+    δ_ij      = P_ij ⊟ Y_ij
+
+The quantity ``a·log2(e)`` is a *linear-domain value* that becomes the new
+log2-magnitude of ``e^a``; computing it requires one ⊡ by the constant
+``log2(e)`` followed by a log→linear conversion (barrel shift + Mitchell or
+LUT — see conversions.py).  The ⊞-reduction then *is* a log-sum-exp: it is
+max-based and therefore numerically stable by construction.
+
+The paper found this block the most approximation-sensitive and used a finer
+LUT (r = 1/64) here; we take a dedicated :class:`DeltaEngine` for it.
+
+``shift_max=True`` additionally recenters logits at their max before the
+conversion so large logits cannot saturate the qi=4 code range — a standard
+stabilization the paper does not discuss (pure-paper behaviour: False).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .arithmetic import boxabs_max, boxdot, boxminus, boxsum
+from .conversions import lns_value_to_code
+from .delta import DeltaEngine
+from .formats import LNSFormat
+from .lns import LNSArray, scalar
+
+LOG2E = math.log2(math.e)
+
+
+def log_softmax_lns(a: LNSArray, eng: DeltaEngine,
+                    conv_mode: str = "exact",
+                    shift_max: bool = True) -> LNSArray:
+    """Return P = softmax probabilities as LNS numbers, along the last axis."""
+    fmt = eng.fmt
+    if shift_max:
+        m = boxabs_max(a, axis=a.ndim - 1, keepdims=True)
+        mb = LNSArray(jnp.broadcast_to(m.code, a.shape),
+                      jnp.broadcast_to(m.sign, a.shape))
+        a = boxminus(a, mb, eng)
+    t = boxdot(a, scalar(LOG2E, fmt), fmt)         # LNS rep of a·log2(e)
+    e_code = lns_value_to_code(t, fmt, mode=conv_mode)  # log2-mag of e^a
+    e_code = jnp.maximum(e_code, fmt.min_nonzero_code)
+    exps = LNSArray(e_code.astype(jnp.int32),
+                    jnp.zeros(e_code.shape, jnp.int8))
+    z = boxsum(exps, axis=exps.ndim - 1, eng=eng)        # ⊞_j e^{a_j}
+    logp = jnp.clip(e_code - z.code[..., None], fmt.min_nonzero_code, 0)
+    return LNSArray(logp.astype(jnp.int32), jnp.zeros(logp.shape, jnp.int8))
+
+
+def ce_grad_init(p: LNSArray, labels, fmt: LNSFormat,
+                 eng: DeltaEngine) -> LNSArray:
+    """δ = p − onehot(y) in the log domain (eq. 13b/14b)."""
+    n = p.shape[-1]
+    onehot = jnp.equal(labels[..., None], jnp.arange(n))
+    y = LNSArray(jnp.where(onehot, 0, fmt.zero_code).astype(jnp.int32),
+                 jnp.zeros(p.shape, jnp.int8))
+    return boxminus(p, y, eng)
+
+
+def ce_loss_readout(p: LNSArray, labels, fmt: LNSFormat):
+    """Scalar cross-entropy (nats) for reporting: −mean log_e p[label].
+
+    log2 p is directly the fixed-point code; ×ln2 converts to nats.  This is
+    a readout (monitoring) value, not part of the training arithmetic.
+    """
+    logp_code = jnp.take_along_axis(p.code, labels[..., None], axis=-1)
+    logp = logp_code[..., 0].astype(jnp.float32) / fmt.scale
+    return -jnp.mean(logp) * math.log(2.0)

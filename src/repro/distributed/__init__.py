@@ -1,0 +1,5 @@
+"""Distribution: sharding rules, mesh helpers."""
+from .sharding import (batch_specs, cache_specs, param_shardings,
+                       param_specs)
+
+__all__ = ["batch_specs", "cache_specs", "param_shardings", "param_specs"]

@@ -1,0 +1,126 @@
+"""Sharding rules: parameter/optimizer/cache PartitionSpecs by path.
+
+Layout (DESIGN.md §5):
+* FSDP: parameters sharded over the ``data`` axis (ZeRO-3; GSPMD inserts
+  per-layer all-gathers and reduce-scatters).
+* TP: attention heads / FFN hidden sharded over ``model`` (Megatron
+  column→row pairs).
+* EP: MoE expert dim over ``model``.
+* pod axis: pure data parallel (params replicated across pods).
+
+Rules key off the flattened parameter path, so they apply uniformly to
+scanned (stacked (L, ...)) and unstacked trees.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = "data"
+TP = "model"
+
+# (path regex, spec builder taking ndim) — first match wins.  Specs are
+# given for the *unstacked* parameter; leading scan dims are padded with
+# None automatically.
+_COL = lambda nd: P(*([None] * (nd - 2) + [FSDP, TP]))    # (.., d_in, d_out)
+_ROW = lambda nd: P(*([None] * (nd - 2) + [TP, FSDP]))
+_REP = lambda nd: P()
+RULES = [
+    # Embeddings are vocab-parallel only (no FSDP): sharding the d_model
+    # dim over 'data' makes every LM-head matmul all-gather the full
+    # table (≈4 GiB bf16/device at 256k vocab) — measured +10 GiB on the
+    # command-r train cell (EXPERIMENTS.md §Perf iteration 3).
+    (r"emb/tok$", lambda nd: P(TP, None)),
+    (r"emb/head$", lambda nd: P(None, TP)),
+    (r"moe/router$", _REP),
+    (r"moe/w_(gate|up)$", lambda nd: P(TP, FSDP, None)),   # (E, d, de)
+    (r"moe/w_down$", lambda nd: P(TP, None, FSDP)),        # (E, de, d)
+    (r"(wo|w_down|out_proj|shared_down)$", _ROW),
+    (r"(wq|wk|wv|w_dkv|w_ukv|w_gate|w_up|shared_gate|shared_up|in_proj"
+     r"|frontend_proj)$", _COL),
+    (r"conv_w$", lambda nd: P(None, TP)),                  # (K, C)
+    (r"(conv_b|norm|A_log|D|dt_bias)$", lambda nd: P(TP)),  # (C,)/(H,)
+    (r".*", _REP),                                          # norms, scalars
+]
+
+
+def _spec_for(path: str, ndim: int, stacked: int) -> P:
+    for pat, fn in RULES:
+        if re.search(pat, path):
+            base = fn(ndim - stacked)
+            return P(*([None] * stacked + list(base)))
+    raise AssertionError(path)
+
+
+def _stacked_depth(path: str) -> int:
+    """Number of leading scan dims: layers → 1, hybrid groups keep 1."""
+    return 1 if re.search(r"(^|/)(layers|dense_layers|tail_layers|enc_layers)/",
+                          path) else 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pp in path:
+        if hasattr(pp, "key"):
+            parts.append(str(pp.key))
+        elif hasattr(pp, "name"):
+            parts.append(str(pp.name))
+        elif hasattr(pp, "idx"):
+            parts.append(str(pp.idx))
+        else:
+            parts.append(str(pp))
+    return "/".join(parts)
+
+
+def param_specs(params) -> "pytree[P]":
+    """PartitionSpec tree matching an init_params tree (or its eval_shape)."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        return _spec_for(ps, leaf.ndim, _stacked_depth(ps))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(mesh, params):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params))
+
+
+def batch_specs(batch, data_axes=("data",)) -> "pytree[P]":
+    """Batch dim over data axes; everything else replicated."""
+    data_axes = tuple(data_axes) or None
+
+    def one(leaf):
+        return P(data_axes, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(caches, data_axes=("data",), model_axis="model"):
+    data_axes = tuple(data_axes) or None
+    """Decode caches: batch over data; heads (4D+) over model.
+
+    Layouts: GQA KV (L,B,S,KV,hd) → heads on model; MLA latents (L,B,S,r)
+    and SSM conv (L,B,K,C) → last dim on model; SSM state (L,B,H,P,N) →
+    heads on model; enc_out (B,S,d) → batch only.
+    """
+    def one(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        if ps.endswith("enc_out"):                    # (B, S_enc, d)
+            return P(data_axes, model_axis, None)
+        if ps.endswith("conv"):                       # SSM (L,B,K,C)
+            return P(None, data_axes, None, model_axis)
+        if nd == 5:
+            # GQA KV (L,B,S,KV,hd): shard the *sequence* over model —
+            # works for any KV-head count (cf. KV=8 < tp=16) and gives
+            # flash-decoding-style parallel attention over cache chunks.
+            # SSM state (L,B,H,P,N): dim 2 = heads — same spec applies.
+            return P(None, data_axes, model_axis, None, None)
+        if nd == 4:                                   # MLA (L,B,S,r)
+            return P(None, data_axes, model_axis, None)
+        if nd == 3:
+            return P(None, data_axes, None)
+        return P()
+    return jax.tree_util.tree_map_with_path(one, caches)

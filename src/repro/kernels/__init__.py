@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the LNS ⊞-MAC.
+
+``lns_matmul`` — blocked multiplication-free matmul;
+``lns_boxsum`` — the soft-max Σ⊞ reduction (eq. 14), fine LUT in VMEM (max + Δ-LUT / bit-shift
+accumulation on the VPU, Δ tables in VMEM).  Validated bit-exactly against
+``ref.py`` in interpret mode; ``interpret=False`` targets real TPUs.
+"""
+from .lns_boxsum import lns_boxsum_kernel, lns_boxsum_ref
+from .lns_matmul import lns_matmul_kernel, lns_matmul_ref
+
+__all__ = ["lns_boxsum_kernel", "lns_boxsum_ref",
+           "lns_matmul_kernel", "lns_matmul_ref"]

@@ -1,0 +1,4 @@
+from .ops import lns_boxsum_kernel
+from .ref import lns_boxsum_ref
+
+__all__ = ["lns_boxsum_kernel", "lns_boxsum_ref"]

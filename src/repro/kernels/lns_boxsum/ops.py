@@ -1,0 +1,28 @@
+"""Jit'd public wrapper around the ⊞-reduction Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ...core.delta import DeltaSpec
+from ...core.formats import LNSFormat
+from ...core.lns import LNSArray
+from .lns_boxsum import lns_boxsum_pallas
+
+
+@partial(jax.jit, static_argnames=("fmt", "spec", "block_m", "block_k",
+                                   "interpret"))
+def _call(codes, signs, fmt, spec, block_m, block_k, interpret):
+    return lns_boxsum_pallas(codes, signs.astype("int32"), fmt=fmt,
+                             spec=spec, block_m=block_m, block_k=block_k,
+                             interpret=interpret)
+
+
+def lns_boxsum_kernel(x: LNSArray, *, fmt: LNSFormat, spec: DeltaSpec,
+                      block_m: int = 128, block_k: int = 128,
+                      interpret: bool = True) -> LNSArray:
+    """⊞-reduce an (M, K) LNSArray over axis 1 (the softmax Σ⊞)."""
+    code, sign = _call(x.code, x.sign, fmt, spec, block_m, block_k,
+                       interpret)
+    return LNSArray(code, sign.astype("int8"))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the ⊞-reduction kernel: sequential fold — bit-exact."""
+from __future__ import annotations
+
+from ...core.arithmetic import boxsum
+from ...core.delta import DeltaEngine, DeltaSpec
+from ...core.formats import LNSFormat
+from ...core.lns import LNSArray
+
+
+def lns_boxsum_ref(codes, signs, *, fmt: LNSFormat, spec: DeltaSpec):
+    eng = DeltaEngine(spec, fmt)
+    out = boxsum(LNSArray(codes, signs.astype("int8")), axis=1, eng=eng,
+                 order="sequential")
+    return out.code, out.sign.astype("int32")

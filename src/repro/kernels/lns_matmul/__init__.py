@@ -1,0 +1,4 @@
+from .ops import lns_matmul_kernel
+from .ref import lns_matmul_ref
+
+__all__ = ["lns_matmul_kernel", "lns_matmul_ref"]

@@ -1,0 +1,206 @@
+"""Pallas TPU kernel for the LNS ⊞-MAC matmul (paper eq. 10).
+
+TPU adaptation of the paper's multiplication-free MAC (DESIGN.md §3):
+the MXU cannot be used (there is no multiply to feed it); instead the
+max+Δ accumulation is vectorized on the VPU over (bm, bn) tiles held in
+VMEM, with the Δ± LUTs resident in VMEM (20–640 int32 entries).  The K
+dimension is walked *sequentially* — the innermost grid axis revisits the
+output tile, carrying the accumulator in VMEM scratch — which reproduces the
+paper's sequential MAC ordering bit-exactly (see ref.py).
+
+Block shapes are VPU/VMEM-aligned (multiples of (8, 128) for int32 tiles).
+VMEM footprint per step ≈ 2·(bm·bk + bk·bn + 2·bm·bn)·4 B; the default
+(128, 128, 128) uses ≈ 0.5 MiB — far below the ~16 MiB/core budget, leaving
+room for double-buffered HBM→VMEM pipelining by the Mosaic compiler.
+
+Signs are carried as int32 planes (0 = positive, 1 = negative): narrow int8
+lanes buy nothing on the VPU and complicate tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.delta import DeltaEngine, DeltaSpec
+from ...core.formats import LNSFormat
+
+
+def _delta_from_tables(d, tab_plus, tab_minus, same_sign, *, r_code, n_tab,
+                       underflow):
+    """Nearest-sample LUT evaluation of Δ± on integer d-codes."""
+    idx = (d + r_code // 2) // r_code
+    oob = idx >= n_tab
+    idx_c = jnp.clip(idx, 0, n_tab - 1)
+    dp = jnp.where(oob, 0, jnp.take(tab_plus, idx_c))
+    dm = jnp.where(oob, 0, jnp.take(tab_minus, idx_c))
+    dm = jnp.where(d == 0, underflow, dm)
+    return jnp.where(same_sign, dp, dm)
+
+
+def _delta_exact(d, same_sign, scale, underflow):
+    """Float-evaluated Δ± (oracle mode) — identical ops to DeltaEngine."""
+    dp_f = d.astype(jnp.float32) / scale
+    dp = jnp.round(jnp.log2(1.0 + jnp.exp2(-dp_f)) * scale).astype(jnp.int32)
+    dm_f = jnp.maximum(d, 1).astype(jnp.float32) / scale
+    ln2 = jnp.log(2.0).astype(jnp.float32)
+    dm_val = jnp.log2(-jnp.expm1(-dm_f * ln2))
+    dm = jnp.round(dm_val * scale).astype(jnp.int32)
+    dm = jnp.where(d <= 0, underflow, dm)
+    return jnp.where(same_sign, dp, dm)
+
+
+def _delta_bitshift(d, same_sign, qf, underflow):
+    """Eq. (9) bit-shift rule: Δ+ = 1>>⌊d⌋, Δ- = -(3>>(⌊d⌋+1)) in code units."""
+    d_int = jnp.minimum(d >> qf, 30)
+    dp = jnp.int32(1 << qf) >> d_int
+    dm = -(jnp.int32(3 << qf) >> (d_int + 1))
+    dm = jnp.where(d == 0, underflow, dm)
+    return jnp.where(same_sign, dp, dm)
+
+
+def _boxplus_codes(ac, asn, bc, bsn, delta_fn, fmt: LNSFormat):
+    """⊞ on raw (code, sign) planes — mirrors core.arithmetic.boxplus."""
+    zero = np.int32(fmt.zero_code)
+    za = ac == zero
+    zb = bc == zero
+    m = jnp.maximum(ac, bc)
+    d = jnp.abs(ac - bc)
+    same = asn == bsn
+    delta = delta_fn(d, same)
+    code = jnp.minimum(m + delta, fmt.code_max)
+    code = jnp.where(code < fmt.min_nonzero_code, zero, code)
+    cancel = (~same) & (d == 0)
+    code = jnp.where(cancel, zero, code)
+    sign = jnp.where(same, asn, jnp.where(ac > bc, asn, bsn))
+    code = jnp.where(za, bc, jnp.where(zb, ac, code))
+    sign = jnp.where(za, bsn, jnp.where(zb, asn, sign))
+    sign = jnp.where(code == zero, 0, sign)
+    return code, sign
+
+
+def _kernel(tabp_ref, tabm_ref, xc_ref, xs_ref, wc_ref, ws_ref,
+            zc_ref, zs_ref, accc_ref, accs_ref, *,
+            fmt: LNSFormat, spec: DeltaSpec, nk: int, bk: int,
+            r_code: int, underflow: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        accc_ref[...] = jnp.full_like(accc_ref, np.int32(fmt.zero_code))
+        accs_ref[...] = jnp.zeros_like(accs_ref)
+
+    zero = np.int32(fmt.zero_code)
+    if spec.kind == "bitshift":
+        def delta(d, same):
+            return _delta_bitshift(d, same, qf=fmt.qf,
+                                   underflow=np.int32(underflow))
+    elif spec.kind == "exact":
+        def delta(d, same):
+            return _delta_exact(d, same, scale=fmt.scale,
+                                underflow=np.int32(underflow))
+    else:
+        def delta(d, same):
+            return _delta_from_tables(
+                d, tabp_ref[...], tabm_ref[...], same, r_code=r_code,
+                n_tab=spec.table_size, underflow=np.int32(underflow))
+
+    xc = xc_ref[...]
+    xs = xs_ref[...]
+    wc = wc_ref[...]
+    ws = ws_ref[...]
+
+    def body(i, carry):
+        acc_c, acc_s = carry
+        # product column i of this K-tile: (bm, 1) ⊡ (1, bn)
+        pc = xc[:, i][:, None] + wc[i, :][None, :]
+        pz = (xc[:, i][:, None] == zero) | (wc[i, :][None, :] == zero)
+        pc = jnp.minimum(pc, fmt.code_max)
+        pc = jnp.where(pc < fmt.min_nonzero_code, zero, pc)
+        pc = jnp.where(pz, zero, pc)
+        ps = jnp.where(pz, 0, xs[:, i][:, None] ^ ws[i, :][None, :])
+        return _boxplus_codes(acc_c, acc_s, pc, ps, delta, fmt)
+
+    acc_c, acc_s = jax.lax.fori_loop(
+        0, bk, body, (accc_ref[...], accs_ref[...]))
+    accc_ref[...] = acc_c
+    accs_ref[...] = acc_s
+
+    @pl.when(k_step == nk - 1)
+    def _flush():
+        zc_ref[...] = acc_c
+        zs_ref[...] = acc_s
+
+
+def lns_matmul_pallas(x_code, x_sign, w_code, w_sign, *,
+                      fmt: LNSFormat, spec: DeltaSpec,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = True):
+    """Blocked LNS matmul on (code, sign) int32 planes.
+
+    x: (M, K), w: (K, N); M/N/K need not be multiples of the block sizes
+    (inputs are padded with the zero code, which is the ⊞ identity).
+    """
+    m, k = x_code.shape
+    k2, n = w_code.shape
+    assert k == k2, (x_code.shape, w_code.shape)
+    eng = DeltaEngine(spec, fmt)  # builds/validates tables
+    if spec.kind == "lut":
+        tabp = jnp.asarray(eng._tab_plus, jnp.int32)
+        tabm = jnp.asarray(eng._tab_minus, jnp.int32)
+        r_code = eng.r_code
+    else:
+        tabp = jnp.zeros((1,), jnp.int32)
+        tabm = jnp.zeros((1,), jnp.int32)
+        r_code = 1
+    underflow = int(eng.underflow)
+
+    pad_m = (-m) % block_m
+    pad_n = (-n) % block_n
+    pad_k = (-k) % block_k
+    zc = np.int32(fmt.zero_code)
+    if pad_m or pad_k:
+        x_code = jnp.pad(x_code, ((0, pad_m), (0, pad_k)), constant_values=zc)
+        x_sign = jnp.pad(x_sign, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w_code = jnp.pad(w_code, ((0, pad_k), (0, pad_n)), constant_values=zc)
+        w_sign = jnp.pad(w_sign, ((0, pad_k), (0, pad_n)))
+    mp, kp = x_code.shape
+    _, np_ = w_code.shape
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+
+    kernel = functools.partial(
+        _kernel, fmt=fmt, spec=spec, nk=grid[2], bk=block_k,
+        r_code=r_code, underflow=underflow)
+
+    tab_spec = pl.BlockSpec(tabp.shape, lambda i, j, kk: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+    ]
+    zcodes, zsigns = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            tab_spec, tab_spec,
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.int32),
+            pltpu.VMEM((block_m, block_n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tabp, tabm, x_code, x_sign, w_code, w_sign)
+    return zcodes[:m, :n], zsigns[:m, :n]

@@ -1,0 +1,35 @@
+"""Jit'd public wrapper around the LNS matmul Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ...core.delta import DeltaSpec
+from ...core.formats import LNSFormat
+from ...core.lns import LNSArray
+from .lns_matmul import lns_matmul_pallas
+
+
+@partial(jax.jit, static_argnames=("fmt", "spec", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def _call(x_code, x_sign, w_code, w_sign, fmt, spec,
+          block_m, block_n, block_k, interpret):
+    return lns_matmul_pallas(
+        x_code, x_sign.astype("int32"), w_code, w_sign.astype("int32"),
+        fmt=fmt, spec=spec, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret)
+
+
+def lns_matmul_kernel(x: LNSArray, w: LNSArray, *, fmt: LNSFormat,
+                      spec: DeltaSpec, block_m: int = 128,
+                      block_n: int = 128, block_k: int = 128,
+                      interpret: bool = True) -> LNSArray:
+    """(M, K) ⊞-MAC (K, N) → (M, N) via the Pallas kernel.
+
+    ``interpret=True`` (default here) runs the kernel body on CPU for
+    validation; on real TPU hardware pass ``interpret=False``.
+    """
+    code, sign = _call(x.code, x.sign, w.code, w.sign, fmt, spec,
+                       block_m, block_n, block_k, interpret)
+    return LNSArray(code, sign.astype("int8"))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the LNS matmul Pallas kernel.
+
+The kernel accumulates sequentially over the *entire* K dimension (the
+innermost grid axis revisits the output tile, and the in-tile fori_loop walks
+k ascending), so the oracle is ``core.arithmetic.lns_matmul`` with
+``order="sequential"`` — the comparison is **bit-exact**, not approximate.
+"""
+from __future__ import annotations
+
+from ...core.arithmetic import lns_matmul
+from ...core.delta import DeltaEngine, DeltaSpec
+from ...core.formats import LNSFormat
+from ...core.lns import LNSArray
+
+
+def lns_matmul_ref(x_code, x_sign, w_code, w_sign, *, fmt: LNSFormat,
+                   spec: DeltaSpec):
+    eng = DeltaEngine(spec, fmt)
+    x = LNSArray(x_code, x_sign.astype("int8"))
+    w = LNSArray(w_code, w_sign.astype("int8"))
+    z = lns_matmul(x, w, eng, order="sequential")
+    return z.code, z.sign.astype("int32")

@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each valid cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers + compiles the cell's step (train_step / prefill / serve_step)
+     against ShapeDtypeStruct inputs with full sharding annotations,
+  3. records memory_analysis() (proves per-device fit) and cost_analysis(),
+  4. parses the post-SPMD HLO for per-device collective bytes-on-wire,
+  5. optionally lowers *unrolled* 1-/2-layer variants whose affine
+     combination yields full-depth roofline terms (XLA counts a scanned
+     while-body once — see DESIGN.md §6).
+
+Results are appended to benchmarks/results/dryrun_<mesh>.json; the roofline
+tables in benchmarks/roofline.py read from there.
+
+The device-count override above MUST precede any jax import (jax locks the
+platform device count at first init), which is why it is the first
+statement of the module — and why nothing else (conftest, pyproject) sets
+it globally.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_config
+from ..distributed.sharding import (batch_specs, cache_specs, param_specs)
+from ..nn import Runtime, decode_step, init_decode_caches, init_params
+from ..nn.config import SHAPE_CELLS, HybridConfig, ModelConfig, ShapeCell
+from ..nn.model import loss_fn, prefill
+from ..optim.optimizers import AdamWConfig
+from ..train.step import TrainConfig, init_train_state, make_train_step
+from .input_specs import batch_struct, decode_struct
+from .mesh import data_axes, make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"= ([^=]*?) (all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes-on-wire per collective kind (ring cost model)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        size = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            size += n * _DTYPE_BYTES[dt]
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm = _GROUPS_EXPL_RE.search(line)
+            if gm:
+                g = len(gm.group(1).split(","))
+        if not g or g <= 1:
+            continue
+        if kind == "all-gather":            # shapes = gathered output
+            wire = size * (g - 1) / g
+        elif kind == "reduce-scatter":      # shapes = scattered output
+            wire = size * (g - 1)
+        elif kind == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:                               # collective-permute
+            wire = size
+        out[kind] = out.get(kind, 0.0) + wire
+    return out
+
+
+def valid_cells(cfg: ModelConfig):
+    cells = [SHAPE_CELLS["train_4k"], SHAPE_CELLS["prefill_32k"],
+             SHAPE_CELLS["decode_32k"]]
+    if cfg.sub_quadratic:
+        cells.append(SHAPE_CELLS["long_500k"])
+    return cells
+
+
+def _effective_data_axes(mesh, b):
+    """Largest data-axis set that divides the (small) decode batch."""
+    axes = data_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if b % n == 0:
+        return axes
+    if "data" in axes and b % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def _shardings(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+               microbatches: int | None = None):
+    """Return (fn, abstract args, in_shardings, donate) for one cell."""
+    daxes = _effective_data_axes(mesh, cell.global_batch)
+    rt = Runtime(mesh=mesh, data_axes=daxes,
+                 sequence_parallel=cfg.sequence_parallel)
+    if cell.kind == "train":
+        tcfg = cfg  # numerics + param_dtype from config (default bf16/f32)
+        opt = AdamWConfig()
+        # ≥20B-param models need gradient accumulation to fit activations
+        # in 16 GiB HBM at (256 × 4k) global batch — standard practice.
+        mb = (4 if cfg.param_count() > 2e10 else 1) \
+            if microbatches is None else microbatches
+        tc = TrainConfig(grad_clip=1.0, microbatches=mb)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(
+                init_params(jax.random.PRNGKey(0), tcfg), opt, tc))
+        pspecs = param_specs(state_shape["params"])
+        sspecs = {"params": pspecs, "step": P(),
+                  "opt": {k: pspecs for k in state_shape["opt"]}}
+        if "residual" in state_shape:
+            sspecs["residual"] = pspecs
+        batch = batch_struct(tcfg, cell, abstract=True)
+        bspecs = batch_specs(batch, daxes)
+        step = make_train_step(tcfg, opt, rt, tc)
+        return (step, (state_shape, batch),
+                (_shardings(mesh, sspecs), _shardings(mesh, bspecs)), (0,))
+    scfg = cfg.with_(param_dtype="bfloat16")
+    params_shape = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), scfg))
+    pshard = _shardings(mesh, param_specs(params_shape))
+    if cell.kind == "prefill":
+        batch = batch_struct(scfg, cell, abstract=True)
+        bspecs = batch_specs(batch, daxes)
+
+        def fn(params, b):
+            return prefill(params, b, scfg, rt)
+
+        return fn, (params_shape, batch), (pshard, _shardings(mesh, bspecs)), ()
+    # decode
+    enc_len = cell.seq_len if scfg.family in ("encdec", "audio") else None
+    caches_shape = jax.eval_shape(
+        lambda: init_decode_caches(scfg, cell.global_batch, cell.seq_len,
+                                   jnp.bfloat16, enc_len=enc_len))
+    cspecs = cache_specs(caches_shape, daxes)
+    d = decode_struct(scfg, cell, abstract=True)
+    tok_s = NamedSharding(mesh, P(daxes, None))
+    pos_s = NamedSharding(mesh, P(daxes))
+
+    def fn(params, tok, caches, pos):
+        return decode_step(params, tok, caches, pos, scfg, rt)
+
+    return (fn, (params_shape, d["tok"], caches_shape, d["pos"]),
+            (pshard, tok_s, _shardings(mesh, cspecs), pos_s), (2,))
+
+
+def run_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *, text: bool = True,
+             microbatches: int | None = None):
+    fn, args, in_sh, donate = build_cell(cfg, cell, mesh,
+                                         microbatches=microbatches)
+    t0 = time.time()
+    with mesh:
+        jf = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jf.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        rec = {
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "arg_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "out_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+        }
+        if text:
+            rec["collectives"] = collective_bytes(compiled.as_text())
+    return rec
+
+
+# ------------------------------------------------ roofline small lowers --
+def analysis_plan(cfg: ModelConfig):
+    """(tag, small cfg) lowers + per-arch combine() → full-depth terms.
+
+    All smalls are Python-unrolled (scan_layers=False) so XLA cost analysis
+    sees every layer; dims other than depth stay at full scale.
+    """
+    base = dict(scan_layers=False, remat="none")
+    fam = cfg.family
+    if fam in ("dense", "vlm", "ssm"):
+        smalls = [("L1", cfg.with_(layer_override=1, **base)),
+                  ("L2", cfg.with_(layer_override=2, **base))]
+
+        def combine(c):
+            per = {k: c["L2"][k] - c["L1"][k] for k in c["L1"]}
+            return {k: c["L1"][k] + (cfg.n_layers - 1) * per[k]
+                    for k in per}
+    elif fam == "moe":
+        smalls = [("L2", cfg.with_(layer_override=2, **base)),
+                  ("L3", cfg.with_(layer_override=3, **base))]
+
+        def combine(c):
+            per = {k: c["L3"][k] - c["L2"][k] for k in c["L2"]}
+            return {k: c["L2"][k] + (cfg.n_layers - 2) * per[k]
+                    for k in per}
+    elif fam == "hybrid":
+        smalls = [
+            ("A", cfg.with_(layer_override=1,
+                            hybrid=HybridConfig(attn_every=1), **base)),
+            ("B", cfg.with_(layer_override=2,
+                            hybrid=HybridConfig(attn_every=1), **base)),
+            ("C", cfg.with_(layer_override=2,
+                            hybrid=HybridConfig(attn_every=2), **base)),
+        ]
+
+        def combine(c):
+            mamba = {k: c["C"][k] - c["A"][k] for k in c["A"]}
+            attn = {k: c["B"][k] - c["A"][k] - mamba[k] for k in c["A"]}
+            n_attn = cfg.n_layers // cfg.hybrid.attn_every
+            return {k: c["A"][k] - mamba[k] - attn[k]
+                    + cfg.n_layers * mamba[k] + n_attn * attn[k]
+                    for k in c["A"]}
+    elif fam in ("encdec", "audio"):
+        e = cfg.encdec
+        mk = lambda ne, nd: cfg.with_(
+            encdec=dataclasses.replace(e, n_enc_layers=ne, n_dec_layers=nd),
+            **base)
+        smalls = [("E1D1", mk(1, 1)), ("E2D1", mk(2, 1)), ("E1D2", mk(1, 2))]
+
+        def combine(c):
+            enc = {k: c["E2D1"][k] - c["E1D1"][k] for k in c["E1D1"]}
+            dec = {k: c["E1D2"][k] - c["E1D1"][k] for k in c["E1D1"]}
+            return {k: c["E1D1"][k]
+                    + (e.n_enc_layers - 1) * enc[k]
+                    + (e.n_dec_layers - 1) * dec[k] for k in c["E1D1"]}
+    else:
+        raise ValueError(fam)
+    return smalls, combine
+
+
+def roofline_terms(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """Full-depth per-device {flops, bytes, coll_*} via affine smalls."""
+    smalls, combine = analysis_plan(cfg)
+    per = {}
+    for tag, small in smalls:
+        # microbatches=1: the grad-accumulation scan body is counted once
+        # by cost analysis, which would hide (mb-1)/mb of the real cost.
+        rec = run_cell(small, cell, mesh, text=True, microbatches=1)
+        terms = {"flops": rec["flops"] or 0.0,
+                 "bytes": rec["bytes_accessed"] or 0.0}
+        for k, v in rec.get("collectives", {}).items():
+            terms[f"coll_{k}"] = v
+        per[tag] = terms
+    keys = set()
+    for t in per.values():
+        keys.update(t)
+    for t in per.values():
+        for k in keys:
+            t.setdefault(k, 0.0)
+    return combine(per), per
+
+
+# --------------------------------------------------------------- main ----
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="also lower unrolled smalls for roofline terms")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tag = "multipod" if args.multi_pod else "pod"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = args.out or os.path.join(RESULTS_DIR, f"dryrun_{tag}.json")
+    results = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            results = json.load(f)
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    for name in archs:
+        cfg = get_config(name)
+        for cell in valid_cells(cfg):
+            if args.cell != "all" and cell.name != args.cell:
+                continue
+            key = f"{name}/{cell.name}"
+            if results.get(key, {}).get("ok") and not args.roofline:
+                print(f"[skip] {key}")
+                continue
+            print(f"[dryrun:{tag}] {key} ...", flush=True)
+            try:
+                rec = results.get(key) or {}
+                if not rec.get("ok"):
+                    rec = run_cell(cfg, cell, mesh)
+                    print(f"  compile {rec['compile_s']}s  "
+                          f"temp/dev {rec['temp_bytes']/2**30:.2f} GiB  "
+                          f"args/dev {rec['arg_bytes']/2**30:.2f} GiB")
+                if args.roofline and "roofline" not in rec:
+                    full, per = roofline_terms(cfg, cell, mesh)
+                    rec["roofline"] = full
+                    rec["roofline_smalls"] = per
+                    print(f"  roofline flops/dev {full['flops']:.3e}")
+            except Exception as e:  # noqa: BLE001 - record and continue
+                rec = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"  FAILED {rec['error']}")
+            results[key] = rec
+            with open(path, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"[done] {n_ok}/{len(results)} cells ok → {path}")
+
+
+if __name__ == "__main__":
+    main()

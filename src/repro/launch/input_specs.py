@@ -1,0 +1,69 @@
+"""Input construction for every (arch × shape) cell.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, no allocation) for the dry-run; ``make_inputs`` builds
+concrete arrays of the same structure for smoke tests / real runs.
+
+Frontend-stub archs (audio/vlm): per the assignment, ``frontend_embeds``
+carries precomputed frame/patch embeddings.  For the vlm family the first
+``frontend_frac·S`` positions come from the stub and the remaining tokens
+are text; labels cover the text span.  For enc-dec audio, the encoder sees
+S frame embeddings and the decoder S tokens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.config import ModelConfig, ShapeCell
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, cell: ShapeCell, abstract: bool = True):
+    """Training/prefill batch structure for one cell."""
+    b, s = cell.global_batch, cell.seq_len
+    mk = _spec if abstract else (
+        lambda shape, dtype: jnp.zeros(shape, dtype)
+        if jnp.issubdtype(dtype, jnp.floating)
+        else jnp.ones(shape, dtype))
+    if cfg.family in ("encdec", "audio"):
+        out = {"tokens": mk((b, s), jnp.int32)}
+        if cfg.frontend:
+            out["frontend_embeds"] = mk((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["enc_tokens"] = mk((b, s), jnp.int32)
+        if cell.kind == "train":
+            out["labels"] = mk((b, s), jnp.int32)
+        return out
+    if cfg.family == "vlm" or (cfg.family == "dense" and cfg.frontend):
+        s_vis = int(s * cfg.frontend_frac)
+        s_txt = s - s_vis
+        out = {"tokens": mk((b, s_txt), jnp.int32),
+               "frontend_embeds": mk((b, s_vis, cfg.d_model), jnp.bfloat16)}
+        if cell.kind == "train":
+            out["labels"] = mk((b, s_txt), jnp.int32)
+        return out
+    out = {"tokens": mk((b, s), jnp.int32)}
+    if cell.kind == "train":
+        out["labels"] = mk((b, s), jnp.int32)
+    return out
+
+
+def decode_struct(cfg: ModelConfig, cell: ShapeCell, abstract: bool = True):
+    """(tok, pos) for one decode step (caches built separately)."""
+    b = cell.global_batch
+    if abstract:
+        return {"tok": _spec((b, 1), jnp.int32), "pos": _spec((b,), jnp.int32)}
+    return {"tok": jnp.ones((b, 1), jnp.int32),
+            "pos": jnp.full((b,), cell.seq_len - 1, jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell):
+    """The dry-run entry point: abstract inputs for the cell's step kind."""
+    if cell.kind == "decode":
+        return decode_struct(cfg, cell, abstract=True)
+    return batch_struct(cfg, cell, abstract=True)

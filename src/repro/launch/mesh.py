@@ -1,0 +1,29 @@
+"""Production meshes (TPU v5e-256 pods).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.  Single-pod: (data=16,
+model=16) = 256 chips; multi-pod: (pod=2, data=16, model=16) = 512 chips
+with the ``pod`` axis running pure data parallelism (optionally with
+compressed cross-pod gradient all-reduce, see optim/compression.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes carrying the global batch."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh():
+    """1-device mesh for smoke-scale runs on this container."""
+    return jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

@@ -1,0 +1,11 @@
+"""Model substrate: layers, attention (GQA/MLA), MoE (EP), Mamba2 SSD,
+hybrid/enc-dec assembly — all numerics-policy aware (LNS modes plug in)."""
+from .config import (EncDecConfig, HybridConfig, MLAConfig, ModelConfig,
+                     MoEConfig, SHAPE_CELLS, ShapeCell, SSMConfig)
+from .model import (Runtime, decode_step, init_decode_caches, init_params,
+                    loss_fn, prefill)
+
+__all__ = ["EncDecConfig", "HybridConfig", "MLAConfig", "ModelConfig",
+           "MoEConfig", "SHAPE_CELLS", "ShapeCell", "SSMConfig", "Runtime",
+           "decode_step", "init_decode_caches", "init_params", "loss_fn",
+           "prefill"]

@@ -1,0 +1,617 @@
+"""Model assembly: scan-over-layers transformers for all assigned families.
+
+Entry points (all pure; params created by ``init_params`` — use
+``jax.eval_shape(init_params, ...)`` for allocation-free dry-run specs):
+
+  loss_fn(params, batch, cfg, rt)           train:   mean CE (+ MoE aux)
+  prefill(params, tokens, cfg, rt)          prefill: last-pos logits + caches
+  decode_step(params, tok, caches, pos,...) decode:  next logits + caches
+
+Layer stacks are homogeneous and scanned (`jax.lax.scan`) so the HLO stays
+small at any depth; heterogeneous prefixes (MoE first-dense layer, hybrid
+tail) are unrolled in Python.  ``cfg.remat`` wraps each block in
+``jax.remat``.  Residual activations are sequence-sharded (SP) between
+blocks when a Runtime with a mesh is provided.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.numerics import get_policy
+from .attention import (KVCache, gqa_attention, gqa_decode, init_gqa,
+                        init_mla, make_cache, mla_attention, mla_decode)
+from .config import ModelConfig
+from .layers import (apply_mlp, apply_norm, chunked_ce_loss, embed_tokens,
+                     init_embeddings, init_mlp, init_norm, lm_logits)
+from .moe import MoERuntime, init_moe, moe_block
+from .ssm import (SSMCache, init_mamba2, make_ssm_cache, mamba2_decode,
+                  mamba2_forward)
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Distribution context; mesh=None → single-device reference mode."""
+    mesh: Optional[Any] = None
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    sequence_parallel: bool = True
+
+    @property
+    def moe_rt(self) -> MoERuntime:
+        return MoERuntime(self.mesh, self.data_axes, self.model_axis)
+
+    def constrain(self, x, spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def sp_spec(self):
+        return P(tuple(self.data_axes) or None,
+                 self.model_axis if self.sequence_parallel else None, None)
+
+
+# ------------------------------------------------------------- init ------
+def _init_attn(key, cfg, dtype):
+    if cfg.attn_kind == "mla":
+        return init_mla(key, cfg, dtype)
+    return init_gqa(key, cfg, dtype)
+
+
+def _init_dense_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": _init_attn(k1, cfg, dtype),
+        "mlp": init_mlp(k2, cfg, cfg.d_ff, dtype),
+        "norm1": init_norm(cfg, dtype),
+        "norm2": init_norm(cfg, dtype),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": _init_attn(k1, cfg, dtype),
+        "moe": init_moe(k2, cfg, dtype),
+        "norm1": init_norm(cfg, dtype),
+        "norm2": init_norm(cfg, dtype),
+    }
+
+
+def _init_ssm_layer(key, cfg: ModelConfig, dtype):
+    return {"mamba": init_mamba2(key, cfg, dtype), "norm1": init_norm(cfg, dtype)}
+
+
+def _init_xattn_layer(key, cfg: ModelConfig, dtype):
+    """Decoder layer with cross-attention (enc-dec family)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn": _init_attn(k1, cfg, dtype),
+        "xattn": init_gqa(k2, cfg, dtype),
+        "mlp": init_mlp(k3, cfg, cfg.d_ff, dtype),
+        "norm1": init_norm(cfg, dtype),
+        "norm2": init_norm(cfg, dtype),
+        "norm3": init_norm(cfg, dtype),
+    }
+
+
+def _stack(fn, key, n, *args):
+    return jax.vmap(lambda k: fn(k, *args))(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p: dict = {"emb": init_embeddings(keys[0], cfg, dtype),
+               "final_norm": init_norm(cfg, dtype)}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = _stack(_init_dense_layer, keys[1], cfg.layers, cfg, dtype)
+        if cfg.frontend:
+            p["frontend_proj"] = jax.random.normal(
+                keys[2], (cfg.d_model, cfg.d_model), dtype) * cfg.d_model ** -0.5
+    elif fam == "moe":
+        fd = cfg.moe.first_dense_layers
+        p["dense_layers"] = _stack(_init_dense_layer, keys[1],
+                                   max(fd, 1), cfg, dtype)
+        p["layers"] = _stack(_init_moe_layer, keys[2],
+                             max(cfg.layers - fd, 1), cfg, dtype)
+    elif fam == "ssm":
+        p["layers"] = _stack(_init_ssm_layer, keys[1], cfg.layers, cfg, dtype)
+    elif fam == "hybrid":
+        k = cfg.hybrid.attn_every
+        groups = cfg.layers // k
+        tail = cfg.layers - groups * k
+        p["layers"] = _stack(_init_ssm_layer, keys[1],
+                             max(groups * k, 1), cfg, dtype)
+        if tail:
+            p["tail_layers"] = _stack(_init_ssm_layer, keys[2], tail, cfg,
+                                      dtype)
+        p["shared_attn"] = _init_dense_layer(keys[3], cfg, dtype)
+    elif fam in ("encdec", "audio"):
+        e = cfg.encdec
+        p["enc_layers"] = _stack(_init_dense_layer, keys[1],
+                                 e.n_enc_layers, cfg, dtype)
+        p["layers"] = _stack(_init_xattn_layer, keys[2],
+                             e.n_dec_layers, cfg, dtype)
+        if cfg.frontend:
+            p["frontend_proj"] = jax.random.normal(
+                keys[3], (cfg.d_model, cfg.d_model), dtype) * cfg.d_model ** -0.5
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ----------------------------------------------------------- blocks ------
+def _attn_fwd(lp, x, cfg, pol, positions, rt=None):
+    if cfg.attn_kind == "mla":
+        return mla_attention(lp, x, cfg, pol, positions, rt)
+    return gqa_attention(lp, x, cfg, pol, positions, rt)
+
+
+def _attn_dec(lp, x, cfg, pol, cache, pos):
+    if cfg.attn_kind == "mla":
+        return mla_decode(lp, x, cfg, pol, cache, pos)
+    return gqa_decode(lp, x, cfg, pol, cache, pos)
+
+
+def _norm_sp(prm, x, cfg, rt):
+    """Norm pinned to the SP layout: without the constraint GSPMD commutes
+    the sequence all-gather above the norm and its fp32 intermediates run
+    at full S×d (2 GiB each on the 35B/76B cells — §Perf iteration 5)."""
+    return rt.constrain(apply_norm(prm, x, cfg), rt.sp_spec())
+
+
+def _dense_block(lp, x, cfg, pol, rt, positions):
+    br = (lambda t: rt.constrain(t, rt.sp_spec())) if cfg.branch_sp \
+        else (lambda t: t)
+    if cfg.block_style == "parallel":      # command-r style
+        h = _norm_sp(lp["norm1"], x, cfg, rt)
+        a, cache = _attn_fwd(lp["attn"], h, cfg, pol, positions, rt)
+        f = apply_mlp(lp["mlp"], h, cfg, pol)
+        x = x + br(a) + br(f)
+    else:
+        a, cache = _attn_fwd(lp["attn"], _norm_sp(lp["norm1"], x, cfg, rt),
+                             cfg, pol, positions, rt)
+        x = x + br(a)
+        x = x + br(apply_mlp(lp["mlp"], _norm_sp(lp["norm2"], x, cfg, rt),
+                             cfg, pol))
+    return rt.constrain(x, rt.sp_spec()), cache
+
+
+def _dense_block_decode(lp, x, cfg, pol, rt, cache, pos):
+    if cfg.block_style == "parallel":
+        h = apply_norm(lp["norm1"], x, cfg)
+        a, cache = _attn_dec(lp["attn"], h, cfg, pol, cache, pos)
+        x = x + a + apply_mlp(lp["mlp"], h, cfg, pol)
+    else:
+        a, cache = _attn_dec(lp["attn"], apply_norm(lp["norm1"], x, cfg),
+                             cfg, pol, cache, pos)
+        x = x + a
+        x = x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg),
+                          cfg, pol)
+    return x, cache
+
+
+def _moe_layer_fwd(lp, x, cfg, pol, rt, positions):
+    a, cache = _attn_fwd(lp["attn"], _norm_sp(lp["norm1"], x, cfg, rt),
+                         cfg, pol, positions, rt)
+    x = rt.constrain(x + a, rt.sp_spec())
+    y, aux = moe_block(lp["moe"], _norm_sp(lp["norm2"], x, cfg, rt), cfg, pol,
+                       rt.moe_rt if rt.mesh is not None else None)
+    return rt.constrain(x + y, rt.sp_spec()), cache, aux
+
+
+def _ssm_block(lp, x, cfg, pol, rt):
+    y, cache = mamba2_forward(lp["mamba"], _norm_sp(lp["norm1"], x, cfg, rt),
+                              cfg, pol)
+    return rt.constrain(x + y, rt.sp_spec()), cache
+
+
+def _maybe_remat(fn, cfg):
+    return jax.remat(fn) if cfg.remat == "block" else fn
+
+
+def _scan(body, init, xs, cfg: ModelConfig):
+    """lax.scan, or a Python-unrolled equivalent when cfg.scan_layers is
+    False (the roofline's 1-/2-layer lowers need unrolled bodies because
+    XLA cost analysis counts a while body once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------- forward ------
+def _embed_inputs(params, batch, cfg, pol, rt=None):
+    """tokens (+ optional stub frontend embeds) → (B, S, d), loss mask."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["emb"], tokens, pol, rt)
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = pol.linear(batch["frontend_embeds"].astype(x.dtype),
+                        params["frontend_proj"])
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def _backbone(params, x, cfg: ModelConfig, rt: Runtime, positions,
+              want_caches: bool = True):
+    """Full-sequence pass through the layer stack → (x, caches, aux).
+
+    ``want_caches=False`` (training) drops the per-layer KV/state outputs
+    inside the scan body — otherwise the stacked (L, B, S, ...) caches
+    survive through remat+grad and add O(L·B·S·kv·hd) HBM (+10-20 GiB per
+    device on the 35B/76B train cells; EXPERIMENTS.md §Perf iteration 2).
+    """
+    pol = get_policy(cfg.numerics)
+    aux_total = jnp.float32(0.0)
+    keep = (lambda c: c) if want_caches else (lambda c: None)
+    caches = {}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        blk = _maybe_remat(
+            lambda h, lp: _dense_block(lp, h, cfg, pol, rt, positions), cfg)
+
+        def body(h, lp):
+            h, cache = blk(h, lp)
+            return h, keep(cache)
+
+        x, kv = _scan(body, x, params["layers"], cfg)
+        caches["layers"] = kv
+    elif fam == "moe":
+        fd = cfg.moe.first_dense_layers
+        dense_caches = []
+        for i in range(fd):
+            lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            x, c = _maybe_remat(
+                lambda h, q: _dense_block(q, h, cfg, pol, rt, positions),
+                cfg)(x, lp)
+            dense_caches.append(c)
+        blk = _maybe_remat(
+            lambda h, lp: _moe_layer_fwd(lp, h, cfg, pol, rt, positions), cfg)
+
+        def body(h, lp):
+            h, cache, aux = blk(h, lp)
+            return h, (keep(cache), aux)
+
+        x, (kv, auxs) = _scan(body, x, params["layers"], cfg)
+        caches["layers"] = kv
+        if dense_caches and want_caches:
+            caches["dense_layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *dense_caches)
+        aux_total = aux_total + jnp.sum(auxs)
+    elif fam == "ssm":
+        blk = _maybe_remat(lambda h, lp: _ssm_block(lp, h, cfg, pol, rt), cfg)
+
+        def body(h, lp):
+            h, cache = blk(h, lp)
+            return h, keep(cache)
+
+        x, ssm = _scan(body, x, params["layers"], cfg)
+        caches["layers"] = ssm
+    elif fam == "hybrid":
+        k = cfg.hybrid.attn_every
+        groups = cfg.layers // k
+        gp = jax.tree.map(
+            lambda a: a[:groups * k].reshape((groups, k) + a.shape[1:]),
+            params["layers"])
+        ssm_blk = _maybe_remat(
+            lambda h, lp: _ssm_block(lp, h, cfg, pol, rt), cfg)
+        attn_blk = _maybe_remat(
+            lambda h, lp: _dense_block(lp, h, cfg, pol, rt, positions), cfg)
+
+        def group_body(h, glp):
+            def inner(hh, lp):
+                hh, c = ssm_blk(hh, lp)
+                return hh, keep(c)
+            h, ssm_c = _scan(inner, h, glp, cfg)
+            h, attn_c = attn_blk(h, params["shared_attn"])
+            return h, (ssm_c, keep(attn_c))
+
+        x, (ssm_c, attn_c) = _scan(group_body, x, gp, cfg)
+        caches["layers"] = ssm_c
+        caches["shared_attn"] = attn_c
+        if "tail_layers" in params:
+            def tail_body(h, lp):
+                h2, c = ssm_blk(h, lp)
+                return h2, keep(c)
+            x, tail_c = _scan(tail_body, x, params["tail_layers"], cfg)
+            caches["tail_layers"] = tail_c
+    else:
+        raise ValueError(fam)
+    return x, caches, aux_total
+
+
+def _encoder(params, enc_in, cfg, rt):
+    pol = get_policy(cfg.numerics)
+    enc_cfg = cfg.with_(causal=False)
+    positions = jnp.broadcast_to(
+        jnp.arange(enc_in.shape[1])[None], enc_in.shape[:2])
+    blk = _maybe_remat(
+        lambda h, lp: _dense_block(lp, h, enc_cfg, pol, rt, positions)[0],
+        cfg)
+
+    def body(h, lp):
+        return blk(h, lp), None
+
+    x, _ = _scan(body, enc_in, params["enc_layers"], cfg)
+    return x
+
+
+def _decoder(params, x, enc_out, cfg, rt, positions,
+             want_caches: bool = True):
+    """Enc-dec decoder stack: self-attn + cross-attn + MLP per layer."""
+    pol = get_policy(cfg.numerics)
+    keep = (lambda c: c) if want_caches else (lambda c: None)
+
+    def block(h, lp):
+        a, cache = _attn_fwd(lp["attn"], _norm_sp(lp["norm1"], h, cfg, rt),
+                             cfg, pol, positions, rt)
+        h = h + a
+        q = _norm_sp(lp["norm2"], h, cfg, rt)
+        xa, xcache = _cross_attention(lp["xattn"], q, enc_out, cfg, pol, rt)
+        h = h + xa
+        h = h + apply_mlp(lp["mlp"], _norm_sp(lp["norm3"], h, cfg, rt),
+                          cfg, pol)
+        return rt.constrain(h, rt.sp_spec()), keep((cache, xcache))
+
+    blk = _maybe_remat(block, cfg)
+
+    def body(h, lp):
+        return blk(h, lp)
+
+    x, caches = _scan(body, x, params["layers"], cfg)
+    return x, caches
+
+
+def _cross_attention(lp, q_in, enc_out, cfg, pol, rt=None):
+    """Non-causal attention of decoder queries over encoder memory,
+    query-chunked (banded, 1 band) so scores never materialize (S, T)."""
+    from .attention import _banded_causal, _head_sharded
+    b, s, _ = q_in.shape
+    t = enc_out.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = pol.linear(q_in, lp["wq"]).reshape(b, s, h, hd)
+    k = pol.linear(enc_out, lp["wk"]).reshape(b, t, kv, hd)
+    v = pol.linear(enc_out, lp["wv"]).reshape(b, t, kv, hd)
+    kr = jnp.repeat(k, h // kv, axis=2)
+    vr = jnp.repeat(v, h // kv, axis=2)
+    q = _head_sharded(q, rt)
+    kr = _head_sharded(kr, rt)
+    vr = _head_sharded(vr, rt)
+    qg = q.reshape(b, s, h, 1, hd)
+    o = _banded_causal(qg, kr, vr, hd ** -0.5, cfg.with_(causal=False))
+    o = o.reshape(b, s, h * hd)
+    return pol.linear(o, lp["wo"]), KVCache(k, v)
+
+
+# ------------------------------------------------------------- API -------
+def loss_fn(params, batch, cfg: ModelConfig, rt: Runtime = Runtime()):
+    """Mean next-token CE (+0.01·MoE aux).  batch: tokens, labels[, embeds]."""
+    pol = get_policy(cfg.numerics)
+    if cfg.family in ("encdec", "audio"):
+        enc_in = pol.linear(batch["frontend_embeds"].astype(pol.dtype),
+                            params["frontend_proj"]) \
+            if cfg.frontend else embed_tokens(params["emb"],
+                                              batch["enc_tokens"], pol, rt)
+        enc_out = _encoder(params, rt.constrain(enc_in, rt.sp_spec()),
+                           cfg, rt)
+        x = embed_tokens(params["emb"], batch["tokens"], pol, rt)
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], x.shape[:2])
+        x, _ = _decoder(params, x, enc_out, cfg, rt, positions,
+                        want_caches=False)
+        aux = jnp.float32(0.0)
+    else:
+        x = _embed_inputs(params, batch, cfg, pol, rt)
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], x.shape[:2])
+        x, _, aux = _backbone(params, x, cfg, rt, positions,
+                              want_caches=False)
+    x = apply_norm(params["final_norm"], x, cfg)
+    labels = batch["labels"]
+    if x.shape[1] != labels.shape[1]:  # frontend prefix carries no loss
+        x = x[:, x.shape[1] - labels.shape[1]:]
+    loss = chunked_ce_loss(x, params["emb"], labels, pol, cfg,
+                           rt=rt)
+    return loss + 0.01 * aux
+
+
+def prefill(params, batch, cfg: ModelConfig, rt: Runtime = Runtime()):
+    """Run the full prompt; return last-position logits + caches."""
+    pol = get_policy(cfg.numerics)
+    if cfg.family in ("encdec", "audio"):
+        enc_in = pol.linear(batch["frontend_embeds"].astype(pol.dtype),
+                            params["frontend_proj"]) \
+            if cfg.frontend else embed_tokens(params["emb"],
+                                              batch["enc_tokens"], pol, rt)
+        enc_out = _encoder(params, enc_in, cfg, rt)
+        x = embed_tokens(params["emb"], batch["tokens"], pol, rt)
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], x.shape[:2])
+        x, caches = _decoder(params, x, enc_out, cfg, rt, positions)
+        caches = {"layers": caches, "enc_out": enc_out}
+    else:
+        x = _embed_inputs(params, batch, cfg, pol, rt)
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], x.shape[:2])
+        x, caches, _ = _backbone(params, x, cfg, rt, positions)
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    return lm_logits(params["emb"], x, pol, cfg), caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16, enc_len: int | None = None):
+    """Empty fixed-capacity caches for decode (eval_shape-friendly)."""
+    fam = cfg.family
+
+    def stack_kv(n):
+        one = make_cache(cfg, batch, max_len, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                            one)
+
+    def stack_ssm(n):
+        one = make_ssm_cache(cfg, batch, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                            one)
+
+    if fam in ("dense", "vlm"):
+        return {"layers": stack_kv(cfg.layers)}
+    if fam == "moe":
+        fd = cfg.moe.first_dense_layers
+        return {"dense_layers": stack_kv(max(fd, 1)),
+                "layers": stack_kv(max(cfg.layers - fd, 1))}
+    if fam == "ssm":
+        return {"layers": stack_ssm(cfg.layers)}
+    if fam == "hybrid":
+        k = cfg.hybrid.attn_every
+        groups = cfg.layers // k
+        tail = cfg.layers - groups * k
+        out = {"layers": stack_ssm(groups * k),
+               "shared_attn": stack_kv(groups)}
+        if tail:
+            out["tail_layers"] = stack_ssm(tail)
+        return out
+    if fam in ("encdec", "audio"):
+        e = cfg.encdec
+        enc_len = enc_len or max_len
+        xkv = make_cache(cfg.with_(attn_kind="gqa"), batch, enc_len, dtype)
+        return {
+            "layers": (stack_kv(e.n_dec_layers),
+                       jax.tree.map(
+                           lambda a: jnp.broadcast_to(
+                               a, (e.n_dec_layers,) + a.shape), xkv)),
+            "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(params, tok, caches, pos, cfg: ModelConfig,
+                rt: Runtime = Runtime()):
+    """One token for every sequence in the batch.
+
+    tok: (B, 1) int32; pos: (B,) int32 current positions.
+    Returns (logits (B, 1, V), new caches).
+    """
+    pol = get_policy(cfg.numerics)
+    x = embed_tokens(params["emb"], tok, pol, rt)
+    fam = cfg.family
+    new_caches = dict(caches)
+    if fam in ("dense", "vlm", "moe"):
+        def scan_dense(x, stack, cache, prefix):
+            def body(carry, inp):
+                h = carry
+                lp, c = inp
+                h, c2 = _dense_block_decode(lp, h, cfg, pol, rt, c, pos)
+                return h, c2
+            x, kv = _scan(body, x, (stack, cache), cfg)
+            return x, kv
+
+        if fam == "moe":
+            x, kv_d = scan_dense(x, params["dense_layers"],
+                                 caches["dense_layers"], "dense")
+            new_caches["dense_layers"] = kv_d
+
+            def body(carry, inp):
+                h = carry
+                lp, c = inp
+                a, c2 = _attn_dec(lp["attn"],
+                                  apply_norm(lp["norm1"], h, cfg), cfg, pol,
+                                  c, pos)
+                h = h + a
+                y, _ = moe_block(lp["moe"], apply_norm(lp["norm2"], h, cfg),
+                                 cfg, pol,
+                                 rt.moe_rt if rt.mesh is not None else None)
+                return h + y, c2
+
+            x, kv = _scan(body, x, (params["layers"],
+                                           caches["layers"]), cfg)
+            new_caches["layers"] = kv
+        else:
+            x, kv = scan_dense(x, params["layers"], caches["layers"], "")
+            new_caches["layers"] = kv
+    elif fam == "ssm":
+        def body(h, inp):
+            lp, c = inp
+            y, c2 = mamba2_decode(lp["mamba"],
+                                  apply_norm(lp["norm1"], h, cfg), cfg, pol,
+                                  c)
+            return h + y, c2
+
+        x, ssm = _scan(body, x, (params["layers"], caches["layers"]), cfg)
+        new_caches["layers"] = ssm
+    elif fam == "hybrid":
+        k = cfg.hybrid.attn_every
+        groups = cfg.layers // k
+        gp = jax.tree.map(
+            lambda a: a[:groups * k].reshape((groups, k) + a.shape[1:]),
+            params["layers"])
+        gc = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]),
+            caches["layers"])
+
+        def group_body(h, inp):
+            glp, gcache, attn_c = inp
+
+            def inner(hh, iinp):
+                lp, c = iinp
+                y, c2 = mamba2_decode(lp["mamba"],
+                                      apply_norm(lp["norm1"], hh, cfg), cfg,
+                                      pol, c)
+                return hh + y, c2
+
+            h, ssm_c = _scan(inner, h, (glp, gcache), cfg)
+            h, attn_c2 = _dense_block_decode(params["shared_attn"], h, cfg,
+                                             pol, rt, attn_c, pos)
+            return h, (ssm_c, attn_c2)
+
+        x, (ssm_c, attn_c) = _scan(
+            group_body, x, (gp, gc, caches["shared_attn"]), cfg)
+        new_caches["layers"] = jax.tree.map(
+            lambda a: a.reshape((groups * k,) + a.shape[2:]), ssm_c)
+        new_caches["shared_attn"] = attn_c
+        if "tail_layers" in params:
+            def tail(h, inp):
+                lp, c = inp
+                y, c2 = mamba2_decode(lp["mamba"],
+                                      apply_norm(lp["norm1"], h, cfg), cfg,
+                                      pol, c)
+                return h + y, c2
+            x, tail_c = _scan(tail, x, (params["tail_layers"],
+                                               caches["tail_layers"]), cfg)
+            new_caches["tail_layers"] = tail_c
+    elif fam in ("encdec", "audio"):
+        enc_out = caches["enc_out"]
+
+        def body(h, inp):
+            lp, (c_self, c_cross) = inp
+            a, c2 = _attn_dec(lp["attn"], apply_norm(lp["norm1"], h, cfg),
+                              cfg, pol, c_self, pos)
+            h = h + a
+            q = apply_norm(lp["norm2"], h, cfg)
+            xa, _ = _cross_attention(lp["xattn"], q, enc_out, cfg, pol, rt)
+            h = h + xa
+            h = h + apply_mlp(lp["mlp"], apply_norm(lp["norm3"], h, cfg),
+                              cfg, pol)
+            return h, (c2, c_cross)
+
+        x, kv = _scan(body, x, (params["layers"], caches["layers"]), cfg)
+        new_caches["layers"] = kv
+    else:
+        raise ValueError(fam)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params["emb"], x, pol, cfg), new_caches

@@ -1,0 +1,262 @@
+"""Mixture-of-Experts FFN: shared + fine-grained routed experts (DeepSeek).
+
+Two interchangeable implementations:
+
+* ``reference`` — dropless masked einsum over all experts.  O(N·E·d_ff):
+  exact, used for smoke tests / correctness oracles at tiny scale.
+* ``ep`` (production) — expert parallelism under ``jax.shard_map``:
+  activations enter **sequence-sharded over the model axis** (SP) and
+  batch-sharded over the data axes, so every device owns a distinct token
+  slice; local fp32 top-k routing → capacity-bounded **all-to-all** over
+  ``model`` (experts live E/tp per device) → local sort-based dispatch →
+  batched expert GEMMs → reverse all-to-all → weighted scatter-add combine.
+  The collectives are explicit in the HLO, which is what the roofline reads.
+
+Router runs in fp32; top-k weights renormalized (DeepSeek convention).
+A Switch-style load-balance aux loss is returned alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.numerics import NumericsPolicy
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MoERuntime:
+    """How to execute the MoE block (None mesh → reference impl)."""
+    mesh: Optional[object] = None
+    data_axes: tuple = ("data",)   # batch axes (may include 'pod')
+    model_axis: str = "model"
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, de = cfg.d_model, m.d_expert
+    ks = jax.random.split(key, 7)
+    s_in, s_out = d ** -0.5, de ** -0.5
+    p = {
+        "router": d ** -0.5 * jax.random.normal(
+            ks[0], (d, m.n_experts), jnp.float32),
+        "w_gate": s_in * jax.random.normal(ks[1], (m.n_experts, d, de), dtype),
+        "w_up": s_in * jax.random.normal(ks[2], (m.n_experts, d, de), dtype),
+        "w_down": s_out * jax.random.normal(
+            ks[3], (m.n_experts, de, d), dtype),
+    }
+    if m.n_shared:
+        sh = m.n_shared * de
+        p["shared_gate"] = s_in * jax.random.normal(ks[4], (d, sh), dtype)
+        p["shared_up"] = s_in * jax.random.normal(ks[5], (d, sh), dtype)
+        p["shared_down"] = (sh ** -0.5) * jax.random.normal(
+            ks[6], (sh, d), dtype)
+    return p
+
+
+def _router(p, xf, m):
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style)
+    frac = jnp.mean(jax.nn.one_hot(ids[..., 0], m.n_experts), axis=0)
+    aux = m.n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return w, ids, aux
+
+
+def _shared_ffn(p, x, cfg, pol):
+    h = jax.nn.silu(pol.linear(x, p["shared_gate"])) \
+        * pol.linear(x, p["shared_up"])
+    return pol.linear(h, p["shared_down"])
+
+
+def _expert_ffn(w_gate, w_up, w_down, xe, pol):
+    """xe: (E, C, d) → (E, C, d) batched over experts."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", pol.q_act(xe),
+                               pol.q_param(w_gate)))
+    u = jnp.einsum("ecd,edf->ecf", pol.q_act(xe), pol.q_param(w_up))
+    return jnp.einsum("ecf,efd->ecd", pol.q_act(g * u), pol.q_param(w_down))
+
+
+def _bucket_positions(keys, n_buckets):
+    """Stable-sort ``keys`` and return (order, key_sorted, pos_in_bucket)."""
+    order = jnp.argsort(keys, stable=True)
+    ks = keys[order]
+    oh = jax.nn.one_hot(jnp.clip(ks, 0, n_buckets - 1), n_buckets,
+                        dtype=jnp.int32)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(oh, axis=0), jnp.clip(ks, 0, n_buckets - 1)[:, None],
+        axis=1)[:, 0] - 1
+    return order, ks, pos
+
+
+# ------------------------------------------------------- reference -------
+def moe_reference(p, x, cfg: ModelConfig, pol: NumericsPolicy):
+    """Dropless masked computation over all experts (tiny scale only)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    w, ids, aux = _router(p, xf, m)
+    comb = jnp.zeros((xf.shape[0], m.n_experts), x.dtype)
+    comb = comb.at[jnp.arange(xf.shape[0])[:, None], ids].set(
+        w.astype(x.dtype))
+    h = jax.nn.silu(jnp.einsum("nd,edf->enf", pol.q_act(xf),
+                               pol.q_param(p["w_gate"])))
+    h = h * jnp.einsum("nd,edf->enf", pol.q_act(xf), pol.q_param(p["w_up"]))
+    y = jnp.einsum("enf,efd->end", pol.q_act(h), pol.q_param(p["w_down"]))
+    out = jnp.einsum("end,ne->nd", y, comb)
+    if m.n_shared:
+        out = out + _shared_ffn(p, xf, cfg, pol)
+    return out.reshape(b, s, d), aux
+
+
+# ------------------------------------------------- expert parallel -------
+def moe_ep(p, x, cfg: ModelConfig, pol: NumericsPolicy, rt: MoERuntime):
+    """Expert-parallel MoE via shard_map + all-to-all over the model axis.
+
+    ``x`` must be laid out (batch → data axes, sequence → model axis, d).
+    Expert weights are sharded E/tp over the model axis.
+    """
+    m = cfg.moe
+    mesh = rt.mesh
+    tp = mesh.shape[rt.model_axis]
+    assert m.n_experts % tp == 0, (m.n_experts, tp)
+    e_loc = m.n_experts // tp
+    all_axes = tuple(rt.data_axes) + (rt.model_axis,)
+    x_spec = P(tuple(rt.data_axes) or None, rt.model_axis, None)
+
+    def local_fn(p_loc, x_loc):
+        b, s, d = x_loc.shape
+        xf = x_loc.reshape(-1, d)
+        n = xf.shape[0]
+        w, ids, aux = _router(p_loc, xf, m)
+        aux = jax.lax.pmean(aux, all_axes)
+        nk = n * m.top_k
+        cap_send = int(-(-nk // tp) * m.capacity_factor)
+        flat_ids = ids.reshape(-1)
+        tok = jnp.repeat(jnp.arange(n), m.top_k)
+        wgt = w.reshape(-1)
+        dest = flat_ids // e_loc
+        order, _, pos = _bucket_positions(dest, tp)
+        keep = pos < cap_send
+        slot = jnp.where(keep, dest[order] * cap_send + pos, tp * cap_send)
+        # scatter into send buffers (+1 overflow row, dropped)
+        send_x = jnp.zeros((tp * cap_send + 1, d), x_loc.dtype)
+        send_x = send_x.at[slot].set(xf[tok[order]], mode="drop")
+        send_e = jnp.full((tp * cap_send + 1,), -1, jnp.int32)
+        send_e = send_e.at[slot].set(flat_ids[order], mode="drop")
+
+        recv_x = jax.lax.all_to_all(
+            send_x[:-1].reshape(tp, cap_send, d), rt.model_axis, 0, 0)
+        recv_e = jax.lax.all_to_all(
+            send_e[:-1].reshape(tp, cap_send), rt.model_axis, 0, 0)
+        recv_x = recv_x.reshape(tp * cap_send, d)
+        shard = jax.lax.axis_index(rt.model_axis)
+        el = jnp.where(recv_e.reshape(-1) >= 0,
+                       recv_e.reshape(-1) - shard * e_loc, e_loc)
+
+        # local per-expert bucketing (invalid rows bucket to e_loc, dropped)
+        cap_e = int(-(-tp * cap_send // e_loc) * m.capacity_factor)
+        order2, el_s, pos2 = _bucket_positions(el, e_loc + 1)
+        ok2 = (el_s < e_loc) & (pos2 < cap_e)
+        slot2 = jnp.where(ok2, el_s * cap_e + pos2, e_loc * cap_e)
+        xe = jnp.zeros((e_loc * cap_e + 1, d), x_loc.dtype)
+        xe = xe.at[slot2].set(recv_x[order2], mode="drop")
+        ye = _expert_ffn(p_loc["w_gate"], p_loc["w_up"], p_loc["w_down"],
+                         xe[:-1].reshape(e_loc, cap_e, d), pol)
+        ye = ye.reshape(-1, d)
+        # back to recv order → reverse all-to-all → weighted combine
+        y_recv = jnp.zeros((tp * cap_send, d), x_loc.dtype)
+        y_recv = y_recv.at[order2].set(
+            jnp.where(ok2[:, None],
+                      ye[jnp.clip(slot2, 0, e_loc * cap_e - 1)], 0.0))
+        y_back = jax.lax.all_to_all(
+            y_recv.reshape(tp, cap_send, d), rt.model_axis, 0, 0)
+        y_flat = y_back.reshape(tp * cap_send, d)
+        got = jnp.where(keep[:, None],
+                        y_flat[jnp.clip(slot, 0, tp * cap_send - 1)], 0.0)
+        out = jnp.zeros_like(xf)
+        out = out.at[tok[order]].add(got * wgt[order][:, None]
+                                     .astype(x_loc.dtype))
+        if m.n_shared:
+            out = out + _shared_ffn(p_loc, xf, cfg, pol)
+        return out.reshape(b, s, d), aux
+
+    pspec = {k: P() for k in p}
+    for kname in ("w_gate", "w_up", "w_down"):
+        pspec[kname] = P(rt.model_axis, None, None)
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(pspec, x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    return fn(p, x)
+
+
+def moe_ep_replicated(p, x, cfg: ModelConfig, pol: NumericsPolicy,
+                      rt: MoERuntime):
+    """EP without all-to-all, for token counts too small to sequence-shard
+    (decode: seq=1).  Tokens are replicated over the model axis; each shard
+    filters the assignments that target its local experts, computes, and
+    the routed outputs are psum-combined.  Shared experts are computed
+    redundantly (replicated) and added outside the psum.
+    """
+    m = cfg.moe
+    mesh = rt.mesh
+    tp = mesh.shape[rt.model_axis]
+    e_loc = m.n_experts // tp
+    x_spec = P(tuple(rt.data_axes) or None, None, None)
+    all_axes = tuple(rt.data_axes) + (rt.model_axis,)
+
+    def local_fn(p_loc, x_loc):
+        b, s, d = x_loc.shape
+        xf = x_loc.reshape(-1, d)
+        n = xf.shape[0]
+        w, ids, aux = _router(p_loc, xf, m)
+        aux = jax.lax.pmean(aux, all_axes)
+        shard = jax.lax.axis_index(rt.model_axis)
+        el = ids - shard * e_loc                        # (n, k) local ids
+        mine = (el >= 0) & (el < e_loc)
+        flat_el = jnp.where(mine, el, e_loc).reshape(-1)
+        tok = jnp.repeat(jnp.arange(n), m.top_k)
+        wgt = (w * mine).reshape(-1)
+        cap = int(-(-n * m.top_k // tp) * m.capacity_factor)
+        order, el_s, pos = _bucket_positions(flat_el, e_loc + 1)
+        ok = (el_s < e_loc) & (pos < cap)
+        slot = jnp.where(ok, el_s * cap + pos, e_loc * cap)
+        xe = jnp.zeros((e_loc * cap + 1, d), x_loc.dtype)
+        xe = xe.at[slot].set(xf[tok[order]], mode="drop")
+        ye = _expert_ffn(p_loc["w_gate"], p_loc["w_up"], p_loc["w_down"],
+                         xe[:-1].reshape(e_loc, cap, d), pol).reshape(-1, d)
+        got = jnp.where(ok[:, None],
+                        ye[jnp.clip(slot, 0, e_loc * cap - 1)], 0.0)
+        out = jnp.zeros_like(xf)
+        out = out.at[tok[order]].add(
+            got * wgt[order][:, None].astype(x_loc.dtype))
+        out = jax.lax.psum(out, rt.model_axis)
+        if m.n_shared:
+            out = out + _shared_ffn(p_loc, xf, cfg, pol)
+        return out.reshape(b, s, d), aux
+
+    pspec = {k: P() for k in p}
+    for kname in ("w_gate", "w_up", "w_down"):
+        pspec[kname] = P(rt.model_axis, None, None)
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(pspec, x_spec),
+                       out_specs=(x_spec, P()), check_vma=False)
+    return fn(p, x)
+
+
+def moe_block(p, x, cfg: ModelConfig, pol: NumericsPolicy,
+              rt: Optional[MoERuntime] = None):
+    if rt is None or rt.mesh is None:
+        return moe_reference(p, x, cfg, pol)
+    tp = rt.mesh.shape[rt.model_axis]
+    if x.shape[1] % tp != 0:     # decode / tiny sequences
+        return moe_ep_replicated(p, x, cfg, pol, rt)
+    return moe_ep(p, x, cfg, pol, rt)

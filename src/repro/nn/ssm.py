@@ -1,0 +1,187 @@
+"""Mamba2 (state-space duality) block — chunked SSD scan + decode step.
+
+Follows Dao & Gu 2024 [arXiv:2405.21060]: per-head scalar A, grouped B/C
+projections, short causal depthwise conv, gated RMSNorm output.  The SSD
+scan splits the sequence into chunks: quadratic attention-like compute
+within a chunk (MXU-friendly matmuls) + a linear inter-chunk state scan —
+this is the TPU-native formulation (no per-step recurrences of length S).
+
+Decode keeps (conv_state, ssd_state) per layer: O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.numerics import NumericsPolicy
+from .config import ModelConfig
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, d_in + 2·G·N)
+    state: jax.Array  # (B, H, P, N)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": d ** -0.5 * jax.random.normal(
+            ks[0], (d, 2 * d_in + 2 * s.n_groups * s.d_state + nh), dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (s.d_conv, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": d_in ** -0.5 * jax.random.normal(ks[3], (d_in, d), dtype),
+    }
+
+
+def _split_proj(p, x, cfg, pol):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    zxbcdt = pol.linear(x, p["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xbc, dt
+
+
+def _conv_full(p, xbc):
+    """Causal depthwise conv over (B, S, C) with kernel (K, C)."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :]
+              * p["conv_w"][i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _gated_out(p, y, z, cfg, pol):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    nrm = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+    y = (nrm * p["norm"].astype(jnp.float32)).astype(y.dtype)
+    return pol.linear(y, p["out_proj"])
+
+
+def _ssd_chunked(xh, dt_a, dtx_scale, bmat, cmat, chunk):
+    """Chunked SSD core.
+
+    xh: (B,S,H,P) inputs; dt_a: (B,S,H) = Δt·A (decay log); dtx_scale:
+    (B,S,H) = Δt (input scale); bmat/cmat: (B,S,H,N) per-head B/C rows.
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    xc = xh.reshape(b, nc, q, h, p)
+    ac = dt_a.reshape(b, nc, q, h)
+    dtc = dtx_scale.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, h, n)
+    cc = cmat.reshape(b, nc, q, h, n)
+
+    a_cs = jnp.cumsum(ac, axis=2)                      # (B,nc,Q,H)
+    # intra-chunk: L[i,j] = exp(a_cs_i - a_cs_j), i >= j.  The i<j entries
+    # have positive exponents (a_cs is decreasing): zero them *inside* the
+    # exp argument too, or their overflow poisons gradients through where.
+    li = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    lmat = jnp.where(causal, jnp.exp(jnp.where(causal, li, 0.0)), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp",
+                         (cb * lmat).astype(xh.dtype),
+                         dtc.astype(xh.dtype), xc)
+    # chunk states: sum_j exp(a_cs_last - a_cs_j) dt_j x_j ⊗ B_j
+    decay_tail = jnp.exp(a_cs[:, :, -1:, :] - a_cs)    # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjh,bcjhp,bcjhn->bchpn",
+                        decay_tail.astype(xh.dtype), dtc.astype(xh.dtype),
+                        xc, bc)
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])           # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp
+        hnew = hprev * dec[..., None, None].astype(hprev.dtype) + st
+        return hnew, hprev
+
+    init = jnp.zeros((b, h, p, n), xh.dtype)
+    final, h_prevs = jax.lax.scan(
+        scan_fn, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                   # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp",
+                         (cc * jnp.exp(a_cs)[..., None].astype(cc.dtype)),
+                         h_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, pol: NumericsPolicy
+                   ) -> tuple[jax.Array, SSMCache]:
+    """Full-sequence Mamba2 block (train / prefill)."""
+    s_cfg, d_in, nh, conv_dim = _dims(cfg)
+    b, s, _ = x.shape
+    g, n, hd = s_cfg.n_groups, s_cfg.d_state, s_cfg.head_dim
+    z, xbc_raw, dt = _split_proj(p, x, cfg, pol)
+    xbc = _conv_full(p, xbc_raw)
+    xh = xbc[..., :d_in].reshape(b, s, nh, hd)
+    bmat = xbc[..., d_in:d_in + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., d_in + g * n:].reshape(b, s, g, n)
+    rep = nh // g
+    bmat = jnp.repeat(bmat, rep, axis=2)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final = _ssd_chunked(xh, dt * a[None, None, :], dt, bmat, cmat,
+                            s_cfg.chunk)
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    conv_tail = xbc_raw[:, -(s_cfg.d_conv - 1):, :]
+    return _gated_out(p, y, z, cfg, pol), SSMCache(conv_tail, final)
+
+
+def mamba2_decode(p, x, cfg: ModelConfig, pol: NumericsPolicy,
+                  cache: SSMCache) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrent step: h ← exp(ΔtA)·h + Δt·x⊗B; y = C·h + D·x."""
+    s_cfg, d_in, nh, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    g, n, hd = s_cfg.n_groups, s_cfg.d_state, s_cfg.head_dim
+    z, xbc_raw, dt = _split_proj(p, x, cfg, pol)       # (B,1,·)
+    window = jnp.concatenate([cache.conv, xbc_raw], axis=1)  # (B,K,C)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv)                            # (B,C)
+    xh = xbc[..., :d_in].reshape(b, nh, hd)
+    bvec = xbc[..., d_in:d_in + g * n].reshape(b, g, n)
+    cvec = xbc[..., d_in + g * n:].reshape(b, g, n)
+    rep = nh // g
+    bvec = jnp.repeat(bvec, rep, axis=1)
+    cvec = jnp.repeat(cvec, rep, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :]).astype(x.dtype)           # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt.astype(x.dtype), xh, bvec)
+    state = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, cvec)
+    y = y + xh * p["D"].astype(xh.dtype)[None, :, None]
+    y = y.reshape(b, 1, d_in)
+    out = _gated_out(p, y, z[:, :1], cfg, pol)
+    return out, SSMCache(window[:, 1:], state)
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    s_cfg, d_in, nh, conv_dim = _dims(cfg)
+    return SSMCache(
+        jnp.zeros((batch, s_cfg.d_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, nh, s_cfg.head_dim, s_cfg.d_state), dtype))

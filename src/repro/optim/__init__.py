@@ -1,0 +1,10 @@
+"""Optimizers (sharding-preserving pytree transforms) + gradient tools."""
+from .optimizers import (AdamWConfig, OptimizerConfig, SGDConfig, adamw_init,
+                         adamw_update, make_optimizer, sgd_init, sgd_update)
+from .compression import (compress_int8_log, decompress_int8_log,
+                          fake_compress_roundtrip)
+
+__all__ = ["AdamWConfig", "OptimizerConfig", "SGDConfig", "adamw_init",
+           "adamw_update", "make_optimizer", "sgd_init", "sgd_update",
+           "compress_int8_log", "decompress_int8_log",
+           "fake_compress_roundtrip"]

@@ -1,0 +1,8 @@
+"""Faithful reproduction of the paper's experiments (MLP, Sec. 4-5)."""
+from .datasets import PRESETS, load, synthetic, train_val_split
+from .mlp import ALPHA, HIDDEN, MLPConfig, make_mlp
+from .training import RunResult, evaluate, run_experiment
+
+__all__ = ["PRESETS", "load", "synthetic", "train_val_split", "ALPHA",
+           "HIDDEN", "MLPConfig", "make_mlp", "RunResult", "evaluate",
+           "run_experiment"]

@@ -1,0 +1,267 @@
+"""The paper's MLP (784–100–K) in three arithmetic backends (Sec. 4/5).
+
+* ``float`` — fp32 linear-domain reference.
+* ``fxp``   — linear-domain fixed point (12/16-bit), hand backprop.
+* ``lns``   — end-to-end log-domain fixed point (12/16-bit, LUT or
+              bit-shift Δ), hand backprop: every forward/backward/update
+              quantity is an LNS code; no float enters the training path
+              (the CE loss value is a monitoring readout only).
+
+Backprop follows eq. (10)-(14): δ2 = P ⊟ Y, gW2 = a1ᵀ ⊡⊞ δ2, δ1 =
+(δ2 ⊡⊞ W2ᵀ) ⊡ llReLU'(z1), gW1 = xᵀ ⊡⊞ δ1, SGD per core/sgd.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
+                    DELTA_SOFTMAX, FXP12, FXP16, LNS12, LNS16, DeltaEngine,
+                    DeltaSpec, LNSArray, LogSGDConfig, apply_update,
+                    beta_code, boxabs_max, boxdot, boxsum, ce_grad_init,
+                    ce_loss_readout, decode, encode, he_sigma, llrelu,
+                    llrelu_grad, lns_affine, lns_matmul, log_normal_init,
+                    log_softmax_lns, scalar, zeros)
+from ..core.linear_fixed import (fxp_affine, fxp_decode, fxp_encode,
+                                 fxp_leaky_relu, fxp_leaky_relu_grad,
+                                 fxp_matmul, fxp_mul, fxp_sat)
+
+HIDDEN = 100
+ALPHA = 0.01  # leaky-ReLU slope [20]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    n_in: int = 784
+    n_hidden: int = HIDDEN
+    n_out: int = 10
+    lr: float = 0.01
+    weight_decay: float = 0.0
+    bits: int = 16                 # 12 or 16
+    approx: str = "lut"            # 'lut' | 'bitshift' | 'exact' (lns only)
+    stochastic_round: bool = False  # fxp only: SR on the weight update
+                                    # (Gupta et al. 2015; beyond-paper)
+
+    @property
+    def lns_fmt(self):
+        return LNS16 if self.bits == 16 else LNS12
+
+    @property
+    def fxp_fmt(self):
+        return FXP16 if self.bits == 16 else FXP12
+
+    @property
+    def delta_spec(self) -> DeltaSpec:
+        return {"lut": DELTA_DEFAULT, "bitshift": DELTA_BITSHIFT,
+                "exact": DELTA_EXACT}[self.approx]
+
+    @property
+    def softmax_spec(self) -> DeltaSpec:
+        # Paper: softmax is approximation-sensitive → r = 1/64 table,
+        # also when the rest of the net uses bit-shifts.
+        return DELTA_EXACT if self.approx == "exact" else DELTA_SOFTMAX
+
+
+# ---------------------------------------------------------------- float --
+class FloatMLP:
+    def __init__(self, cfg: MLPConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        c = self.cfg
+        return dict(
+            w1=he_sigma(c.n_in) * jax.random.normal(k1, (c.n_in, c.n_hidden)),
+            b1=jnp.zeros((c.n_hidden,)),
+            w2=he_sigma(c.n_hidden)
+            * jax.random.normal(k2, (c.n_hidden, c.n_out)),
+            b2=jnp.zeros((c.n_out,)),
+        )
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step(self, params, xb, yb):
+        c = self.cfg
+
+        def loss_fn(p):
+            z1 = xb @ p["w1"] + p["b1"]
+            a1 = jnp.where(z1 > 0, z1, ALPHA * z1)
+            z2 = a1 @ p["w2"] + p["b2"]
+            lp = jax.nn.log_softmax(z2)
+            # Sum-reduction over the minibatch (see module docstring):
+            # gradients are per-sample outer products accumulated by the
+            # MAC array — no 1/B rescale, which would underflow the
+            # linear fixed-point resolution at lr=0.01.
+            nll = -jnp.take_along_axis(lp, yb[:, None], axis=1).sum()
+            return nll
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree.map(
+            lambda w, gw: w - c.lr * (gw + c.weight_decay * w), params, g)
+        return params, loss
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def predict(self, params, xb):
+        z1 = xb @ params["w1"] + params["b1"]
+        a1 = jnp.where(z1 > 0, z1, ALPHA * z1)
+        return jnp.argmax(a1 @ params["w2"] + params["b2"], axis=-1)
+
+
+# ------------------------------------------------------------------ fxp --
+class FxpMLP:
+    """Linear-domain fixed point; the paper's Table-1 baseline.
+
+    The softmax/CE-gradient is evaluated at float precision on decoded
+    logits and re-encoded (a fine exp-LUT in hardware); the paper found the
+    softmax to be the precision-critical block, which this mirrors.
+    """
+
+    def __init__(self, cfg: MLPConfig):
+        self.cfg = cfg
+        self.fmt = cfg.fxp_fmt
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        c, f = self.cfg, self.fmt
+        return dict(
+            w1=fxp_encode(he_sigma(c.n_in)
+                          * jax.random.normal(k1, (c.n_in, c.n_hidden)), f),
+            b1=jnp.zeros((c.n_hidden,), jnp.int32),
+            w2=fxp_encode(he_sigma(c.n_hidden)
+                          * jax.random.normal(k2, (c.n_hidden, c.n_out)), f),
+            b2=jnp.zeros((c.n_out,), jnp.int32),
+        )
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step(self, params, xb, yb, key=None):
+        c, f = self.cfg, self.fmt
+        alpha = fxp_encode(jnp.float32(ALPHA), f)
+        x = fxp_encode(xb, f)
+        z1 = fxp_affine(x, params["w1"], params["b1"], f)
+        a1 = fxp_leaky_relu(z1, alpha, f)
+        z2 = fxp_affine(a1, params["w2"], params["b2"], f)
+        # float softmax on decoded logits (see class docstring);
+        # sum-reduction over the minibatch (no 1/B — see mlp.py docstring)
+        p = jax.nn.softmax(fxp_decode(z2, f), axis=-1)
+        onehot = jax.nn.one_hot(yb, c.n_out)
+        d2 = fxp_encode(p - onehot, f)
+        gw2 = fxp_matmul(a1.T, d2, f)
+        gb2 = fxp_sat(jnp.sum(d2, axis=0), f)
+        bp = fxp_matmul(d2, params["w2"].T, f)
+        d1 = fxp_mul(bp, fxp_leaky_relu_grad(z1, alpha, f), f)
+        gw1 = fxp_matmul(x.T, d1, f)
+        gb1 = fxp_sat(jnp.sum(d1, axis=0), f)
+        lr = fxp_encode(jnp.float32(c.lr), f)
+        if c.stochastic_round and key is not None:
+            keys = iter(jax.random.split(key, 4))
+
+            def upd(w, g):
+                # raw product carries 2·bf fraction bits; round the low bf
+                # bits stochastically so sub-resolution updates survive in
+                # expectation (Gupta et al. 2015).
+                raw = lr * g
+                low = raw & (f.scale - 1)
+                base = raw >> f.bf
+                r = jax.random.randint(next(keys), w.shape, 0, f.scale)
+                step = base + (low > r).astype(jnp.int32)
+                return fxp_sat(w - step, f)
+        else:
+            def upd(w, g):
+                return fxp_sat(w - fxp_mul(lr, g, f), f)
+
+        new = dict(w1=upd(params["w1"], gw1), b1=upd(params["b1"], gb1),
+                   w2=upd(params["w2"], gw2), b2=upd(params["b2"], gb2))
+        lp = jax.nn.log_softmax(fxp_decode(z2, f))
+        nll = -jnp.take_along_axis(lp, yb[:, None], axis=1).mean()
+        return new, nll
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def predict(self, params, xb):
+        f = self.fmt
+        alpha = fxp_encode(jnp.float32(ALPHA), f)
+        x = fxp_encode(xb, f)
+        z1 = fxp_affine(x, params["w1"], params["b1"], f)
+        a1 = fxp_leaky_relu(z1, alpha, f)
+        z2 = fxp_affine(a1, params["w2"], params["b2"], f)
+        return jnp.argmax(z2, axis=-1)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2))
+    def apply_decay(self, params, every: int):
+        """Periodic weight decay: the per-step constant lr·λ underflows
+        narrow fixed point (code 0 at bf=7), so decay is applied every
+        ``every`` steps with the representable constant every·lr·λ — the
+        12-bit runs *require* this ("larger regularization constant",
+        paper Sec. 5)."""
+        f, c = self.fmt, self.cfg
+        wd = fxp_encode(jnp.float32(every * c.lr * c.weight_decay), f)
+        return {k: fxp_sat(w - fxp_mul(wd, w, f), f)
+                for k, w in params.items()}
+
+
+# ------------------------------------------------------------------ lns --
+class LNSMLP:
+    """End-to-end log-domain training (the paper's contribution)."""
+
+    def __init__(self, cfg: MLPConfig):
+        self.cfg = cfg
+        self.fmt = cfg.lns_fmt
+        self.eng = DeltaEngine(cfg.delta_spec, self.fmt)
+        self.eng_sm = DeltaEngine(cfg.softmax_spec, self.fmt)
+        self.beta = beta_code(ALPHA, self.fmt)
+        self.sgd = LogSGDConfig(lr=cfg.lr, weight_decay=cfg.weight_decay)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        c, f = self.cfg, self.fmt
+        return dict(
+            w1=log_normal_init(k1, (c.n_in, c.n_hidden), he_sigma(c.n_in), f),
+            b1=zeros((c.n_hidden,), f),
+            w2=log_normal_init(k2, (c.n_hidden, c.n_out),
+                               he_sigma(c.n_hidden), f),
+            b2=zeros((c.n_out,), f),
+        )
+
+    def _forward(self, params, x: LNSArray):
+        z1 = lns_affine(x, params["w1"], params["b1"], self.eng)
+        a1 = llrelu(z1, self.beta, self.fmt)
+        z2 = lns_affine(a1, params["w2"], params["b2"], self.eng)
+        return z1, a1, z2
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step(self, params, xb, yb):
+        f, eng = self.fmt, self.eng
+        x = encode(xb, f)                       # dataset conversion (Sec. 4)
+        z1, a1, z2 = self._forward(params, x)
+        p = log_softmax_lns(z2, self.eng_sm)
+        d2 = ce_grad_init(p, yb, f, self.eng_sm)          # (B, K)
+        # Sum-reduction over the minibatch, matching the fxp baseline.
+        gw2 = lns_matmul(a1.T, d2, eng)
+        gb2 = boxsum(d2, 0, eng)
+        bp = lns_matmul(d2, params["w2"].T, eng)          # (B, H)
+        d1 = boxdot(bp, llrelu_grad(z1, self.beta, f), f)
+        gw1 = lns_matmul(x.T, d1, eng)
+        gb1 = boxsum(d1, 0, eng)
+        grads = dict(w1=gw1, b1=gb1, w2=gw2, b2=gb2)
+        params, _ = apply_update(params, grads, None, self.sgd, eng)
+        return params, ce_loss_readout(p, yb, f)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def predict(self, params, xb):
+        x = encode(xb, self.fmt)
+        _, _, z2 = self._forward(params, x)
+        # signed argmax on LNS codes (no decode needed)
+        key = jnp.where(z2.sign == 0, z2.code, -z2.code)
+        big = jnp.int32(1 << 30)
+        key = jnp.where(z2.sign == 0, key + big, key - big)
+        return jnp.argmax(key, axis=-1)
+
+
+BACKENDS = {"float": FloatMLP, "fxp": FxpMLP, "lns": LNSMLP}
+
+
+def make_mlp(backend: str, cfg: MLPConfig):
+    return BACKENDS[backend](cfg)

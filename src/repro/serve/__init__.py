@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill + decode with KV-cache management."""
+from .engine import ServeConfig, ServingEngine
+
+__all__ = ["ServeConfig", "ServingEngine"]

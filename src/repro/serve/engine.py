@@ -1,0 +1,127 @@
+"""Batched serving engine: continuous batching over a fixed-capacity
+decode batch.
+
+The engine keeps a decode batch of ``max_batch`` slots, each slot holding
+one sequence's position; finished slots (EOS or length limit) are refilled
+from a request queue and the slot's cache lines are overwritten by the next
+prefill.  Greedy or temperature sampling.  This is the control plane the
+``decode_32k`` / ``long_500k`` dry-run cells lower the data plane for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn import Runtime, decode_step, init_decode_caches, prefill
+from ..nn.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    eos_token: int = 2
+    temperature: float = 0.0     # 0 → greedy
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
+                 rt: Runtime = Runtime()):
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.rt = rt
+        self.caches = init_decode_caches(
+            cfg, sc.max_batch, sc.max_len,
+            jnp.dtype(cfg.param_dtype), enc_len=sc.max_len)
+        self.pos = jnp.zeros((sc.max_batch,), jnp.int32)
+        self.tok = jnp.zeros((sc.max_batch, 1), jnp.int32)
+        self.active = np.zeros((sc.max_batch,), bool)
+        self.outputs: list[list[int]] = [[] for _ in range(sc.max_batch)]
+        self._step = jax.jit(
+            lambda p, t, c, q: decode_step(p, t, c, q, cfg, rt))
+        self._rng = jax.random.PRNGKey(sc.seed)
+
+    # -- slot management ---------------------------------------------------
+    def add_request(self, prompt: np.ndarray) -> Optional[int]:
+        """Prefill a prompt into a free slot; returns slot id or None."""
+        free = np.where(~self.active)[0]
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        # teacher-force the prompt through decode steps into this slot's
+        # cache lines (slot-local prefill; a production engine would use a
+        # dedicated prefill graph + cache splice)
+        for t, tok in enumerate(prompt):
+            logits, self.caches = self._step(
+                self.params,
+                self.tok.at[slot].set(int(tok)),
+                self.caches,
+                self.pos.at[slot].set(t))
+        self.pos = self.pos.at[slot].set(len(prompt))
+        nxt = self._sample(logits[slot])
+        self.tok = self.tok.at[slot, 0].set(nxt)
+        self.outputs[slot] = [int(nxt)]
+        self.active[slot] = True
+        return slot
+
+    def _sample(self, logits) -> int:
+        if self.sc.temperature == 0.0:
+            return int(jnp.argmax(logits[-1]))
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.random.categorical(
+            k, logits[-1] / self.sc.temperature))
+
+    # -- decode loop ---------------------------------------------------------
+    def step(self):
+        """One batched decode step for all active slots."""
+        if not self.active.any():
+            return
+        logits, self.caches = self._step(self.params, self.tok, self.caches,
+                                         self.pos)
+        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
+        new_toks = []
+        for slot in range(self.sc.max_batch):
+            if not self.active[slot]:
+                new_toks.append(0)
+                continue
+            nxt = self._sample(logits[slot])
+            self.outputs[slot].append(nxt)
+            done = (nxt == self.sc.eos_token
+                    or int(self.pos[slot]) >= self.sc.max_len - 1)
+            if done:
+                self.active[slot] = False
+            new_toks.append(nxt)
+        self.tok = jnp.asarray(new_toks, jnp.int32)[:, None]
+
+    def run(self, prompts: list[np.ndarray], max_new: int = 32):
+        """Serve a list of prompts with continuous batching."""
+        queue = list(prompts)
+        results = {}
+        submitted = {}
+        while queue or self.active.any():
+            while queue:
+                slot = self.add_request(queue[0])
+                if slot is None:
+                    break
+                submitted[slot] = len(results) + len(submitted)
+                queue.pop(0)
+            self.step()
+            for slot in range(self.sc.max_batch):
+                if slot in submitted and not self.active[slot]:
+                    rid = submitted.pop(slot)
+                    results[rid] = self.outputs[slot][:max_new]
+            if all(len(o) >= max_new for s, o in enumerate(self.outputs)
+                   if self.active[s]) and not queue:
+                for slot in range(self.sc.max_batch):
+                    if self.active[slot]:
+                        self.active[slot] = False
+                        if slot in submitted:
+                            results[submitted.pop(slot)] = \
+                                self.outputs[slot][:max_new]
+        return [results[i] for i in sorted(results)]

@@ -1,0 +1,96 @@
+"""Train-step factory: loss → grads → optimizer update, with optional
+microbatch gradient accumulation and log-domain gradient compression.
+
+``make_train_step`` returns a pure function (state, batch) → (state,
+metrics) suitable for jax.jit with in/out shardings from
+distributed/sharding.py.  TrainState is a plain dict so shardings map
+leaf-for-leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..nn import Runtime, loss_fn
+from ..nn.config import ModelConfig
+from ..optim import fake_compress_roundtrip, make_optimizer
+from ..optim.optimizers import OptimizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1            # gradient-accumulation splits
+    grad_clip: float = 0.0           # global-norm clip; 0 = off
+    compress_grads: bool = False     # log-int8 roundtrip + error feedback
+    loss_dtype: str = "float32"
+
+
+def init_train_state(params, opt_cfg: OptimizerConfig,
+                     tc: TrainConfig = TrainConfig()):
+    opt_init, _ = make_optimizer(opt_cfg)
+    state = {"params": params, "opt": opt_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if tc.compress_grads:
+        state["residual"] = jax.tree.map(jnp.zeros_like, params)
+    return state
+
+
+def _split_batch(batch, n):
+    return [jax.tree.map(lambda x: x[i::n], batch) for i in range(n)]
+
+
+def _clip(grads, max_norm):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * scale.astype(g.dtype)), grads), gn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    rt: Runtime = Runtime(),
+                    tc: TrainConfig = TrainConfig()):
+    _, opt_update = make_optimizer(opt_cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(p, batch, cfg, rt))(
+            params)
+
+    def step(state, batch):
+        params = state["params"]
+        if tc.microbatches > 1:
+            shards = _split_batch(batch, tc.microbatches)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+
+            def acc_fn(carry, mb):
+                loss_a, g_a = carry
+                loss, g = grads_of(params, mb)
+                return (loss_a + loss,
+                        jax.tree.map(jnp.add, g_a, g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(acc_fn, zero, stacked)
+            inv = 1.0 / tc.microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+        metrics = {"loss": loss}
+        if tc.grad_clip:
+            grads, gn = _clip(grads, tc.grad_clip)
+            metrics["grad_norm"] = gn
+        if tc.compress_grads:
+            grads, res = fake_compress_roundtrip(grads, state["residual"])
+        new_params, new_opt = opt_update(params, grads, state["opt"],
+                                         state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if tc.compress_grads:
+            new_state["residual"] = res
+        return new_state, metrics
+
+    return step

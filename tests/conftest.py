@@ -1,0 +1,13 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / host device count is deliberately NOT set here — smoke
+tests and benchmarks must see the single real CPU device.  Only
+``repro/launch/dryrun.py`` forces 512 placeholder devices.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

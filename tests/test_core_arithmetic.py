@@ -1,0 +1,146 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
+                        DELTA_SOFTMAX, LNS16, DeltaEngine, boxabs_max,
+                        boxdiv, boxdot, boxminus, boxneg, boxplus, boxsum,
+                        decode, encode, lns_affine, lns_matmul,
+                        quantization_bound)
+
+FMT = LNS16
+ENG = {k: DeltaEngine(s, FMT) for k, s in [
+    ("exact", DELTA_EXACT), ("lut", DELTA_DEFAULT),
+    ("soft", DELTA_SOFTMAX), ("bs", DELTA_BITSHIFT)]}
+
+vals = st.floats(min_value=-100.0, max_value=100.0,
+                 allow_nan=False, allow_infinity=False).filter(
+    lambda v: v == 0.0 or abs(v) > 1e-3)
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=vals, y=vals)
+def test_boxdot_is_exact_multiplication(x, y):
+    """⊡ = code add; only quantization error, no approximation error."""
+    a, b = encode(np.float32(x), FMT), encode(np.float32(y), FMT)
+    out = float(decode(boxdot(a, b, FMT), FMT))
+    ref = x * y
+    if ref == 0 or abs(ref) < FMT.min_positive:
+        assert out == 0.0 or abs(out) <= FMT.min_positive * 1.01
+    elif abs(ref) < FMT.max_value:
+        assert abs(out - ref) <= 3.1 * quantization_bound(FMT) * abs(ref)
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=vals, y=vals)
+def test_boxplus_exact_engine(x, y):
+    a, b = encode(np.float32(x), FMT), encode(np.float32(y), FMT)
+    out = float(decode(boxplus(a, b, ENG["exact"]), FMT))
+    ref = x + y
+    tol = 6 * quantization_bound(FMT) * (abs(x) + abs(y)) + FMT.min_positive
+    assert abs(out - ref) <= tol
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=vals, y=vals)
+def test_boxplus_commutative(x, y):
+    a, b = encode(np.float32(x), FMT), encode(np.float32(y), FMT)
+    for eng in ENG.values():
+        z1 = boxplus(a, b, eng)
+        z2 = boxplus(b, a, eng)
+        assert int(z1.code) == int(z2.code)
+        assert float(decode(z1, FMT)) == float(decode(z2, FMT))
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=vals)
+def test_zero_identity_and_cancellation(x):
+    a = encode(np.float32(x), FMT)
+    z = encode(np.float32(0.0), FMT)
+    for eng in ENG.values():
+        assert int(boxplus(a, z, eng).code) == int(a.code)
+        assert int(boxplus(z, a, eng).code) == int(a.code)
+        # x ⊟ x = 0 exactly (equal codes, opposite effective signs)
+        assert float(decode(boxminus(a, a, eng), FMT)) == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=vals, y=vals)
+def test_boxdiv(x, y):
+    a, b = encode(np.float32(x), FMT), encode(np.float32(y), FMT)
+    if y == 0 or x == 0:
+        return
+    ref = x / y
+    out = float(decode(boxdiv(a, b, FMT), FMT))
+    if FMT.min_positive * 2 < abs(ref) < FMT.max_value / 2:
+        assert abs(out - ref) <= 3.1 * quantization_bound(FMT) * abs(ref)
+
+
+def test_boxneg():
+    a = encode(np.float32(2.5), FMT)
+    assert float(decode(boxneg(a), FMT)) == pytest.approx(-2.5, rel=1e-3)
+
+
+def test_boxabs_max_signed_order(rng):
+    v = rng.normal(size=(8, 16)).astype(np.float32)
+    a = encode(v, FMT)
+    m = decode(boxabs_max(a, axis=1), FMT)
+    ref = decode(a, FMT).max(axis=1)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("order", ["pairwise", "sequential"])
+def test_boxsum_orders_close_to_float(rng, order):
+    v = rng.uniform(0.1, 1.0, size=(32, 24)).astype(np.float32)  # same-sign
+    s = decode(boxsum(encode(v, FMT), 1, ENG["exact"], order), FMT)
+    ref = v.sum(1)
+    np.testing.assert_allclose(np.asarray(s), ref, rtol=3e-3)
+
+
+def test_boxsum_orders_agree_with_mixed_signs(rng):
+    v = rng.normal(size=(16, 33)).astype(np.float32)
+    sp = decode(boxsum(encode(v, FMT), 1, ENG["exact"], "pairwise"), FMT)
+    ss = decode(boxsum(encode(v, FMT), 1, ENG["exact"], "sequential"), FMT)
+    ref = v.sum(1)
+    # exact-Δ: both orders track the float sum tightly
+    np.testing.assert_allclose(np.asarray(sp), ref, rtol=0.02, atol=0.02)
+    np.testing.assert_allclose(np.asarray(ss), ref, rtol=0.02, atol=0.02)
+
+
+def test_lns_matmul_vs_float(rng):
+    X = rng.normal(size=(5, 64)).astype(np.float32)
+    W = rng.normal(size=(64, 10)).astype(np.float32)
+    Z = decode(lns_matmul(encode(X, FMT), encode(W, FMT), ENG["exact"]), FMT)
+    ref = X @ W
+    np.testing.assert_allclose(np.asarray(Z), ref, rtol=0.03, atol=0.03)
+
+
+def test_lns_matmul_batched(rng):
+    X = rng.normal(size=(2, 3, 8)).astype(np.float32)
+    W = rng.normal(size=(8, 4)).astype(np.float32)
+    Z = decode(lns_matmul(encode(X, FMT), encode(W, FMT), ENG["exact"]), FMT)
+    assert Z.shape == (2, 3, 4)
+    np.testing.assert_allclose(np.asarray(Z), X @ W, rtol=0.05, atol=0.05)
+
+
+def test_lns_affine(rng):
+    X = rng.normal(size=(4, 16)).astype(np.float32)
+    W = rng.normal(size=(16, 6)).astype(np.float32)
+    b = rng.normal(size=(6,)).astype(np.float32)
+    Z = decode(lns_affine(encode(X, FMT), encode(W, FMT), encode(b, FMT),
+                          ENG["exact"]), FMT)
+    np.testing.assert_allclose(np.asarray(Z), X @ W + b, rtol=0.05, atol=0.05)
+
+
+def test_approximation_error_ordering(rng):
+    """Paper Fig. 1 / Table 1: exact < LUT(1/64) < LUT(1/2) < bitshift."""
+    X = rng.normal(size=(8, 128)).astype(np.float32)
+    W = rng.normal(size=(128, 16)).astype(np.float32)
+    ref = X @ W
+    errs = {}
+    for k in ("exact", "soft", "lut", "bs"):
+        Z = decode(lns_matmul(encode(X, FMT), encode(W, FMT), ENG[k]), FMT)
+        errs[k] = np.median(np.abs(np.asarray(Z) - ref)
+                            / np.maximum(np.abs(ref), 1e-3))
+    assert errs["exact"] < errs["soft"] < errs["lut"] < errs["bs"]

@@ -1,0 +1,83 @@
+import numpy as np
+import pytest
+
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
+                        DELTA_SOFTMAX, LNS12, LNS16, DeltaEngine, DeltaSpec,
+                        delta_plus_float)
+
+
+def test_table_sizes_match_paper():
+    assert DELTA_DEFAULT.table_size == 20     # d_max=10, r=1/2
+    assert DELTA_SOFTMAX.table_size == 640    # d_max=10, r=1/64
+
+
+def test_exact_engine_matches_reference():
+    eng = DeltaEngine(DELTA_EXACT, LNS16)
+    d = np.linspace(0, 12, 200)
+    codes = np.round(d * LNS16.scale).astype(np.int32)
+    got = np.asarray(eng.plus(codes)) / LNS16.scale
+    ref = delta_plus_float(codes / LNS16.scale)
+    assert np.max(np.abs(got - ref)) <= 0.5 / LNS16.scale + 1e-9
+
+
+@pytest.mark.parametrize("fmt", [LNS16, LNS12])
+def test_lut_converges_to_exact_with_resolution(fmt):
+    """Finer LUT ⇒ smaller max error vs exact Δ+ (paper Sec. 5 sweep)."""
+    d = np.linspace(0.0, 9.9, 500)
+    codes = np.round(d * fmt.scale).astype(np.int32)
+    exact = np.asarray(DeltaEngine(DELTA_EXACT, fmt).plus(codes))
+    errs = []
+    for r in (1.0, 0.5, 0.125):
+        if r * fmt.scale < 1:
+            continue
+        eng = DeltaEngine(DeltaSpec("lut", 10.0, r), fmt)
+        errs.append(np.max(np.abs(np.asarray(eng.plus(codes)) - exact)))
+    assert all(errs[i] >= errs[i + 1] for i in range(len(errs) - 1))
+
+
+def test_lut_zero_beyond_dmax():
+    eng = DeltaEngine(DELTA_DEFAULT, LNS16)
+    d = np.int32(int(11.0 * LNS16.scale))
+    assert int(eng.plus(np.array([d]))[0]) == 0
+    assert int(eng.minus(np.array([d]))[0]) == 0
+
+
+def test_minus_zero_is_flush_sentinel():
+    for spec in (DELTA_DEFAULT, DELTA_BITSHIFT, DELTA_EXACT):
+        eng = DeltaEngine(spec, LNS16)
+        v = int(eng.minus(np.array([0], np.int32))[0])
+        assert v <= LNS16.code_min - LNS16.code_max  # flushes any max code
+
+
+def test_bitshift_values():
+    """Eq. 9: Δ+(d) = 2^-⌊d⌋, Δ-(d) = -1.5·2^-⌊d⌋ in code units."""
+    fmt = LNS16
+    eng = DeltaEngine(DELTA_BITSHIFT, fmt)
+    for d_int in range(0, 8):
+        d = np.array([d_int << fmt.qf], np.int32)
+        assert int(eng.plus(d)[0]) == (1 << fmt.qf) >> d_int
+        if d_int > 0:
+            assert int(eng.minus(d)[0]) == -((3 << fmt.qf) >> (d_int + 1))
+
+
+def test_bitshift_equals_lut_r1_structure():
+    """Bit-shift ≈ a 1-entry-per-integer-d table (paper Sec. 3)."""
+    fmt = LNS16
+    bs = DeltaEngine(DELTA_BITSHIFT, fmt)
+    d = np.arange(0, 10 << fmt.qf, fmt.scale, dtype=np.int32)
+    v1 = np.asarray(bs.plus(d))
+    v2 = np.asarray(bs.plus(d + fmt.scale // 4))  # fractional d truncates
+    np.testing.assert_array_equal(v1, v2)
+
+
+def test_lut_requires_grid_aligned_resolution():
+    with pytest.raises(ValueError):
+        DeltaEngine(DeltaSpec("lut", 10.0, 1.0 / 3.0), LNS16)
+
+
+def test_float_views_match_engine():
+    eng = DeltaEngine(DELTA_DEFAULT, LNS16)
+    d = np.array([0.0, 0.5, 1.0, 2.5, 9.5])
+    codes = np.round(d * LNS16.scale).astype(np.int32)
+    np.testing.assert_allclose(
+        eng.plus_float(d), np.asarray(eng.plus(codes)) / LNS16.scale)

@@ -1,0 +1,32 @@
+import math
+
+from repro.core import (FXP12, FXP16, LNS12, LNS16, FixedPointFormat,
+                        LNSFormat, required_log_width)
+
+
+def test_paper_formats():
+    # Paper Sec. 5: 16-bit log uses 10 fraction bits, 12-bit uses 6.
+    assert LNS16.total_bits == 16 and LNS16.qf == 10
+    assert LNS12.total_bits == 12 and LNS12.qf == 6
+    assert FXP16.total_bits == 16 and FXP16.bf == 11
+    assert FXP12.total_bits == 12 and FXP12.bf == 7
+
+
+def test_eq15_bitwidth_bound():
+    # Paper: for W_lin=16 (bi=4, bf=11), W_log = 21 is required.
+    assert required_log_width(FXP16) == 21
+
+
+def test_code_ranges():
+    f = LNS16
+    assert f.code_max == 2 ** 14 - 1
+    assert f.code_min == -(2 ** 14)
+    assert f.zero_code == f.code_min
+    assert f.min_nonzero_code == f.code_min + 1
+    assert math.isclose(f.max_value, 2.0 ** (f.code_max / 1024))
+
+
+def test_to_code_saturates():
+    f = LNS12
+    assert f.to_code(1e9) == f.code_max
+    assert f.to_code(-1e9) == f.min_nonzero_code

@@ -1,0 +1,132 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELTA_EXACT, FXP12, FXP16, LNS16, DeltaEngine,
+                        LogSGDConfig, apply_update, boxdot, decode, encode,
+                        he_sigma, init_momentum, log_density_normal,
+                        log_normal_init, scalar)
+from repro.core.linear_fixed import (fxp_affine, fxp_decode, fxp_encode,
+                                     fxp_leaky_relu, fxp_matmul, fxp_mul)
+
+FMT = LNS16
+ENG = DeltaEngine(DELTA_EXACT, FMT)
+
+
+# ---------- initializers (eq. 12) ----------------------------------------
+def test_log_init_matches_linear_law():
+    key = jax.random.PRNGKey(0)
+    sigma = he_sigma(784)
+    w = decode(log_normal_init(key, (20000,), sigma, FMT), FMT)
+    w = np.asarray(w)
+    # symmetric, right std, ~half negative
+    assert abs(float(np.mean(w < 0)) - 0.5) < 0.02
+    assert float(np.std(w)) == pytest.approx(sigma, rel=0.05)
+
+
+def test_log_density_integrates_to_one():
+    y = np.linspace(-20, 4, 20000)
+    f = log_density_normal(y, sigma=0.5)
+    # density of W = log2|w| integrates to 1
+    assert np.trapezoid(f, y) == pytest.approx(1.0, abs=1e-3)
+
+
+def test_log_init_histogram_matches_eq12_density():
+    key = jax.random.PRNGKey(1)
+    a = log_normal_init(key, (50000,), 1.0, FMT)
+    ys = np.asarray(a.code, np.float64) / FMT.scale
+    hist, edges = np.histogram(ys, bins=50, range=(-8, 2), density=True)
+    centers = (edges[:-1] + edges[1:]) / 2
+    ref = log_density_normal(centers, 1.0)
+    mask = ref > 0.02
+    assert np.max(np.abs(hist[mask] - ref[mask])) < 0.05
+
+
+# ---------- log-domain SGD ------------------------------------------------
+def test_sgd_descends_quadratic():
+    """Minimize f(w) = 0.5||w - t||² with log-domain updates g = w - t."""
+    key = jax.random.PRNGKey(2)
+    t = np.array([0.7, -1.3, 2.1, -0.4], np.float32)
+    w = encode(np.asarray(jax.random.normal(key, (4,))), FMT)
+    cfg = LogSGDConfig(lr=0.1)
+    eng = ENG
+    for _ in range(200):
+        g_lin = np.asarray(decode(w, FMT)) - t
+        g = encode(g_lin, FMT)
+        w, _ = apply_update(w, g, None, cfg, eng)
+    np.testing.assert_allclose(np.asarray(decode(w, FMT)), t, atol=0.02)
+
+
+def test_sgd_weight_decay_shrinks():
+    w = encode(np.full(8, 2.0, np.float32), FMT)
+    g = encode(np.zeros(8, np.float32), FMT)
+    cfg = LogSGDConfig(lr=0.1, weight_decay=1.0)
+    for _ in range(30):
+        w, _ = apply_update(w, g, None, cfg, ENG)
+    assert np.all(np.abs(np.asarray(decode(w, FMT))) < 0.15)
+
+
+def test_sgd_momentum_state():
+    w = encode(np.ones(4, np.float32), FMT)
+    cfg = LogSGDConfig(lr=0.01, momentum=0.9)
+    m = init_momentum(w, cfg, FMT)
+    g = encode(np.full(4, 0.5, np.float32), FMT)
+    w2, m2 = apply_update(w, g, m, cfg, ENG)
+    assert m2 is not None
+    # first step: m = g
+    np.testing.assert_allclose(np.asarray(decode(m2, FMT)), 0.5, rtol=1e-3)
+    assert np.all(np.asarray(decode(w2, FMT)) < 1.0)
+
+
+# ---------- linear fixed point (paper baseline) ---------------------------
+@pytest.mark.parametrize("fmt", [FXP16, FXP12])
+def test_fxp_roundtrip(rng, fmt):
+    v = rng.uniform(-10, 10, size=(100,)).astype(np.float32)
+    out = np.asarray(fxp_decode(fxp_encode(v, fmt), fmt))
+    np.testing.assert_allclose(out, np.clip(v, fmt.code_min / fmt.scale,
+                                            fmt.code_max / fmt.scale),
+                               atol=0.5 / fmt.scale + 1e-6)
+
+
+def test_fxp_mul(rng):
+    fmt = FXP16
+    a = rng.uniform(-3, 3, size=(50,)).astype(np.float32)
+    b = rng.uniform(-3, 3, size=(50,)).astype(np.float32)
+    out = fxp_decode(fxp_mul(fxp_encode(a, fmt), fxp_encode(b, fmt), fmt), fmt)
+    np.testing.assert_allclose(np.asarray(out), a * b, atol=4 / fmt.scale)
+
+
+def test_fxp_matmul(rng):
+    fmt = FXP16
+    X = rng.normal(size=(5, 64)).astype(np.float32) * 0.5
+    W = rng.normal(size=(64, 10)).astype(np.float32) * 0.2
+    Z = fxp_decode(fxp_matmul(fxp_encode(X, fmt), fxp_encode(W, fmt), fmt),
+                   fmt)
+    np.testing.assert_allclose(np.asarray(Z), X @ W, atol=64 / fmt.scale)
+
+
+def test_fxp_affine_saturates():
+    fmt = FXP12
+    X = fxp_encode(np.full((1, 4), 10.0, np.float32), fmt)
+    W = fxp_encode(np.full((4, 2), 10.0, np.float32), fmt)
+    b = fxp_encode(np.zeros(2, np.float32), fmt)
+    Z = fxp_affine(X, W, b, fmt)
+    assert (np.asarray(Z) == fmt.code_max).all()
+
+
+def test_fxp_leaky_relu(rng):
+    fmt = FXP16
+    v = rng.normal(size=(50,)).astype(np.float32)
+    alpha = fxp_encode(np.float32(0.01), fmt)
+    out = fxp_decode(fxp_leaky_relu(fxp_encode(v, fmt), alpha, fmt), fmt)
+    ref = np.where(v > 0, v, 0.01 * v)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=4 / fmt.scale)
+
+
+# ---------- scalar ⊡ vector ------------------------------------------------
+def test_scalar_boxdot(rng):
+    v = rng.normal(size=(30,)).astype(np.float32)
+    out = decode(boxdot(scalar(0.01, FMT), encode(v, FMT), FMT), FMT)
+    np.testing.assert_allclose(np.asarray(out), 0.01 * v, rtol=2e-3,
+                               atol=FMT.min_positive * 2)

@@ -1,0 +1,86 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (LNS12, LNS16, decode, encode, quantization_bound,
+                        scalar, zeros)
+
+FMT = [LNS16, LNS12]
+
+finite_vals = st.floats(
+    min_value=-15.0, max_value=15.0, allow_nan=False, allow_infinity=False
+).filter(lambda v: v == 0.0 or abs(v) > 2 ** -9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(v=finite_vals)
+def test_roundtrip_relative_error(v):
+    fmt = LNS16
+    out = float(decode(encode(np.float32(v), fmt), fmt))
+    if v == 0.0:
+        assert out == 0.0
+    else:
+        assert abs(out - v) <= (quantization_bound(fmt) * abs(v)) * (1 + 1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=finite_vals)
+def test_sign_preserved(v):
+    fmt = LNS12
+    a = encode(np.float32(v), fmt)
+    if v > 0:
+        assert int(a.sign) == 0
+    elif v < 0:
+        assert int(a.sign) == 1
+
+
+@pytest.mark.parametrize("fmt", FMT)
+def test_zero_and_underflow(fmt):
+    a = encode(np.zeros(3, np.float32), fmt)
+    assert (np.asarray(a.code) == fmt.zero_code).all()
+    assert (np.asarray(decode(a, fmt)) == 0).all()
+    # deep underflow flushes to zero
+    tiny = encode(np.float32(2.0 ** (fmt.code_min / fmt.scale - 10)), fmt)
+    assert int(tiny.code) == fmt.zero_code
+
+
+@pytest.mark.parametrize("fmt", FMT)
+def test_overflow_saturates(fmt):
+    big = encode(np.float32(1e30), fmt)
+    assert int(big.code) == fmt.code_max
+    assert float(decode(big, fmt)) == pytest.approx(fmt.max_value)
+
+
+def test_scalar_matches_encode():
+    fmt = LNS16
+    for v in (0.01, -3.7, 1.0, 0.0):
+        s = scalar(v, fmt)
+        e = encode(np.float32(v), fmt)
+        assert int(s.code) == int(e.code)
+        assert int(s.sign) == int(e.sign)
+
+
+def test_zeros_helper():
+    z = zeros((2, 3), LNS16)
+    assert z.shape == (2, 3)
+    assert (np.asarray(decode(z, LNS16)) == 0).all()
+
+
+def test_pytree_flattening():
+    import jax
+
+    z = zeros((4,), LNS16)
+    leaves, _ = jax.tree_util.tree_flatten(z)
+    assert len(leaves) == 2
+    mapped = jax.tree.map(lambda x: x, z)
+    assert mapped.shape == (4,)
+
+
+def test_encode_is_jittable():
+    import jax
+
+    f = jax.jit(lambda v: encode(v, LNS16).code)
+    v = jnp.array([1.0, -2.0, 0.0, 0.5])
+    np.testing.assert_array_equal(f(v), encode(v, LNS16).code)

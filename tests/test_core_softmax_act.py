@@ -1,0 +1,99 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELTA_SOFTMAX, LNS16, DeltaEngine, beta_code,
+                        ce_grad_init, ce_loss_readout, code_to_lns, decode,
+                        encode, llrelu, llrelu_grad, lns_value_to_code,
+                        log_softmax_lns)
+
+FMT = LNS16
+ENG = DeltaEngine(DELTA_SOFTMAX, FMT)
+
+
+def test_softmax_matches_float(rng):
+    logits = (rng.normal(size=(6, 10)) * 3).astype(np.float32)
+    p = decode(log_softmax_lns(encode(logits, FMT), ENG), FMT)
+    ref = np.asarray(jax.nn.softmax(logits, axis=-1))
+    assert np.max(np.abs(np.asarray(p) - ref)) < 5e-3
+    np.testing.assert_allclose(np.asarray(p).sum(-1), 1.0, atol=5e-3)
+
+
+def test_softmax_shift_invariance(rng):
+    logits = rng.normal(size=(3, 8)).astype(np.float32)
+    p1 = decode(log_softmax_lns(encode(logits, FMT), ENG), FMT)
+    p2 = decode(log_softmax_lns(encode(logits + 4.0, FMT), ENG), FMT)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=2e-2)
+
+
+def test_softmax_large_logits_stable(rng):
+    logits = (rng.normal(size=(4, 10)) * 30).astype(np.float32)
+    p = decode(log_softmax_lns(encode(logits, FMT), ENG), FMT)
+    assert np.isfinite(np.asarray(p)).all()
+    np.testing.assert_allclose(np.asarray(p).sum(-1), 1.0, atol=2e-2)
+
+
+def test_ce_grad_init(rng):
+    logits = rng.normal(size=(5, 10)).astype(np.float32)
+    labels = rng.integers(0, 10, size=(5,))
+    p = log_softmax_lns(encode(logits, FMT), ENG)
+    d = decode(ce_grad_init(p, jnp.asarray(labels), FMT, ENG), FMT)
+    ref = np.array(jax.nn.softmax(logits, -1))
+    ref[np.arange(5), labels] -= 1.0
+    np.testing.assert_allclose(np.asarray(d), ref, atol=1e-2)
+
+
+def test_ce_loss_readout(rng):
+    logits = rng.normal(size=(8, 10)).astype(np.float32)
+    labels = rng.integers(0, 10, size=(8,))
+    p = log_softmax_lns(encode(logits, FMT), ENG)
+    loss = float(ce_loss_readout(p, jnp.asarray(labels), FMT))
+    lp = np.asarray(jax.nn.log_softmax(logits, -1))
+    ref = -lp[np.arange(8), labels].mean()
+    assert loss == pytest.approx(ref, rel=2e-2)
+
+
+def test_llrelu(rng):
+    v = rng.normal(size=(100,)).astype(np.float32)
+    beta = beta_code(0.01, FMT)
+    out = decode(llrelu(encode(v, FMT), beta, FMT), FMT)
+    ref = np.where(v > 0, v, v * 2.0 ** (beta / FMT.scale))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-3, atol=1e-6)
+
+
+def test_llrelu_grad(rng):
+    v = rng.normal(size=(50,)).astype(np.float32)
+    beta = beta_code(0.01, FMT)
+    g = decode(llrelu_grad(encode(v, FMT), beta, FMT), FMT)
+    ref = np.where(v > 0, 1.0, 2.0 ** (beta / FMT.scale))
+    np.testing.assert_allclose(np.asarray(g), ref, rtol=1e-6)
+
+
+def test_llrelu_preserves_zero():
+    z = encode(np.zeros(3, np.float32), FMT)
+    out = llrelu(z, beta_code(0.01, FMT), FMT)
+    assert (np.asarray(out.code) == FMT.zero_code).all()
+
+
+@pytest.mark.parametrize("mode", ["exact", "mitchell"])
+def test_conversion_roundtrip(rng, mode):
+    v = rng.uniform(0.1, 8.0, size=(200,)).astype(np.float32)
+    a = encode(v, FMT)
+    c = lns_value_to_code(a, FMT, mode)
+    back = np.asarray(c).astype(np.float64) / FMT.scale
+    tol = 0.08 if mode == "mitchell" else 1e-3  # Mitchell ≤ ~6% rel err
+    np.testing.assert_allclose(back, np.asarray(decode(a, FMT)),
+                               rtol=tol, atol=2.0 / FMT.scale)
+
+
+@pytest.mark.parametrize("mode", ["exact", "mitchell"])
+def test_code_to_lns_roundtrip(rng, mode):
+    codes = rng.integers(-(1 << 13), 1 << 13, size=(200,)).astype(np.int32)
+    a = code_to_lns(jnp.asarray(codes), FMT, mode)
+    vals = np.asarray(decode(a, FMT)) * FMT.scale
+    # Mitchell log2(1+m)≈m has max log-error ≈0.086 → ≈6.1% value error.
+    tol = 0.065 if mode == "mitchell" else 2e-3
+    nz = codes != 0
+    np.testing.assert_allclose(vals[nz], codes[nz], rtol=tol, atol=1.0)
+    assert (vals[~nz] == 0).all()

@@ -1,0 +1,67 @@
+"""Paper-reproduction pipeline tests (fast budgets)."""
+import numpy as np
+import pytest
+
+from repro.paper import PRESETS, load, run_experiment, synthetic
+from repro.paper.mlp import MLPConfig, make_mlp
+
+
+def test_synthetic_datasets_shape_and_determinism():
+    x1, y1, xt1, yt1 = synthetic(PRESETS["mnist"], seed=3)
+    x2, y2, _, _ = synthetic(PRESETS["mnist"], seed=3)
+    np.testing.assert_array_equal(x1, x2)
+    assert x1.shape == (4000, 784) and xt1.shape == (1000, 784)
+    assert x1.min() >= 0 and x1.max() <= 1
+    # 8-bit grid + MNIST-like sparsity
+    assert np.allclose(x1 * 255, np.round(x1 * 255), atol=1e-4)
+    assert (x1 == 0).mean() > 0.5
+    assert set(np.unique(y1)) <= set(range(10))
+
+
+def test_emnistl_has_26_classes():
+    x, y, _, _ = synthetic(PRESETS["emnistl"], seed=0)
+    assert y.max() == 25
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("float", {}),
+    ("fxp", dict(stochastic_round=True)),
+    ("lns", {}),
+])
+def test_backends_learn_above_chance(backend, kw):
+    r = run_experiment(backend, "mnist", epochs=2, max_steps_per_epoch=80,
+                       **kw)
+    assert r.val_curve[-1] > 0.22, (backend, r.val_curve)
+
+
+def test_lns_bitshift_runs():
+    r = run_experiment("lns", "mnist", approx="bitshift", epochs=1,
+                       max_steps_per_epoch=40)
+    assert r.val_curve[-1] > 0.15
+
+
+def test_lns12_runs():
+    r = run_experiment("lns", "mnist", bits=12, epochs=1,
+                       max_steps_per_epoch=40)
+    assert r.val_curve[-1] > 0.15
+
+
+def test_fxp12_underflow_without_sr():
+    """Linear-12 with nearest rounding cannot train (lr·g underflows
+    bf=7) — the phenomenon behind §Repro finding 4."""
+    r_plain = run_experiment("fxp", "mnist", bits=12, epochs=1,
+                             max_steps_per_epoch=100)
+    r_sr = run_experiment("fxp", "mnist", bits=12, epochs=1,
+                          max_steps_per_epoch=100, stochastic_round=True)
+    assert r_sr.val_curve[-1] > r_plain.val_curve[-1] + 0.1
+
+
+def test_lns_prediction_is_argmax_of_decoded_logits(rng):
+    cfg = MLPConfig(n_out=10)
+    m = make_mlp("lns", cfg)
+    import jax
+    params = m.init(jax.random.PRNGKey(0))
+    xb = rng.uniform(0, 1, size=(8, 784)).astype(np.float32)
+    pred = np.asarray(m.predict(params, xb))
+    assert pred.shape == (8,)
+    assert ((0 <= pred) & (pred < 10)).all()

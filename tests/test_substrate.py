@@ -1,0 +1,221 @@
+"""Substrate tests: optimizer, checkpoint/restart, data determinism,
+gradient compression, MoE EP-vs-reference, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.nn import Runtime, init_params
+from repro.nn.config import ShapeCell
+from repro.optim import (compress_int8_log, decompress_int8_log,
+                         fake_compress_roundtrip)
+from repro.optim.optimizers import AdamWConfig, SGDConfig, make_optimizer
+from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.ckpt import CheckpointManager, latest_step
+
+
+CELL = ShapeCell("t", seq_len=32, global_batch=4, kind="train")
+
+
+def _setup(arch="olmo-1b", **kw):
+    cfg = reduced(get_config(arch)).with_(numerics="fp32", remat="none")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------- optimizers ---
+def test_adamw_reduces_loss_quadratic():
+    opt = AdamWConfig(lr=0.1, weight_decay=0.0)
+    init, update = make_optimizer(opt)
+    p = {"w": jnp.array([5.0, -3.0])}
+    s = init(p)
+    for t in range(200):
+        g = {"w": 2 * p["w"]}
+        p, s = update(p, g, s, jnp.int32(t))
+    assert float(jnp.abs(p["w"]).max()) < 0.05
+
+
+def test_sgd_momentum_state_shapes():
+    opt = SGDConfig(lr=0.1, momentum=0.9)
+    init, update = make_optimizer(opt)
+    p = {"a": jnp.ones((3, 2)), "b": jnp.zeros((4,))}
+    s = init(p)
+    p2, s2 = update(p, jax.tree.map(jnp.ones_like, p), s, jnp.int32(0))
+    assert s2["m"]["a"].shape == (3, 2)
+    assert float(p2["a"][0, 0]) < 1.0
+
+
+# ------------------------------------------------------------ training ---
+def test_train_step_reduces_loss():
+    cfg, params = _setup()
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                   Runtime(), TrainConfig()),
+                   donate_argnums=0)
+    state = init_train_state(params, AdamWConfig(lr=1e-3))
+    ds = SyntheticLMDataset(cfg, CELL, DataConfig(seed=0))
+    losses = []
+    for t in range(30):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(t % 3).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses[:3] + losses[-3:]
+
+
+def test_microbatched_grads_match_full_batch():
+    cfg, params = _setup()
+    ds = SyntheticLMDataset(cfg, CELL, DataConfig(seed=1))
+    batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+    opt = SGDConfig(lr=1e-2)
+    s1 = init_train_state(params, opt)
+    s2 = init_train_state(params, opt)
+    f1 = jax.jit(make_train_step(cfg, opt, Runtime(), TrainConfig()))
+    f2 = jax.jit(make_train_step(cfg, opt, Runtime(),
+                                 TrainConfig(microbatches=2)))
+    o1, m1 = f1(s1, batch)
+    o2, m2 = f2(s2, batch)
+    # microbatches see different token slices of the batch → compare a
+    # deterministic reassembly: loss must be close (same data overall)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=0.05)
+    for a, b in zip(jax.tree.leaves(o1["params"]),
+                    jax.tree.leaves(o2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0.2, atol=5e-3)
+
+
+def test_grad_clip_caps_norm():
+    cfg, params = _setup()
+    tc = TrainConfig(grad_clip=1e-6)
+    step = jax.jit(make_train_step(cfg, SGDConfig(lr=1.0), Runtime(), tc))
+    state = init_train_state(params, SGDConfig(lr=1.0), tc)
+    ds = SyntheticLMDataset(cfg, CELL, DataConfig())
+    batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+    new, m = step(state, batch)
+    # with clip ~0, params barely move even at lr=1
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(new["params"])):
+        assert float(jnp.abs(a - b).max()) < 1e-4
+
+
+# ------------------------------------------------------------- ckpt ------
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg, params = _setup()
+    opt = AdamWConfig(lr=1e-3)
+    state = init_train_state(params, opt)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(5, state, blocking=True)
+    mgr.save(10, state, blocking=False)
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 10
+    like = jax.eval_shape(lambda: state)
+    restored, step = mgr.restore_latest(like)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_gc(tmp_path):
+    cfg, params = _setup()
+    state = init_train_state(params, SGDConfig())
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, blocking=True)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_atomic_tmp_cleanup(tmp_path):
+    cfg, params = _setup()
+    state = init_train_state(params, SGDConfig())
+    # simulate a crashed writer
+    os.makedirs(tmp_path / "step_00000099.tmp")
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, state, blocking=True)
+    assert latest_step(str(tmp_path)) == 1
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+# ------------------------------------------------------------- data ------
+def test_data_deterministic_by_step():
+    cfg, _ = _setup()
+    ds1 = SyntheticLMDataset(cfg, CELL, DataConfig(seed=7))
+    ds2 = SyntheticLMDataset(cfg, CELL, DataConfig(seed=7))
+    for t in (0, 3, 17):
+        b1, b2 = ds1.batch_at(t), ds2.batch_at(t)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds1.batch_at(0)["tokens"],
+                              ds1.batch_at(1)["tokens"])
+
+
+def test_data_host_sharding_partitions_batch():
+    cfg, _ = _setup()
+    cell = ShapeCell("t", 16, 8, "train")
+    full = SyntheticLMDataset(cfg, cell, DataConfig(seed=3)).batch_at(0)
+    sh = [SyntheticLMDataset(cfg, cell,
+                             DataConfig(seed=3, shard_index=i,
+                                        shard_count=2)).batch_at(0)
+          for i in range(2)]
+    assert sh[0]["tokens"].shape[0] == 4
+    # shards are distinct (different rng streams)
+    assert not np.array_equal(sh[0]["tokens"], sh[1]["tokens"])
+    del full
+
+
+# ------------------------------------------------------- compression -----
+def test_log_int8_compression_roundtrip(rng):
+    g = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
+    codes, s = compress_int8_log(g)
+    assert codes.dtype == jnp.int8
+    out = decompress_int8_log(codes, s)
+    rel = np.abs(np.asarray(out) - np.asarray(g)) / (np.abs(g) + 1e-12)
+    # 4 fraction bits → ≤ ~2.2% magnitude error for in-range values
+    mask = np.abs(np.asarray(g)) > float(s) * 2 ** -60
+    assert np.median(rel[mask]) < 0.03
+
+
+def test_error_feedback_reduces_bias(rng):
+    g = jnp.asarray(rng.normal(size=(512,)), jnp.float32) * 1e-3
+    total_plain = np.zeros(512, np.float32)
+    total_ef = np.zeros(512, np.float32)
+    res = None
+    for _ in range(50):
+        gh_plain, _ = fake_compress_roundtrip({"g": g})
+        gh_ef, res = fake_compress_roundtrip({"g": g},
+                                             res if res else None)
+        total_plain += np.asarray(gh_plain["g"])
+        total_ef += np.asarray(gh_ef["g"])
+        res = res
+    ref = np.asarray(g) * 50
+    err_ef = np.abs(total_ef - ref).mean()
+    err_plain = np.abs(total_plain - ref).mean()
+    assert err_ef <= err_plain * 1.05
+
+
+# ------------------------------------------------------------- serve -----
+def test_serving_engine_batched_requests():
+    from repro.serve import ServeConfig, ServingEngine
+    cfg, params = _setup("qwen3-1.7b")
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=2, max_len=24))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, cfg.vocab_size, size=5) for _ in range(3)]
+    outs = engine.run(prompts, max_new=4)
+    assert len(outs) == 3
+    assert all(1 <= len(o) <= 24 for o in outs)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+
+
+def test_greedy_decode_is_deterministic():
+    from repro.serve import ServeConfig, ServingEngine
+    cfg, params = _setup("olmo-1b")
+    prompts = [np.array([5, 6, 7])]
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(cfg, params, ServeConfig(max_batch=1,
+                                                     max_len=16))
+        outs.append(eng.run(prompts, max_new=5)[0])
+    assert outs[0] == outs[1]
