@@ -1,9 +1,12 @@
-"""LNS ⊞-MAC microbenchmarks: Pallas kernel (interpret), jnp emulation,
-and the float matmul reference.
+"""LNS ⊞-MAC microbenchmarks: Pallas kernels (interpret), jnp emulation,
+and the float matmul reference — forward AND backward passes.
 
 CPU wall times characterize the *emulation*, not TPU performance (the
 container has no TPU); the structural TPU cost model lives in
-EXPERIMENTS.md §Roofline.  Shapes follow the paper MLP's hot matmul.
+EXPERIMENTS.md §Roofline.  Shapes follow the paper MLP's hot matmul; the
+backward rows time the transposed ⊞-MACs dX = dY ⊞ Wᵀ (contraction over
+N) and dW = Xᵀ ⊞ dY (contraction over the batch M) that training on the
+kernel path adds (see kernels/lns_matmul/lns_matmul.py).
 """
 from __future__ import annotations
 
@@ -14,9 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, LNS16,
-                        DeltaEngine, encode)
+                        DeltaEngine, LNSMatmulBackend, encode)
 from repro.core.arithmetic import lns_matmul
-from repro.kernels.lns_matmul import lns_matmul_kernel
+from repro.kernels.lns_matmul import (lns_matmul_dw_kernel,
+                                      lns_matmul_dx_kernel,
+                                      lns_matmul_kernel)
 
 
 def _time(fn, *args, reps=5):
@@ -33,20 +38,41 @@ def run():
     m, k, n = 64, 784, 100
     X = rng.normal(size=(m, k)).astype(np.float32)
     W = rng.normal(size=(k, n)).astype(np.float32)
-    x, w = encode(X, LNS16), encode(W, LNS16)
+    DY = rng.normal(size=(m, n)).astype(np.float32)
+    x, w, dy = encode(X, LNS16), encode(W, LNS16), encode(DY, LNS16)
+    shape = f"{m}x{k}x{n}"
     rows = []
-    rows.append(("kernel/float_matmul_64x784x100",
+    rows.append((f"kernel/float_matmul_{shape}",
                  _time(jax.jit(jnp.matmul), X, W), "ref"))
     for name, spec in [("lut20", DELTA_DEFAULT), ("bitshift", DELTA_BITSHIFT)]:
         eng = DeltaEngine(spec, LNS16)
+        # -- forward: Z = X ⊞-MAC W ------------------------------------
         emu = jax.jit(lambda a, b, e=eng: lns_matmul(a, b, e).code)
-        rows.append((f"kernel/emulated_{name}_64x784x100",
+        rows.append((f"kernel/emulated_{name}_{shape}",
                      _time(emu, x, w), "pairwise tree"))
         pal = lambda a, b, s=spec: lns_matmul_kernel(
             a, b, fmt=LNS16, spec=s, block_m=32, block_n=32, block_k=98,
             interpret=True).code
-        rows.append((f"kernel/pallas_interp_{name}_64x784x100",
+        rows.append((f"kernel/pallas_interp_{name}_{shape}",
                      _time(pal, x, w, reps=2), "sequential MAC"))
+        # -- backward: dX = dY ⊞ Wᵀ and dW = Xᵀ ⊞ dY --------------------
+        be = LNSMatmulBackend(fmt=LNS16, spec=spec, backend="emulate")
+        emu_dx = jax.jit(lambda g, b, e=be: e.matmul_dx(g, b).code)
+        rows.append((f"kernel/emulated_dx_{name}_{shape}",
+                     _time(emu_dx, dy, w), "sequential MAC"))
+        pal_dx = lambda g, b, s=spec: lns_matmul_dx_kernel(
+            g, b, fmt=LNS16, spec=s, block_m=32, block_k=98, block_n=50,
+            interpret=True).code
+        rows.append((f"kernel/pallas_interp_dx_{name}_{shape}",
+                     _time(pal_dx, dy, w, reps=2), "sequential MAC"))
+        emu_dw = jax.jit(lambda a, g, e=be: e.matmul_dw(a, g).code)
+        rows.append((f"kernel/emulated_dw_{name}_{shape}",
+                     _time(emu_dw, x, dy), "sequential MAC"))
+        pal_dw = lambda a, g, s=spec: lns_matmul_dw_kernel(
+            a, g, fmt=LNS16, spec=s, block_k=98, block_n=50, block_m=32,
+            interpret=True).code
+        rows.append((f"kernel/pallas_interp_dw_{name}_{shape}",
+                     _time(pal_dw, x, dy, reps=2), "sequential MAC"))
     return rows
 
 

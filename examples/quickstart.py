@@ -5,9 +5,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_SOFTMAX, LNS16,
-                        DeltaEngine, boxdot, boxplus, decode, encode,
-                        lns_matmul)
-from repro.kernels import lns_matmul_kernel
+                        DeltaEngine, LNSMatmulBackend, boxdot, boxplus,
+                        decode, encode, lns_matmul)
+from repro.kernels import lns_matmul_kernel, lns_matmul_trainable
 from repro.paper import run_experiment
 
 print("=== 1. LNS arithmetic (paper Sec. 2-3) ===")
@@ -33,7 +33,27 @@ Zk = decode(lns_matmul_kernel(encode(A, fmt), encode(B, fmt), fmt=fmt,
 print(f"Pallas kernel (interpret mode) matches emulation structurally; "
       f"median rel err: {np.median(np.abs(Zk - A @ B) / np.abs(A @ B)):.3f}")
 
-print("\n=== 3. End-to-end log-domain training (paper Sec. 4-5) ===")
+print("\n=== 3. Training on the kernel path (backward ⊞-MACs) ===")
+# The dispatcher selects the execution path by config, not by import:
+# backend="emulate" is the pure-jnp sequential MAC, backend="pallas" the
+# blocked TPU kernels (interpret mode on CPU) — bit-exact to each other.
+# The same switch reaches the paper MLP via
+#   run_experiment("lns", ..., matmul_backend="pallas").
+for be_name in ("emulate", "pallas"):
+    be = LNSMatmulBackend(fmt=fmt, spec=DELTA_DEFAULT, backend=be_name,
+                          block_m=8, block_n=8, block_k=16)
+    dy = encode(np.ones((4, 3), np.float32), fmt)
+    dx = be.matmul_dx(dy, encode(B, fmt))       # dY ⊞ Bᵀ, no transpose copy
+    print(f"backward dX on {be_name:7s}: first code = {int(dx.code[0, 0])}")
+
+# jax.grad flows through the same path via the custom_vjp boundary:
+import jax
+g = jax.grad(lambda a: lns_matmul_trainable(
+    a, B, fmt=fmt, spec=DELTA_SOFTMAX, backend="pallas", block_m=8,
+    block_n=8, block_k=16).sum())(A)
+print(f"jax.grad through the Pallas ⊞-MAC: gA.shape = {g.shape}")
+
+print("\n=== 4. End-to-end log-domain training (paper Sec. 4-5) ===")
 r = run_experiment("lns", "mnist", bits=16, approx="lut", epochs=1,
                    max_steps_per_epoch=80)
 print(f"LNS-16 LUT MLP, 80 steps: val acc {r.val_curve[-1]:.3f}")

@@ -2,7 +2,7 @@
 
 Sub-modules:
   formats        fixed-point format descriptors (+ eq. 15 bit-width bound)
-  lns            LNSArray pytree + float codecs
+  lns            LNSArray pytree + float codecs + matmul backend dispatcher
   delta          Δ± exact / LUT / bit-shift engines (paper Sec. 3)
   arithmetic     ⊡ ⊞ ⊟, reductions, emulated log-domain matmul (eq. 10)
   conversions    log ↔ linear fixed point (Mitchell / LUT / exact)
@@ -14,8 +14,8 @@ Sub-modules:
   qat            straight-through LNS quantization / emulated-MAC dot
   numerics       per-op numerics policy registry (fp32/bf16/lns*)
 """
-from .arithmetic import (boxabs_max, boxdiv, boxdot, boxminus, boxneg,
-                         boxplus, boxsum, lns_affine, lns_matmul)
+from .arithmetic import (bias_add, boxabs_max, boxdiv, boxdot, boxminus,
+                         boxneg, boxplus, boxsum, lns_affine, lns_matmul)
 from .activations import beta_code, llrelu, llrelu_grad
 from .conversions import code_to_lns, lns_value_to_code
 from .delta import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, DELTA_SOFTMAX,
@@ -25,8 +25,8 @@ from .formats import (FORMATS, FXP12, FXP16, LNS12, LNS16,
                       FixedPointFormat, LNSFormat, required_log_width)
 from .initializers import (encode_init, he_sigma, log_density_normal,
                            log_normal_init)
-from .lns import (LNSArray, decode, encode, from_parts, quantization_bound,
-                  scalar, zeros)
+from .lns import (LNSArray, LNSMatmulBackend, decode, encode, from_parts,
+                  quantization_bound, scalar, zeros)
 from .numerics import POLICIES, NumericsPolicy, get_policy
 from .qat import lns_dot_exact, lns_quantize_ste
 from .sgd import LogSGDConfig, apply_update, init_momentum

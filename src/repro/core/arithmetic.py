@@ -148,10 +148,14 @@ def lns_matmul(x: LNSArray, w: LNSArray, eng: DeltaEngine,
     return boxsum(prod, axis=prod.ndim - 2, eng=eng, order=order)
 
 
-def lns_affine(x: LNSArray, w: LNSArray, b: LNSArray, eng: DeltaEngine,
-               order: str = "pairwise") -> LNSArray:
-    """z = W x + b in the log domain (eq. 10 with bias)."""
-    z = lns_matmul(x, w, eng, order=order)
+def bias_add(z: LNSArray, b: LNSArray, eng: DeltaEngine) -> LNSArray:
+    """z ⊞ b with the bias broadcast over z's leading axes."""
     bb = LNSArray(jnp.broadcast_to(b.code, z.shape),
                   jnp.broadcast_to(b.sign, z.shape))
     return boxplus(z, bb, eng)
+
+
+def lns_affine(x: LNSArray, w: LNSArray, b: LNSArray, eng: DeltaEngine,
+               order: str = "pairwise") -> LNSArray:
+    """z = W x + b in the log domain (eq. 10 with bias)."""
+    return bias_add(lns_matmul(x, w, eng, order=order), b, eng)

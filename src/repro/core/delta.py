@@ -86,8 +86,11 @@ class DeltaEngine:
                 minus[1:] = np.round(
                     np.log2(-np.expm1(-d[1:] * np.log(2.0))) * fmt.scale
                 ).astype(np.int32)
-            self._tab_plus = jnp.asarray(plus)
-            self._tab_minus = jnp.asarray(minus)
+            # Kept as host numpy so engines may be constructed (and cached)
+            # inside jit traces without leaking tracers; uses convert on
+            # demand (jnp.take consumes numpy operands directly).
+            self._tab_plus = plus
+            self._tab_minus = minus
             self.d_max_code = int(round(spec.d_max * fmt.scale))
 
     # -- integer-code evaluation ------------------------------------------

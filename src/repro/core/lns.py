@@ -1,4 +1,4 @@
-"""LNS tensor type and float <-> LNS codecs.
+"""LNS tensor type, float <-> LNS codecs, and the matmul backend dispatcher.
 
 An :class:`LNSArray` carries two integer arrays of identical shape:
 
@@ -114,3 +114,105 @@ def quantization_bound(fmt: LNSFormat) -> float:
     |v̂ - v| / |v| <= 2^(2^-(qf+1)) - 1  (half-ulp of the log code).
     """
     return float(2.0 ** (0.5 / fmt.scale) - 1.0)
+
+
+# ------------------------------------------------------------------------
+# Matmul backend dispatcher
+# ------------------------------------------------------------------------
+_ENGINE_CACHE: dict = {}
+
+
+def _cached_engine(spec, fmt: LNSFormat):
+    key = (spec, fmt)  # both frozen dataclasses; name alone may collide
+    if key not in _ENGINE_CACHE:
+        from .delta import DeltaEngine
+        _ENGINE_CACHE[key] = DeltaEngine(spec, fmt)
+    return _ENGINE_CACHE[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class LNSMatmulBackend:
+    """Config-selected implementation of the ⊞-MAC matmul + its backward.
+
+    Callers pick the execution path by configuration instead of by import:
+
+    * ``backend="emulate"`` — pure-jnp emulation (``core.arithmetic``) with
+      ``order="sequential"``, the paper's scalar MAC pipeline;
+    * ``backend="pallas"``  — the blocked Pallas kernels
+      (``kernels/lns_matmul``), which reproduce the same sequential MAC
+      ordering **bit-exactly**, so the two backends are interchangeable down
+      to the last weight code.
+
+    All three products of the training step are covered (eqs. 10-14):
+
+    * ``matmul(x, w)``     Z  = X ⊞-MAC W          (forward)
+    * ``matmul_dx(dy, w)`` dX = dY ⊞-MAC Wᵀ       (backward, activations)
+    * ``matmul_dw(x, dy)`` dW = Xᵀ ⊞-MAC dY       (backward, weights)
+
+    ``interpret=None`` resolves at call time: interpret mode off only when a
+    real TPU backend is attached (on CPU the kernels run via the Pallas
+    interpreter for validation).  The dataclass is frozen/hashable so it can
+    be closed over by jit or passed as a static argument.
+    """
+
+    fmt: LNSFormat
+    spec: Any  # DeltaSpec
+    backend: str = "emulate"          # 'emulate' | 'pallas'
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        if self.backend not in ("emulate", "pallas"):
+            raise ValueError(
+                f"unknown matmul backend {self.backend!r}; "
+                "expected 'emulate' or 'pallas'")
+
+    def _interp(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def matmul(self, x: "LNSArray", w: "LNSArray") -> "LNSArray":
+        """Forward (M, K) ⊞-MAC (K, N) → (M, N), sequential over K."""
+        if self.backend == "pallas":
+            from ..kernels.lns_matmul import lns_matmul_kernel
+            return lns_matmul_kernel(
+                x, w, fmt=self.fmt, spec=self.spec, block_m=self.block_m,
+                block_n=self.block_n, block_k=self.block_k,
+                interpret=self._interp())
+        from .arithmetic import lns_matmul
+        return lns_matmul(x, w, _cached_engine(self.spec, self.fmt),
+                          order="sequential")
+
+    def matmul_dx(self, dy: "LNSArray", w: "LNSArray") -> "LNSArray":
+        """Backward dX = dY (M, N) ⊞-MAC Wᵀ (N, K), sequential over N."""
+        if self.backend == "pallas":
+            from ..kernels.lns_matmul import lns_matmul_dx_kernel
+            return lns_matmul_dx_kernel(
+                dy, w, fmt=self.fmt, spec=self.spec, block_m=self.block_m,
+                block_k=self.block_k, block_n=self.block_n,
+                interpret=self._interp())
+        from .arithmetic import lns_matmul
+        return lns_matmul(dy, w.T, _cached_engine(self.spec, self.fmt),
+                          order="sequential")
+
+    def matmul_dw(self, x: "LNSArray", dy: "LNSArray") -> "LNSArray":
+        """Backward dW = Xᵀ (K, M) ⊞-MAC dY (M, N), sequential over M."""
+        if self.backend == "pallas":
+            from ..kernels.lns_matmul import lns_matmul_dw_kernel
+            return lns_matmul_dw_kernel(
+                x, dy, fmt=self.fmt, spec=self.spec, block_k=self.block_k,
+                block_n=self.block_n, block_m=self.block_m,
+                interpret=self._interp())
+        from .arithmetic import lns_matmul
+        return lns_matmul(x.T, dy, _cached_engine(self.spec, self.fmt),
+                          order="sequential")
+
+    def affine(self, x: "LNSArray", w: "LNSArray", b: "LNSArray"
+               ) -> "LNSArray":
+        """z = x·W + b with the matmul on this backend's path."""
+        from .arithmetic import bias_add
+        return bias_add(self.matmul(x, w), b,
+                        _cached_engine(self.spec, self.fmt))

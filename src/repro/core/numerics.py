@@ -23,6 +23,8 @@ class NumericsPolicy:
     param_lns: Optional[LNSFormat] = None    # LNS grid for parameters
     act_lns: Optional[LNSFormat] = None      # LNS grid for activations
     exact_spec: Optional[DeltaSpec] = None   # if set: emulated ⊞-MAC forward
+    lns_grad: bool = False                   # if set: ⊞-MAC backward too
+    matmul_backend: str = "emulate"          # 'emulate' | 'pallas'
 
     @property
     def dtype(self):
@@ -42,6 +44,14 @@ class NumericsPolicy:
         """Contract x's last dim against w's first dim under this policy."""
         if self.exact_spec is not None:
             fmt = self.param_lns or LNS16
+            if self.lns_grad:
+                # Forward AND cotangent matmuls on the ⊞-MAC path
+                # (custom_vjp boundary in kernels/lns_matmul/ops.py); lazy
+                # import keeps core importable without the kernels package.
+                from ..kernels.lns_matmul import lns_matmul_trainable
+                return lns_matmul_trainable(
+                    x, w, fmt=fmt, spec=self.exact_spec,
+                    backend=self.matmul_backend)
             return lns_dot_exact(x, w, fmt, self.exact_spec)
         return jnp.matmul(self.q_act(x), self.q_param(w))
 
@@ -58,6 +68,17 @@ POLICIES = {
     "lns16-exact": NumericsPolicy(
         "lns16-exact", compute_dtype="float32", param_lns=LNS16,
         act_lns=LNS16, exact_spec=DELTA_DEFAULT),
+    # End-to-end log-domain training: gradients run the transposed ⊞-MACs
+    # (dX = dY ⊞ Wᵀ, dW = Xᵀ ⊞ dY) instead of straight-through float
+    # matmuls — the hardware-shaped path of Hamad et al.
+    "lns16-train-emulate": NumericsPolicy(
+        "lns16-train-emulate", compute_dtype="float32", param_lns=LNS16,
+        act_lns=LNS16, exact_spec=DELTA_DEFAULT, lns_grad=True,
+        matmul_backend="emulate"),
+    "lns16-train-pallas": NumericsPolicy(
+        "lns16-train-pallas", compute_dtype="float32", param_lns=LNS16,
+        act_lns=LNS16, exact_spec=DELTA_DEFAULT, lns_grad=True,
+        matmul_backend="pallas"),
 }
 
 

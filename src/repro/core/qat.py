@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from .arithmetic import lns_matmul
 from .delta import DeltaEngine, DeltaSpec
 from .formats import LNSFormat
-from .lns import decode, encode
+from .lns import _cached_engine, decode, encode
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1,))
@@ -45,14 +45,8 @@ def _q_bwd(fmt, _res, g):
 lns_quantize_ste.defvjp(_q_fwd, _q_bwd)
 
 
-_ENGINES: dict = {}
-
-
 def _engine(spec: DeltaSpec, fmt: LNSFormat) -> DeltaEngine:
-    key = (spec, fmt.name)
-    if key not in _ENGINES:
-        _ENGINES[key] = DeltaEngine(spec, fmt)
-    return _ENGINES[key]
+    return _cached_engine(spec, fmt)  # shared cache in core.lns
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2, 3))

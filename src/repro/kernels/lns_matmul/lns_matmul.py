@@ -1,17 +1,34 @@
-"""Pallas TPU kernel for the LNS ⊞-MAC matmul (paper eq. 10).
+"""Pallas TPU kernels for the LNS ⊞-MAC matmul and its backward pass.
 
 TPU adaptation of the paper's multiplication-free MAC (DESIGN.md §3):
 the MXU cannot be used (there is no multiply to feed it); instead the
-max+Δ accumulation is vectorized on the VPU over (bm, bn) tiles held in
-VMEM, with the Δ± LUTs resident in VMEM (20–640 int32 entries).  The K
-dimension is walked *sequentially* — the innermost grid axis revisits the
-output tile, carrying the accumulator in VMEM scratch — which reproduces the
-paper's sequential MAC ordering bit-exactly (see ref.py).
+max+Δ accumulation is vectorized on the VPU over output tiles held in
+VMEM, with the Δ± LUTs resident in VMEM (20–640 int32 entries).  The
+contraction dimension is walked *sequentially* — the innermost grid axis
+revisits the output tile, carrying the accumulator in VMEM scratch — which
+reproduces the paper's sequential MAC ordering bit-exactly (see ref.py).
 
-Block shapes are VPU/VMEM-aligned (multiples of (8, 128) for int32 tiles).
-VMEM footprint per step ≈ 2·(bm·bk + bk·bn + 2·bm·bn)·4 B; the default
-(128, 128, 128) uses ≈ 0.5 MiB — far below the ~16 MiB/core budget, leaving
-room for double-buffered HBM→VMEM pipelining by the Mosaic compiler.
+Three entry points share one kernel body (``_mac_kernel``), parameterized
+only by which axis of each operand is contracted:
+
+* ``lns_matmul_pallas``     Z[m,n]  = ⊞_k X[m,k] ⊡ W[k,n]   (forward, eq. 10)
+* ``lns_matmul_dx_pallas``  dX[m,k] = ⊞_n dY[m,n] ⊡ W[k,n]  (= dY ⊞ Wᵀ)
+* ``lns_matmul_dw_pallas``  dW[k,n] = ⊞_m X[m,k] ⊡ dY[m,n]  (= Xᵀ ⊞ dY)
+
+The backward kernels realize the transposed MACs of eqs. (10)-(14) without
+materializing a transpose: the BlockSpec index maps read W / X blocks in
+their stored layout and the in-kernel loop slices the contraction axis
+directly.  This is the hardware-shaped training path of Hamad et al.
+("Bitwidth-Specific Logarithmic Arithmetic for ... Training"): forward and
+backward matmuls run the same shifter/LUT datapath.
+
+Block shapes are VPU/VMEM-aligned (multiples of (8, 128) for int32 tiles)
+on real TPUs; interpret mode accepts any blocking.  VMEM footprint per step
+≈ 2·(b_r·b_c + b_r·b_ct + b_ct·b_c)·4 B; the default (128, 128, 128) uses
+≈ 0.5 MiB — far below the ~16 MiB/core budget, leaving room for
+double-buffered HBM→VMEM pipelining by the Mosaic compiler.  The backward
+tiles use the same budget (the dX kernel holds (b_m·b_n)+(b_k·b_n) inputs
+plus 2·(b_m·b_k) accumulator planes).
 
 Signs are carried as int32 planes (0 = positive, 1 = negative): narrow int8
 lanes buy nothing on the VPU and complicate tiling.
@@ -83,71 +100,98 @@ def _boxplus_codes(ac, asn, bc, bsn, delta_fn, fmt: LNSFormat):
     return code, sign
 
 
-def _kernel(tabp_ref, tabm_ref, xc_ref, xs_ref, wc_ref, ws_ref,
-            zc_ref, zs_ref, accc_ref, accs_ref, *,
-            fmt: LNSFormat, spec: DeltaSpec, nk: int, bk: int,
-            r_code: int, underflow: int):
-    k_step = pl.program_id(2)
+def _make_delta_fn(tabp_ref, tabm_ref, *, fmt: LNSFormat, spec: DeltaSpec,
+                   r_code: int, underflow: int):
+    if spec.kind == "bitshift":
+        return lambda d, same: _delta_bitshift(
+            d, same, qf=fmt.qf, underflow=np.int32(underflow))
+    if spec.kind == "exact":
+        return lambda d, same: _delta_exact(
+            d, same, scale=fmt.scale, underflow=np.int32(underflow))
+    return lambda d, same: _delta_from_tables(
+        d, tabp_ref[...], tabm_ref[...], same, r_code=r_code,
+        n_tab=spec.table_size, underflow=np.int32(underflow))
 
-    @pl.when(k_step == 0)
+
+def _mac_kernel(tabp_ref, tabm_ref, ac_ref, as_ref, bc_ref, bs_ref,
+                zc_ref, zs_ref, accc_ref, accs_ref, *,
+                fmt: LNSFormat, spec: DeltaSpec, n_ct: int, b_ct: int,
+                r_code: int, underflow: int,
+                a_contract_axis: int, b_contract_axis: int):
+    """Generic sequential ⊞-MAC over one contraction tile.
+
+    The output tile is the outer product of A's non-contracted axis (rows)
+    and B's non-contracted axis (columns); ``*_contract_axis`` selects which
+    axis of each VMEM-resident operand block the fori_loop walks.
+    """
+    ct_step = pl.program_id(2)
+
+    @pl.when(ct_step == 0)
     def _init():
         accc_ref[...] = jnp.full_like(accc_ref, np.int32(fmt.zero_code))
         accs_ref[...] = jnp.zeros_like(accs_ref)
 
     zero = np.int32(fmt.zero_code)
-    if spec.kind == "bitshift":
-        def delta(d, same):
-            return _delta_bitshift(d, same, qf=fmt.qf,
-                                   underflow=np.int32(underflow))
-    elif spec.kind == "exact":
-        def delta(d, same):
-            return _delta_exact(d, same, scale=fmt.scale,
-                                underflow=np.int32(underflow))
-    else:
-        def delta(d, same):
-            return _delta_from_tables(
-                d, tabp_ref[...], tabm_ref[...], same, r_code=r_code,
-                n_tab=spec.table_size, underflow=np.int32(underflow))
+    delta = _make_delta_fn(tabp_ref, tabm_ref, fmt=fmt, spec=spec,
+                           r_code=r_code, underflow=underflow)
 
-    xc = xc_ref[...]
-    xs = xs_ref[...]
-    wc = wc_ref[...]
-    ws = ws_ref[...]
+    acode = ac_ref[...]
+    asign = as_ref[...]
+    bcode = bc_ref[...]
+    bsign = bs_ref[...]
 
     def body(i, carry):
         acc_c, acc_s = carry
-        # product column i of this K-tile: (bm, 1) ⊡ (1, bn)
-        pc = xc[:, i][:, None] + wc[i, :][None, :]
-        pz = (xc[:, i][:, None] == zero) | (wc[i, :][None, :] == zero)
+        # Contraction slice i of this tile: (b_r, 1) ⊡ (1, b_c).
+        if a_contract_axis == 1:
+            a_c, a_s = acode[:, i], asign[:, i]
+        else:
+            a_c, a_s = acode[i, :], asign[i, :]
+        if b_contract_axis == 0:
+            b_c, b_s = bcode[i, :], bsign[i, :]
+        else:
+            b_c, b_s = bcode[:, i], bsign[:, i]
+        pc = a_c[:, None] + b_c[None, :]
+        pz = (a_c[:, None] == zero) | (b_c[None, :] == zero)
         pc = jnp.minimum(pc, fmt.code_max)
         pc = jnp.where(pc < fmt.min_nonzero_code, zero, pc)
         pc = jnp.where(pz, zero, pc)
-        ps = jnp.where(pz, 0, xs[:, i][:, None] ^ ws[i, :][None, :])
+        ps = jnp.where(pz, 0, a_s[:, None] ^ b_s[None, :])
         return _boxplus_codes(acc_c, acc_s, pc, ps, delta, fmt)
 
     acc_c, acc_s = jax.lax.fori_loop(
-        0, bk, body, (accc_ref[...], accs_ref[...]))
+        0, b_ct, body, (accc_ref[...], accs_ref[...]))
     accc_ref[...] = acc_c
     accs_ref[...] = acc_s
 
-    @pl.when(k_step == nk - 1)
+    @pl.when(ct_step == n_ct - 1)
     def _flush():
         zc_ref[...] = acc_c
         zs_ref[...] = acc_s
 
 
-def lns_matmul_pallas(x_code, x_sign, w_code, w_sign, *,
-                      fmt: LNSFormat, spec: DeltaSpec,
-                      block_m: int = 128, block_n: int = 128,
-                      block_k: int = 128, interpret: bool = True):
-    """Blocked LNS matmul on (code, sign) int32 planes.
+def _pad2(code, sign, pad_r, pad_c, zero):
+    if pad_r or pad_c:
+        code = jnp.pad(code, ((0, pad_r), (0, pad_c)), constant_values=zero)
+        sign = jnp.pad(sign, ((0, pad_r), (0, pad_c)))
+    return code, sign
 
-    x: (M, K), w: (K, N); M/N/K need not be multiples of the block sizes
-    (inputs are padded with the zero code, which is the ⊞ identity).
+
+def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
+                spec: DeltaSpec, a_contract_axis: int, b_contract_axis: int,
+                block_r: int, block_c: int, block_ct: int, interpret: bool):
+    """Shared pallas_call launcher for the three ⊞-MAC kernels.
+
+    ``a``'s non-contracted axis produces output rows (R), ``b``'s produces
+    output columns (C); the contraction length (CT) must agree.  R/C/CT need
+    not be multiples of the block sizes (inputs are padded with the zero
+    code, which is the ⊞ identity).
     """
-    m, k = x_code.shape
-    k2, n = w_code.shape
-    assert k == k2, (x_code.shape, w_code.shape)
+    a_r_axis = 1 - a_contract_axis
+    b_c_axis = 1 - b_contract_axis
+    r, ct = a_code.shape[a_r_axis], a_code.shape[a_contract_axis]
+    c, ct2 = b_code.shape[b_c_axis], b_code.shape[b_contract_axis]
+    assert ct == ct2, (a_code.shape, b_code.shape)
     eng = DeltaEngine(spec, fmt)  # builds/validates tables
     if spec.kind == "lut":
         tabp = jnp.asarray(eng._tab_plus, jnp.int32)
@@ -159,48 +203,102 @@ def lns_matmul_pallas(x_code, x_sign, w_code, w_sign, *,
         r_code = 1
     underflow = int(eng.underflow)
 
-    pad_m = (-m) % block_m
-    pad_n = (-n) % block_n
-    pad_k = (-k) % block_k
     zc = np.int32(fmt.zero_code)
-    if pad_m or pad_k:
-        x_code = jnp.pad(x_code, ((0, pad_m), (0, pad_k)), constant_values=zc)
-        x_sign = jnp.pad(x_sign, ((0, pad_m), (0, pad_k)))
-    if pad_k or pad_n:
-        w_code = jnp.pad(w_code, ((0, pad_k), (0, pad_n)), constant_values=zc)
-        w_sign = jnp.pad(w_sign, ((0, pad_k), (0, pad_n)))
-    mp, kp = x_code.shape
-    _, np_ = w_code.shape
-    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    pad_r = (-r) % block_r
+    pad_c = (-c) % block_c
+    pad_ct = (-ct) % block_ct
+    if a_contract_axis == 1:
+        a_code, a_sign = _pad2(a_code, a_sign, pad_r, pad_ct, zc)
+        a_block = (block_r, block_ct)
+        a_index = lambda i, j, s: (i, s)
+    else:
+        a_code, a_sign = _pad2(a_code, a_sign, pad_ct, pad_r, zc)
+        a_block = (block_ct, block_r)
+        a_index = lambda i, j, s: (s, i)
+    if b_contract_axis == 0:
+        b_code, b_sign = _pad2(b_code, b_sign, pad_ct, pad_c, zc)
+        b_block = (block_ct, block_c)
+        b_index = lambda i, j, s: (s, j)
+    else:
+        b_code, b_sign = _pad2(b_code, b_sign, pad_c, pad_ct, zc)
+        b_block = (block_c, block_ct)
+        b_index = lambda i, j, s: (j, s)
+
+    rp, cp, ctp = r + pad_r, c + pad_c, ct + pad_ct
+    grid = (rp // block_r, cp // block_c, ctp // block_ct)
 
     kernel = functools.partial(
-        _kernel, fmt=fmt, spec=spec, nk=grid[2], bk=block_k,
-        r_code=r_code, underflow=underflow)
+        _mac_kernel, fmt=fmt, spec=spec, n_ct=grid[2], b_ct=block_ct,
+        r_code=r_code, underflow=underflow,
+        a_contract_axis=a_contract_axis, b_contract_axis=b_contract_axis)
 
-    tab_spec = pl.BlockSpec(tabp.shape, lambda i, j, kk: (0,))
+    tab_spec = pl.BlockSpec(tabp.shape, lambda i, j, s: (0,))
     out_shape = [
-        jax.ShapeDtypeStruct((mp, np_), jnp.int32),
-        jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        jax.ShapeDtypeStruct((rp, cp), jnp.int32),
+        jax.ShapeDtypeStruct((rp, cp), jnp.int32),
     ]
     zcodes, zsigns = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             tab_spec, tab_spec,
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(a_block, a_index),
+            pl.BlockSpec(a_block, a_index),
+            pl.BlockSpec(b_block, b_index),
+            pl.BlockSpec(b_block, b_index),
         ],
         out_specs=[
-            pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-            pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
         ],
         out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((block_m, block_n), jnp.int32),
-            pltpu.VMEM((block_m, block_n), jnp.int32),
+            pltpu.VMEM((block_r, block_c), jnp.int32),
+            pltpu.VMEM((block_r, block_c), jnp.int32),
         ],
         interpret=interpret,
-    )(tabp, tabm, x_code, x_sign, w_code, w_sign)
-    return zcodes[:m, :n], zsigns[:m, :n]
+    )(tabp, tabm, a_code, a_sign, b_code, b_sign)
+    return zcodes[:r, :c], zsigns[:r, :c]
+
+
+def lns_matmul_pallas(x_code, x_sign, w_code, w_sign, *,
+                      fmt: LNSFormat, spec: DeltaSpec,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = True):
+    """Forward: x (M, K) ⊞-MAC w (K, N) → (M, N), sequential over K."""
+    return _launch_mac(x_code, x_sign, w_code, w_sign, fmt=fmt, spec=spec,
+                       a_contract_axis=1, b_contract_axis=0,
+                       block_r=block_m, block_c=block_n, block_ct=block_k,
+                       interpret=interpret)
+
+
+def lns_matmul_dx_pallas(dy_code, dy_sign, w_code, w_sign, *,
+                         fmt: LNSFormat, spec: DeltaSpec,
+                         block_m: int = 128, block_k: int = 128,
+                         block_n: int = 128, interpret: bool = True):
+    """Backward wrt activations: dY (M, N) ⊞-MAC Wᵀ → dX (M, K).
+
+    W is read in its stored (K, N) layout; the contraction walks N
+    sequentially (ascending), matching ``lns_matmul(dY, Wᵀ)`` with
+    ``order="sequential"`` bit-exactly.
+    """
+    return _launch_mac(dy_code, dy_sign, w_code, w_sign, fmt=fmt, spec=spec,
+                       a_contract_axis=1, b_contract_axis=1,
+                       block_r=block_m, block_c=block_k, block_ct=block_n,
+                       interpret=interpret)
+
+
+def lns_matmul_dw_pallas(x_code, x_sign, dy_code, dy_sign, *,
+                         fmt: LNSFormat, spec: DeltaSpec,
+                         block_k: int = 128, block_n: int = 128,
+                         block_m: int = 128, interpret: bool = True):
+    """Backward wrt weights: Xᵀ ⊞-MAC dY (M, N) → dW (K, N).
+
+    X is read in its stored (M, K) layout; the contraction walks the batch
+    dimension M sequentially (ascending), matching ``lns_matmul(Xᵀ, dY)``
+    with ``order="sequential"`` bit-exactly.
+    """
+    return _launch_mac(x_code, x_sign, dy_code, dy_sign, fmt=fmt, spec=spec,
+                       a_contract_axis=0, b_contract_axis=0,
+                       block_r=block_k, block_c=block_n, block_ct=block_m,
+                       interpret=interpret)

@@ -1,4 +1,12 @@
-"""Jit'd public wrapper around the LNS matmul Pallas kernel."""
+"""Jit'd public wrappers around the LNS matmul Pallas kernels, plus the
+differentiable ``lns_matmul_trainable`` op.
+
+``lns_matmul_trainable`` is the custom_vjp boundary between JAX autodiff and
+the log-domain arithmetic: the primal and both cotangent matmuls run the
+⊞-MAC path (emulated or Pallas, per :class:`~repro.core.lns.LNSMatmulBackend`),
+so ``jax.grad`` through a model using it trains on the same hardware-shaped
+datapath as the paper's hand backprop.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,18 +15,25 @@ import jax
 
 from ...core.delta import DeltaSpec
 from ...core.formats import LNSFormat
-from ...core.lns import LNSArray
-from .lns_matmul import lns_matmul_pallas
+from ...core.lns import LNSArray, LNSMatmulBackend, decode, encode
+from .lns_matmul import (lns_matmul_dw_pallas, lns_matmul_dx_pallas,
+                         lns_matmul_pallas)
 
 
-@partial(jax.jit, static_argnames=("fmt", "spec", "block_m", "block_n",
-                                   "block_k", "interpret"))
-def _call(x_code, x_sign, w_code, w_sign, fmt, spec,
-          block_m, block_n, block_k, interpret):
-    return lns_matmul_pallas(
-        x_code, x_sign.astype("int32"), w_code, w_sign.astype("int32"),
-        fmt=fmt, spec=spec, block_m=block_m, block_n=block_n,
-        block_k=block_k, interpret=interpret)
+@partial(jax.jit, static_argnames=("kind", "fmt", "spec", "block_r",
+                                   "block_c", "block_ct", "interpret"))
+def _call(kind, a_code, a_sign, b_code, b_sign, fmt, spec,
+          block_r, block_c, block_ct, interpret):
+    fn = {"fwd": lns_matmul_pallas,
+          "dx": lns_matmul_dx_pallas,
+          "dw": lns_matmul_dw_pallas}[kind]
+    kw = {"fwd": dict(block_m=block_r, block_n=block_c, block_k=block_ct),
+          "dx": dict(block_m=block_r, block_k=block_c, block_n=block_ct),
+          "dw": dict(block_k=block_r, block_n=block_c, block_m=block_ct),
+          }[kind]
+    return fn(a_code, a_sign.astype("int32"), b_code,
+              b_sign.astype("int32"), fmt=fmt, spec=spec,
+              interpret=interpret, **kw)
 
 
 def lns_matmul_kernel(x: LNSArray, w: LNSArray, *, fmt: LNSFormat,
@@ -30,6 +45,78 @@ def lns_matmul_kernel(x: LNSArray, w: LNSArray, *, fmt: LNSFormat,
     ``interpret=True`` (default here) runs the kernel body on CPU for
     validation; on real TPU hardware pass ``interpret=False``.
     """
-    code, sign = _call(x.code, x.sign, w.code, w.sign, fmt, spec,
+    code, sign = _call("fwd", x.code, x.sign, w.code, w.sign, fmt, spec,
                        block_m, block_n, block_k, interpret)
     return LNSArray(code, sign.astype("int8"))
+
+
+def lns_matmul_dx_kernel(dy: LNSArray, w: LNSArray, *, fmt: LNSFormat,
+                         spec: DeltaSpec, block_m: int = 128,
+                         block_k: int = 128, block_n: int = 128,
+                         interpret: bool = True) -> LNSArray:
+    """Backward-activation kernel: dY (M, N) ⊞-MAC Wᵀ → dX (M, K)."""
+    code, sign = _call("dx", dy.code, dy.sign, w.code, w.sign, fmt, spec,
+                       block_m, block_k, block_n, interpret)
+    return LNSArray(code, sign.astype("int8"))
+
+
+def lns_matmul_dw_kernel(x: LNSArray, dy: LNSArray, *, fmt: LNSFormat,
+                         spec: DeltaSpec, block_k: int = 128,
+                         block_n: int = 128, block_m: int = 128,
+                         interpret: bool = True) -> LNSArray:
+    """Backward-weight kernel: Xᵀ ⊞-MAC dY (M, N) → dW (K, N)."""
+    code, sign = _call("dw", x.code, x.sign, dy.code, dy.sign, fmt, spec,
+                       block_k, block_n, block_m, interpret)
+    return LNSArray(code, sign.astype("int8"))
+
+
+# ------------------------------------------------------------------------
+# Differentiable op: LNS forward AND backward under jax.grad
+# ------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _trainable(x, w, be: LNSMatmulBackend):
+    z = be.matmul(encode(x, be.fmt), encode(w, be.fmt))
+    return decode(z, be.fmt)
+
+
+def _trainable_fwd(x, w, be):
+    xq, wq = encode(x, be.fmt), encode(w, be.fmt)
+    z = be.matmul(xq, wq)
+    # Residuals are the already-encoded operands: the backward ⊞-MACs
+    # consume LNS codes directly, so re-encoding would be pure waste.
+    return decode(z, be.fmt), (xq, wq)
+
+
+def _trainable_bwd(be, res, g):
+    xq, wq = res
+    f = be.fmt
+    dy = encode(g, f)
+    dx = be.matmul_dx(dy, wq)
+    dw = be.matmul_dw(xq, dy)
+    return decode(dx, f), decode(dw, f)
+
+
+_trainable.defvjp(_trainable_fwd, _trainable_bwd)
+
+
+def lns_matmul_trainable(x, w, *, fmt: LNSFormat, spec: DeltaSpec,
+                         backend: str = "pallas",
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 128,
+                         interpret: bool | None = None):
+    """Differentiable float-view matmul on the log-domain MAC path.
+
+    ``x``: (..., K) float, ``w``: (K, N) float.  Forward encodes both
+    operands to LNS, runs the ⊞-MAC matmul on the selected backend, and
+    decodes; the VJP encodes the cotangent and runs the *transposed* ⊞-MACs
+    (dX = dY ⊞ Wᵀ, dW = Xᵀ ⊞ dY) on the same path — no float matmul in
+    either direction.  Every later scaling PR (sharded training, batched
+    serving on the kernel path) composes with this boundary.
+    """
+    be = LNSMatmulBackend(fmt=fmt, spec=spec, backend=backend,
+                          block_m=block_m, block_n=block_n, block_k=block_k,
+                          interpret=interpret)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    z = _trainable(x2, w, be)
+    return z.reshape(lead + (w.shape[-1],))

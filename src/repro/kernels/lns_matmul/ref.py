@@ -1,9 +1,10 @@
-"""Pure-jnp oracle for the LNS matmul Pallas kernel.
+"""Pure-jnp oracles for the LNS matmul Pallas kernels (forward + backward).
 
-The kernel accumulates sequentially over the *entire* K dimension (the
-innermost grid axis revisits the output tile, and the in-tile fori_loop walks
-k ascending), so the oracle is ``core.arithmetic.lns_matmul`` with
-``order="sequential"`` — the comparison is **bit-exact**, not approximate.
+The kernels accumulate sequentially over the *entire* contraction dimension
+(the innermost grid axis revisits the output tile, and the in-tile fori_loop
+walks the contraction ascending), so every oracle is
+``core.arithmetic.lns_matmul`` with ``order="sequential"`` on suitably
+transposed operands — the comparison is **bit-exact**, not approximate.
 """
 from __future__ import annotations
 
@@ -13,10 +14,31 @@ from ...core.formats import LNSFormat
 from ...core.lns import LNSArray
 
 
+def _mm(a_code, a_sign, b_code, b_sign, fmt, spec, *, t_a=False, t_b=False):
+    eng = DeltaEngine(spec, fmt)
+    a = LNSArray(a_code, a_sign.astype("int8"))
+    b = LNSArray(b_code, b_sign.astype("int8"))
+    if t_a:
+        a = a.T
+    if t_b:
+        b = b.T
+    z = lns_matmul(a, b, eng, order="sequential")
+    return z.code, z.sign.astype("int32")
+
+
 def lns_matmul_ref(x_code, x_sign, w_code, w_sign, *, fmt: LNSFormat,
                    spec: DeltaSpec):
-    eng = DeltaEngine(spec, fmt)
-    x = LNSArray(x_code, x_sign.astype("int8"))
-    w = LNSArray(w_code, w_sign.astype("int8"))
-    z = lns_matmul(x, w, eng, order="sequential")
-    return z.code, z.sign.astype("int32")
+    """Forward oracle: Z = X ⊞-MAC W, sequential over K."""
+    return _mm(x_code, x_sign, w_code, w_sign, fmt, spec)
+
+
+def lns_matmul_dx_ref(dy_code, dy_sign, w_code, w_sign, *, fmt: LNSFormat,
+                      spec: DeltaSpec):
+    """Backward-activation oracle: dX = dY ⊞-MAC Wᵀ, sequential over N."""
+    return _mm(dy_code, dy_sign, w_code, w_sign, fmt, spec, t_b=True)
+
+
+def lns_matmul_dw_ref(x_code, x_sign, dy_code, dy_sign, *, fmt: LNSFormat,
+                      spec: DeltaSpec):
+    """Backward-weight oracle: dW = Xᵀ ⊞-MAC dY, sequential over M."""
+    return _mm(x_code, x_sign, dy_code, dy_sign, fmt, spec, t_a=True)

@@ -9,6 +9,13 @@
 
 Backprop follows eq. (10)-(14): δ2 = P ⊟ Y, gW2 = a1ᵀ ⊡⊞ δ2, δ1 =
 (δ2 ⊡⊞ W2ᵀ) ⊡ llReLU'(z1), gW1 = xᵀ ⊡⊞ δ1, SGD per core/sgd.py.
+
+All LNS matmuls (forward *and* the three backward products) route through
+:class:`~repro.core.lns.LNSMatmulBackend`, selected by
+``MLPConfig.matmul_backend``: ``"emulate"`` runs the pure-jnp sequential
+MAC, ``"pallas"`` the blocked TPU kernels (interpret mode on CPU).  The
+two backends are bit-exact down to the last weight code, so experiments
+validated on one transfer to the other unchanged.
 """
 from __future__ import annotations
 
@@ -22,11 +29,11 @@ import numpy as np
 
 from ..core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
                     DELTA_SOFTMAX, FXP12, FXP16, LNS12, LNS16, DeltaEngine,
-                    DeltaSpec, LNSArray, LogSGDConfig, apply_update,
-                    beta_code, boxabs_max, boxdot, boxsum, ce_grad_init,
-                    ce_loss_readout, decode, encode, he_sigma, llrelu,
-                    llrelu_grad, lns_affine, lns_matmul, log_normal_init,
-                    log_softmax_lns, scalar, zeros)
+                    DeltaSpec, LNSArray, LNSMatmulBackend, LogSGDConfig,
+                    apply_update, beta_code, boxabs_max, boxdot, boxsum,
+                    ce_grad_init, ce_loss_readout, decode, encode, he_sigma,
+                    llrelu, llrelu_grad, log_normal_init, log_softmax_lns,
+                    scalar, zeros)
 from ..core.linear_fixed import (fxp_affine, fxp_decode, fxp_encode,
                                  fxp_leaky_relu, fxp_leaky_relu_grad,
                                  fxp_matmul, fxp_mul, fxp_sat)
@@ -46,6 +53,8 @@ class MLPConfig:
     approx: str = "lut"            # 'lut' | 'bitshift' | 'exact' (lns only)
     stochastic_round: bool = False  # fxp only: SR on the weight update
                                     # (Gupta et al. 2015; beyond-paper)
+    matmul_backend: str = "emulate"  # lns only: 'emulate' | 'pallas'
+    matmul_block: int = 32          # kernel tile edge; ≥128 on real TPUs
 
     @property
     def lns_fmt(self):
@@ -213,6 +222,12 @@ class LNSMLP:
         self.eng_sm = DeltaEngine(cfg.softmax_spec, self.fmt)
         self.beta = beta_code(ALPHA, self.fmt)
         self.sgd = LogSGDConfig(lr=cfg.lr, weight_decay=cfg.weight_decay)
+        # All four training matmuls (fwd ×2, dX, dW) go through the
+        # dispatcher; emulate and pallas agree bit-exactly (sequential MAC).
+        self.mm = LNSMatmulBackend(
+            fmt=self.fmt, spec=cfg.delta_spec, backend=cfg.matmul_backend,
+            block_m=cfg.matmul_block, block_n=cfg.matmul_block,
+            block_k=cfg.matmul_block)
 
     def init(self, key):
         k1, k2 = jax.random.split(key)
@@ -226,9 +241,9 @@ class LNSMLP:
         )
 
     def _forward(self, params, x: LNSArray):
-        z1 = lns_affine(x, params["w1"], params["b1"], self.eng)
+        z1 = self.mm.affine(x, params["w1"], params["b1"])
         a1 = llrelu(z1, self.beta, self.fmt)
-        z2 = lns_affine(a1, params["w2"], params["b2"], self.eng)
+        z2 = self.mm.affine(a1, params["w2"], params["b2"])
         return z1, a1, z2
 
     @functools.partial(jax.jit, static_argnums=0)
@@ -239,11 +254,13 @@ class LNSMLP:
         p = log_softmax_lns(z2, self.eng_sm)
         d2 = ce_grad_init(p, yb, f, self.eng_sm)          # (B, K)
         # Sum-reduction over the minibatch, matching the fxp baseline.
-        gw2 = lns_matmul(a1.T, d2, eng)
+        # The transposed MACs run on the dispatcher's backward path
+        # (Pallas kernels when matmul_backend="pallas").
+        gw2 = self.mm.matmul_dw(a1, d2)
         gb2 = boxsum(d2, 0, eng)
-        bp = lns_matmul(d2, params["w2"].T, eng)          # (B, H)
+        bp = self.mm.matmul_dx(d2, params["w2"])          # (B, H)
         d1 = boxdot(bp, llrelu_grad(z1, self.beta, f), f)
-        gw1 = lns_matmul(x.T, d1, eng)
+        gw1 = self.mm.matmul_dw(x, d1)
         gb1 = boxsum(d1, 0, eng)
         grads = dict(w1=gw1, b1=gb1, w2=gw2, b2=gb2)
         params, _ = apply_update(params, grads, None, self.sgd, eng)

@@ -47,6 +47,7 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
                    batch_size: int = 5, lr: float = 0.01,
                    weight_decay: float | None = None, seed: int = 0,
                    data_dir: str = "data", stochastic_round: bool = False,
+                   matmul_backend: str = "emulate",
                    max_steps_per_epoch: int | None = None) -> RunResult:
     """Train the paper MLP with one backend; returns learning curve + acc.
 
@@ -54,13 +55,18 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
     validation holdout.  ``epochs``/dataset size are reduced by default to
     fit this container's CPU budget (the LNS path emulates every ⊞ in
     integer ops); pass epochs=20 and real IDX data for the full protocol.
+
+    ``matmul_backend`` (lns backend only) selects the ⊞-MAC execution path:
+    ``"emulate"`` (pure jnp) or ``"pallas"`` (the TPU kernels; interpret
+    mode on CPU).  Both produce bit-identical weight trajectories.
     """
     x, yl, x_te, y_te, spec = datasets.load(dataset, data_dir, seed)
     x_tr, y_tr, x_val, y_val = datasets.train_val_split(x, yl, 5, seed)
     wd = WEIGHT_DECAY[bits] if weight_decay is None else weight_decay
     cfg = MLPConfig(n_out=spec.n_classes, lr=lr, weight_decay=wd,
                     bits=bits, approx=approx,
-                    stochastic_round=stochastic_round)
+                    stochastic_round=stochastic_round,
+                    matmul_backend=matmul_backend)
     model = make_mlp(backend, cfg)
     params = model.init(jax.random.PRNGKey(seed))
 

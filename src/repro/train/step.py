@@ -26,6 +26,8 @@ class TrainConfig:
     grad_clip: float = 0.0           # global-norm clip; 0 = off
     compress_grads: bool = False     # log-int8 roundtrip + error feedback
     loss_dtype: str = "float32"
+    matmul_backend: Optional[str] = None  # 'emulate' | 'pallas': overrides
+                                     # the ⊞-MAC path of lns*-train policies
 
 
 def init_train_state(params, opt_cfg: OptimizerConfig,
@@ -52,6 +54,22 @@ def _clip(grads, max_norm):
 def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
                     rt: Runtime = Runtime(),
                     tc: TrainConfig = TrainConfig()):
+    if tc.matmul_backend is not None:
+        # Re-point an LNS end-to-end training policy at the requested
+        # ⊞-MAC backend (emulated jnp vs Pallas kernels) without the
+        # caller having to know the policy-name convention.  Works for any
+        # lns*-train-<backend> policy family (the backend is the trailing
+        # name segment); get_policy raises if the sibling doesn't exist.
+        from ..core.numerics import get_policy
+        if tc.matmul_backend not in ("emulate", "pallas"):
+            raise ValueError(f"matmul_backend={tc.matmul_backend!r}")
+        if not get_policy(cfg.numerics).lns_grad:
+            raise ValueError(
+                f"TrainConfig.matmul_backend requires an LNS end-to-end "
+                f"training policy (lns_grad=True), got {cfg.numerics!r}")
+        target = cfg.numerics.rsplit("-", 1)[0] + "-" + tc.matmul_backend
+        get_policy(target)  # fail fast with the known-policies message
+        cfg = cfg.with_(numerics=target)
     _, opt_update = make_optimizer(opt_cfg)
 
     def grads_of(params, batch):

@@ -1,11 +1,138 @@
-"""Shared test fixtures.
+"""Shared test fixtures + optional-dependency shims.
 
 NOTE: XLA_FLAGS / host device count is deliberately NOT set here — smoke
 tests and benchmarks must see the single real CPU device.  Only
 ``repro/launch/dryrun.py`` forces 512 placeholder devices.
+
+``hypothesis`` is an *optional* dependency: when it is not installed, a
+small shim is registered under ``sys.modules['hypothesis']`` before test
+collection, degrading ``@given`` to a fixed-seed sampled sweep (bounded at
+:data:`_SHIM_MAX_EXAMPLES` cases per test).  Property tests therefore stay
+collectable and meaningful — deterministic spot checks instead of adaptive
+search — without adding a pip dependency to the tier-1 environment.
 """
+import functools
+import inspect
+import sys
+import types
+import zlib
+
 import numpy as np
 import pytest
+
+_SHIM_MAX_EXAMPLES = 32  # cap per test when running on the shim
+
+
+def _install_hypothesis_shim():
+    try:
+        import hypothesis  # noqa: F401  (real library wins when present)
+        return
+    except ImportError:
+        pass
+
+    class _Strategy:
+        """Minimal stand-in for a hypothesis strategy: a seeded sampler."""
+
+        def __init__(self, sampler):
+            self.sample = sampler
+
+        def filter(self, pred):
+            base = self.sample
+
+            def sample(rng):
+                for _ in range(1000):
+                    v = base(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("shim strategy filter rejected 1000 draws")
+
+            return _Strategy(sample)
+
+        def map(self, fn):
+            base = self.sample
+            return _Strategy(lambda rng: fn(base(rng)))
+
+    def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+               allow_infinity=False, width=64, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def sample(rng):
+            r = rng.random()
+            # Edge cases first (hypothesis is good at corners; the shim
+            # at least pins the bounds, zero, and small magnitudes).
+            if r < 0.05:
+                return lo
+            if r < 0.10:
+                return hi
+            if r < 0.18 and lo <= 0.0 <= hi:
+                return 0.0
+            if r < 0.35:
+                # log-uniform magnitude to cover scales
+                mag = 10.0 ** rng.uniform(-4, np.log10(max(abs(lo), abs(hi),
+                                                           1e-3)))
+                v = mag if rng.random() < 0.5 else -mag
+                return float(min(max(v, lo), hi))
+            return float(rng.uniform(lo, hi))
+
+        return _Strategy(sample)
+
+    def integers(min_value=0, max_value=1 << 30, **_kw):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.integers(len(elements))])
+
+    def given(*arg_strats, **kw_strats):
+        if arg_strats:
+            raise TypeError("shim @given supports keyword strategies only")
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_shim_max_examples", 50),
+                        _SHIM_MAX_EXAMPLES)
+                seed = zlib.adler32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in kw_strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest must not treat the drawn params as fixtures: expose a
+            # signature with only the non-drawn parameters.
+            sig = inspect.signature(fn)
+            left = [p for name, p in sig.parameters.items()
+                    if name not in kw_strats]
+            wrapper.__signature__ = sig.replace(parameters=left)
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=50, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    mod.__is_shim__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    st.floats = floats
+    st.integers = integers
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install_hypothesis_shim()
 
 
 @pytest.fixture

@@ -1,0 +1,99 @@
+"""Property tests for the ⊞ algebra and the Δ LUTs.
+
+Written to run under the fixed-seed hypothesis shim in ``conftest.py`` when
+the real ``hypothesis`` package is absent — the properties are the
+hardware-correctness contract of the paper's arithmetic:
+
+* ⊞ is commutative (eq. 3 is symmetric in its operands);
+* ⊟ is an involution through ⊞-negation (sign-plane XOR);
+* x ⊟ x flushes to the exact zero code (Δ-(0) = most negative number);
+* the Δ± tables are monotone: Δ+ decreases toward 0 with d, Δ- (negative)
+  increases toward 0 with d, with the underflow sentinel pinned at d=0.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
+                        DELTA_SOFTMAX, LNS12, LNS16, DeltaEngine, boxminus,
+                        boxneg, boxplus, decode, encode)
+
+FMT = LNS16
+ENGINES = {k: DeltaEngine(s, FMT) for k, s in [
+    ("exact", DELTA_EXACT), ("lut", DELTA_DEFAULT),
+    ("softmax", DELTA_SOFTMAX), ("bitshift", DELTA_BITSHIFT)]}
+
+vals = st.floats(min_value=-50.0, max_value=50.0,
+                 allow_nan=False, allow_infinity=False).filter(
+    lambda v: v == 0.0 or abs(v) > 1e-3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=vals, y=vals)
+def test_boxplus_commutative_all_engines(x, y):
+    a, b = encode(np.float32(x), FMT), encode(np.float32(y), FMT)
+    for eng in ENGINES.values():
+        ab = boxplus(a, b, eng)
+        ba = boxplus(b, a, eng)
+        assert int(ab.code) == int(ba.code)
+        assert int(ab.sign) == int(ba.sign)
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=vals)
+def test_boxneg_involution(x):
+    a = encode(np.float32(x), FMT)
+    aa = boxneg(boxneg(a))
+    assert int(aa.code) == int(a.code)
+    assert int(aa.sign) == int(a.sign)
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=vals)
+def test_boxminus_self_flushes_to_zero_code(x):
+    a = encode(np.float32(x), FMT)
+    for eng in ENGINES.values():
+        z = boxminus(a, a, eng)
+        assert int(z.code) == FMT.zero_code
+        assert int(z.sign) == 0
+        assert float(decode(z, FMT)) == 0.0
+
+
+def test_boxminus_self_flushes_arrays(rng):
+    v = rng.normal(size=(16, 8)).astype(np.float32)
+    a = encode(v, FMT)
+    z = boxminus(a, a, ENGINES["lut"])
+    assert (np.asarray(z.code) == FMT.zero_code).all()
+
+
+@pytest.mark.parametrize("fmt", [LNS16, LNS12], ids=["lns16", "lns12"])
+@pytest.mark.parametrize("spec", [DELTA_DEFAULT, DELTA_SOFTMAX],
+                         ids=["lut2", "lut64"])
+def test_delta_lut_monotone(fmt, spec):
+    eng = DeltaEngine(spec, fmt)
+    plus = np.asarray(eng._tab_plus)
+    minus = np.asarray(eng._tab_minus)
+    # Δ+(0) = log2(2) = 1.0 exactly, then strictly decreasing toward 0.
+    assert plus[0] == fmt.scale
+    assert (np.diff(plus) <= 0).all()
+    assert (plus >= 0).all()
+    # Δ-(0) is the underflow sentinel (flush to zero through saturation).
+    assert minus[0] == eng.underflow
+    assert minus[0] < fmt.code_min - fmt.code_max
+    # Beyond d=0, Δ- is negative and increases toward 0.
+    assert (minus[1:] <= 0).all()
+    assert (np.diff(minus[1:]) >= 0).all()
+
+
+@pytest.mark.parametrize("key", ["exact", "bitshift"])
+def test_delta_engines_monotone_on_codes(key):
+    """Monotonicity also holds for the non-tabular engines on d-codes."""
+    eng = ENGINES[key]
+    import jax.numpy as jnp
+    d = jnp.arange(0, 12 * FMT.scale, 7)
+    dp = np.asarray(eng.plus(d))
+    assert (np.diff(dp) <= 0).all() and (dp >= 0).all()
+    dm = np.asarray(eng.minus(d))
+    assert dm[0] == eng.underflow
+    assert (np.diff(dm[1:]) >= 0).all() and (dm[1:] <= 0).all()
