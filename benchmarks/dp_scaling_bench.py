@@ -1,0 +1,91 @@
+"""Data-parallel LNS training scaling bench: step time vs device count.
+
+Times the shard_map'd paper-MLP train step (distributed/lns_dp.py) at
+several emulated host device counts for both gradient-reduce modes:
+
+* ``boxplus``    — the deterministic log-domain ⊞-allreduce (all-gather of
+  per-segment dW partial codes + fixed sequential ⊞ schedule);
+* ``float-psum`` — the fast non-bit-exact escape hatch (decode → psum →
+  re-encode).
+
+CPU wall times characterize the *emulation* (all "devices" are host
+threads); the numbers track the relative cost of the two reduce paths and
+the scaling trend across PRs, not TPU performance.  Emits machine-readable
+``BENCH_dp_scaling.json`` (op, shape, backend, devices, ms_per_step,
+tok_per_s — tok = training samples).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
+        n_in=64, n_hidden=32, n_out=10, backend="emulate", steps=5):
+    from repro.distributed.lns_dp import DPConfig, LNSDataParallelMLP
+    from repro.paper.mlp import MLPConfig
+
+    rng = np.random.default_rng(0)
+    xb = rng.uniform(0, 1, size=(batch, n_in)).astype(np.float32)
+    yb = rng.integers(0, n_out, size=(batch,))
+    shape = f"b{batch}_{n_in}x{n_hidden}x{n_out}_s{grad_segments}"
+
+    rows = []
+    avail = len(jax.devices())
+    for devices in device_counts:
+        if devices > avail:
+            print(f"[dp_bench] skip devices={devices} (only {avail} attached)")
+            continue
+        for mode in ("boxplus", "float-psum"):
+            cfg = MLPConfig(n_in=n_in, n_hidden=n_hidden, n_out=n_out,
+                            matmul_backend=backend, matmul_block=16)
+            model = LNSDataParallelMLP(
+                cfg, DPConfig(num_devices=devices, reduce_mode=mode,
+                              grad_segments=grad_segments))
+            params = model.init(jax.random.PRNGKey(0))
+            params, _ = model.train_step(params, xb, yb)   # compile
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                params, loss = model.train_step(params, xb, yb)
+            jax.block_until_ready(params)
+            ms = (time.perf_counter() - t0) / steps * 1e3
+            rows.append(dict(op="dp_train_step", shape=shape,
+                             backend=f"{backend}/{mode}", devices=devices,
+                             ms_per_step=ms, tok_per_s=batch / (ms / 1e3),
+                             note=f"loss={float(loss):.4f}"))
+            print(f"[dp_bench] devices={devices} reduce={mode:10s} "
+                  f"{ms:8.1f} ms/step  {batch / (ms / 1e3):8.0f} samples/s")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--grad-segments", type=int, default=4)
+    ap.add_argument("--backend", default="emulate",
+                    choices=["emulate", "pallas"],
+                    help="⊞-MAC path; 'pallas' runs the interpreter on CPU "
+                    "(slow) and the compiled kernels on TPU")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_dp_scaling.json")
+    args = ap.parse_args(argv)
+    rows = run(tuple(args.devices), batch=args.batch,
+               grad_segments=args.grad_segments, backend=args.backend,
+               steps=args.steps)
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "dp_scaling", "rows": rows}, f, indent=1)
+    print(f"[dp_bench] wrote {len(rows)} rows to {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,15 @@ EXPERIMENTS.md §Roofline.  Shapes follow the paper MLP's hot matmul; the
 backward rows time the transposed ⊞-MACs dX = dY ⊞ Wᵀ (contraction over
 N) and dW = Xᵀ ⊞ dY (contraction over the batch M) that training on the
 kernel path adds (see kernels/lns_matmul/lns_matmul.py).
+
+Run as a script to also emit machine-readable ``BENCH_kernels.json``
+(one row per op × backend: op, shape, backend, devices, ms_per_step,
+tok_per_s) so the perf trajectory is tracked across PRs; ``run()`` keeps
+the legacy (name, us, note) tuples for benchmarks/run.py.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -33,7 +39,8 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run():
+def records():
+    """One dict per op × backend; ``tok_per_s`` = batch rows per second."""
     rng = np.random.default_rng(0)
     m, k, n = 64, 784, 100
     X = rng.normal(size=(m, k)).astype(np.float32)
@@ -41,41 +48,62 @@ def run():
     DY = rng.normal(size=(m, n)).astype(np.float32)
     x, w, dy = encode(X, LNS16), encode(W, LNS16), encode(DY, LNS16)
     shape = f"{m}x{k}x{n}"
+
     rows = []
-    rows.append((f"kernel/float_matmul_{shape}",
-                 _time(jax.jit(jnp.matmul), X, W), "ref"))
+
+    def add(op, backend, us, note):
+        rows.append(dict(op=op, shape=shape, backend=backend, devices=1,
+                         ms_per_step=us / 1e3,
+                         tok_per_s=m / (us / 1e6), note=note))
+
+    add("matmul_fwd", "float", _time(jax.jit(jnp.matmul), X, W), "ref")
     for name, spec in [("lut20", DELTA_DEFAULT), ("bitshift", DELTA_BITSHIFT)]:
         eng = DeltaEngine(spec, LNS16)
         # -- forward: Z = X ⊞-MAC W ------------------------------------
         emu = jax.jit(lambda a, b, e=eng: lns_matmul(a, b, e).code)
-        rows.append((f"kernel/emulated_{name}_{shape}",
-                     _time(emu, x, w), "pairwise tree"))
+        add("matmul_fwd", f"emulate-{name}", _time(emu, x, w),
+            "pairwise tree")
         pal = lambda a, b, s=spec: lns_matmul_kernel(
             a, b, fmt=LNS16, spec=s, block_m=32, block_n=32, block_k=98,
             interpret=True).code
-        rows.append((f"kernel/pallas_interp_{name}_{shape}",
-                     _time(pal, x, w, reps=2), "sequential MAC"))
+        add("matmul_fwd", f"pallas-{name}", _time(pal, x, w, reps=2),
+            "sequential MAC (interpret)")
         # -- backward: dX = dY ⊞ Wᵀ and dW = Xᵀ ⊞ dY --------------------
         be = LNSMatmulBackend(fmt=LNS16, spec=spec, backend="emulate")
         emu_dx = jax.jit(lambda g, b, e=be: e.matmul_dx(g, b).code)
-        rows.append((f"kernel/emulated_dx_{name}_{shape}",
-                     _time(emu_dx, dy, w), "sequential MAC"))
+        add("matmul_dx", f"emulate-{name}", _time(emu_dx, dy, w),
+            "sequential MAC")
         pal_dx = lambda g, b, s=spec: lns_matmul_dx_kernel(
             g, b, fmt=LNS16, spec=s, block_m=32, block_k=98, block_n=50,
             interpret=True).code
-        rows.append((f"kernel/pallas_interp_dx_{name}_{shape}",
-                     _time(pal_dx, dy, w, reps=2), "sequential MAC"))
+        add("matmul_dx", f"pallas-{name}", _time(pal_dx, dy, w, reps=2),
+            "sequential MAC (interpret)")
         emu_dw = jax.jit(lambda a, g, e=be: e.matmul_dw(a, g).code)
-        rows.append((f"kernel/emulated_dw_{name}_{shape}",
-                     _time(emu_dw, x, dy), "sequential MAC"))
+        add("matmul_dw", f"emulate-{name}", _time(emu_dw, x, dy),
+            "sequential MAC")
         pal_dw = lambda a, g, s=spec: lns_matmul_dw_kernel(
             a, g, fmt=LNS16, spec=s, block_k=98, block_n=50, block_m=32,
             interpret=True).code
-        rows.append((f"kernel/pallas_interp_dw_{name}_{shape}",
-                     _time(pal_dw, x, dy, reps=2), "sequential MAC"))
+        add("matmul_dw", f"pallas-{name}", _time(pal_dw, x, dy, reps=2),
+            "sequential MAC (interpret)")
     return rows
 
 
+def run():
+    """Legacy (name, us_per_call, derived) rows for benchmarks/run.py."""
+    return [(f"kernel/{r['op']}_{r['backend']}_{r['shape']}",
+             r["ms_per_step"] * 1e3, r["note"]) for r in records()]
+
+
+def main(out_path: str = "BENCH_kernels.json"):
+    rows = records()
+    with open(out_path, "w") as f:
+        json.dump({"benchmark": "kernels", "rows": rows}, f, indent=1)
+    for r in rows:
+        print(f"kernel/{r['op']}_{r['backend']}_{r['shape']},"
+              f"{r['ms_per_step'] * 1e3:.1f},{r['note']}")
+    print(f"[kernel_bench] wrote {len(rows)} rows to {out_path}")
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    main()

@@ -60,3 +60,18 @@ print(f"LNS-16 LUT MLP, 80 steps: val acc {r.val_curve[-1]:.3f}")
 r = run_experiment("float", "mnist", epochs=1, max_steps_per_epoch=80)
 print(f"float32 MLP,   80 steps: val acc {r.val_curve[-1]:.3f}")
 print("(run benchmarks/run.py for the full Table-1 grid)")
+
+# The data-parallel switch: the same harness shards the batch over a
+# 'data' mesh axis and reduces weight-gradient partials with a
+# deterministic ⊞ schedule, so any device count dividing grad_segments
+# yields bit-identical weight codes:
+#   run_experiment("lns", "mnist", batch_size=8, data_parallel=2,
+#                  reduce_mode="boxplus", grad_segments=4)
+# (reduce_mode="float-psum" is the fast non-bit-exact escape hatch; on
+# CPU emulate extra devices with
+#  XLA_FLAGS=--xla_force_host_platform_device_count=8 — see
+#  examples/train_data_parallel.py for the full 1/2/4-device drill.)
+from repro.distributed.lns_dp import run_device_count_invariance_check
+ok, _ = run_device_count_invariance_check((1,), steps=2, batch=8,
+                                          grad_segments=4)
+print(f"DP ⊞-allreduce schedule == single-device sequential baseline: {ok}")

@@ -3,6 +3,15 @@
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch yi-6b
 (reduced-config model; the full configs serve identically on TPU meshes —
 see repro/launch/dryrun.py decode cells for the production lowering.)
+
+The matmul path is selected by ``--numerics`` through
+:class:`repro.core.lns.LNSMatmulBackend`:
+
+* ``fp32`` / ``bf16``      — float XLA matmuls (fastest on CPU);
+* ``lns16-exact``          — emulated ⊞-MAC (pairwise-tree order);
+* ``lns16-exact-pallas``   — the Pallas ⊞-MAC kernels (sequential MAC,
+  interpret mode off-TPU): batched serving on the same kernel datapath
+  that training uses.
 """
 import argparse
 import time
@@ -11,19 +20,42 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.numerics import get_policy
 from repro.nn import init_params
 from repro.serve import ServeConfig, ServingEngine
 
 
-def main():
+def matmul_path(numerics: str) -> str:
+    """Human-readable description of the matmul backend a policy selects.
+
+    Mirrors ``NumericsPolicy.linear``'s dispatch: exact-spec policies only
+    reach the ``LNSMatmulBackend`` dispatcher when training log-domain
+    gradients or when a non-emulate backend is configured; plain
+    ``lns16-exact`` serves through ``lns_dot_exact`` (pairwise-tree
+    emulation order).
+    """
+    pol = get_policy(numerics)
+    if pol.exact_spec is None:
+        return f"float XLA matmul ({pol.compute_dtype})"
+    if pol.lns_grad or pol.matmul_backend != "emulate":
+        return (f"LNS ⊞-MAC via LNSMatmulBackend(backend="
+                f"'{pol.matmul_backend}')")
+    return "LNS ⊞-MAC via lns_dot_exact (emulated, pairwise-tree order)"
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.8)
-    args = ap.parse_args()
+    ap.add_argument("--numerics", default="fp32",
+                    help="fp32 | lns16-exact | lns16-exact-pallas (the "
+                    "kernel path; slower on CPU where the Pallas "
+                    "interpreter runs the kernels)")
+    args = ap.parse_args(argv)
 
-    cfg = reduced(get_config(args.arch)).with_(numerics="fp32",
+    cfg = reduced(get_config(args.arch)).with_(numerics=args.numerics,
                                                param_dtype="float32",
                                                remat="none")
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -41,6 +73,8 @@ def main():
     n = sum(len(o) for o in outs)
     print(f"[serve] {args.requests} requests, {n} new tokens, "
           f"{n/dt:.1f} tok/s (continuous batching over 3 slots)")
+    print(f"[serve] batch served by: {matmul_path(args.numerics)}")
+    return outs
 
 
 if __name__ == "__main__":

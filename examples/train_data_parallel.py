@@ -1,0 +1,52 @@
+"""Data-parallel LNS training with the deterministic ⊞ gradient all-reduce.
+
+Run:  PYTHONPATH=src python examples/train_data_parallel.py
+
+Emulates 8 host devices on CPU (the XLA flag below must precede the jax
+import), then trains the paper MLP on 1, 2, and 4 devices under
+``shard_map`` and verifies the reduction-order contract of
+``repro/distributed/lns_dp.py``:
+
+* ``reduce_mode="boxplus"``    — per-segment dW partial codes are
+  all-gathered in canonical segment order and ⊞-combined with a fixed
+  sequential schedule → **bit-identical weight codes at every device
+  count**, equal to the single-device sequential baseline.
+* ``reduce_mode="float-psum"`` — decode → psum → re-encode: faster on the
+  wire, within quantization-level tolerance but NOT bit-stable.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+import jax
+
+from repro.core import LNS16, decode
+from repro.distributed.lns_dp import run_device_count_invariance_check
+from repro.paper import run_experiment
+
+print(f"=== 1. Device-count invariance (attached: {jax.device_count()} "
+      f"emulated host devices) ===")
+ok, runs = run_device_count_invariance_check(
+    (1, 2, 4), steps=3, batch=8, grad_segments=4,
+    matmul_backend="pallas", reduce_mode="boxplus", verbose=True)
+print(f"boxplus reduce: 1/2/4-device weight codes bit-identical to the "
+      f"sequential baseline: {ok}")
+
+print("\n=== 2. The float-psum escape hatch ===")
+_, runs_f = run_device_count_invariance_check(
+    (2,), steps=3, batch=8, grad_segments=4,
+    matmul_backend="pallas", reduce_mode="float-psum")
+w_box = np.asarray(decode(runs[2]["params"]["w1"], LNS16))
+w_psm = np.asarray(decode(runs_f[2]["params"]["w1"], LNS16))
+dev = np.max(np.abs(w_box - w_psm) / (np.abs(w_box) + 1e-6))
+print(f"float-psum weights drift from the ⊞ schedule by ≤ {dev:.3%} "
+      f"(reordering error, bounded by the Δ approximation — not bit-exact)")
+
+print("\n=== 3. The same switch through the paper harness ===")
+r = run_experiment("lns", "mnist", epochs=1, batch_size=8,
+                   max_steps_per_epoch=10, data_parallel=2,
+                   reduce_mode="boxplus", grad_segments=4)
+print(f"run_experiment(..., data_parallel=2, reduce_mode='boxplus'): "
+      f"val acc {r.val_curve[-1]:.3f} in {r.seconds:.1f}s")

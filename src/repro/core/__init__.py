@@ -15,7 +15,8 @@ Sub-modules:
   numerics       per-op numerics policy registry (fp32/bf16/lns*)
 """
 from .arithmetic import (bias_add, boxabs_max, boxdiv, boxdot, boxminus,
-                         boxneg, boxplus, boxsum, lns_affine, lns_matmul)
+                         boxneg, boxplus, boxsum, boxsum_partials,
+                         lns_affine, lns_matmul)
 from .activations import beta_code, llrelu, llrelu_grad
 from .conversions import code_to_lns, lns_value_to_code
 from .delta import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, DELTA_SOFTMAX,
@@ -25,10 +26,10 @@ from .formats import (FORMATS, FXP12, FXP16, LNS12, LNS16,
                       FixedPointFormat, LNSFormat, required_log_width)
 from .initializers import (encode_init, he_sigma, log_density_normal,
                            log_normal_init)
-from .lns import (LNSArray, LNSMatmulBackend, decode, encode, from_parts,
-                  quantization_bound, scalar, zeros)
+from .lns import (MATMUL_BACKENDS, LNSArray, LNSMatmulBackend, decode,
+                  encode, from_parts, quantization_bound, scalar, zeros)
 from .numerics import POLICIES, NumericsPolicy, get_policy
-from .qat import lns_dot_exact, lns_quantize_ste
+from .qat import lns_dot_dispatch, lns_dot_exact, lns_quantize_ste
 from .sgd import LogSGDConfig, apply_update, init_momentum
 from .softmax import ce_grad_init, ce_loss_readout, log_softmax_lns
 

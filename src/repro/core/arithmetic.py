@@ -133,6 +133,33 @@ def boxsum(a: LNSArray, axis: int, eng: DeltaEngine,
     return LNSArray(cur.code[0], cur.sign[0])
 
 
+def boxsum_partials(parts: LNSArray, eng: DeltaEngine,
+                    schedule: str = "sequential") -> LNSArray:
+    """⊞-combine stacked partial sums along axis 0 with a *fixed* schedule.
+
+    This is the reduction contract of the data-parallel subsystem
+    (``distributed/lns_reduce.py``): ``parts`` holds S partial results in
+    canonical segment order (segment 0 first), and the combine order is a
+    pure function of S — never of the device count or mesh layout — so the
+    result is bit-identical no matter how the segments were produced.
+
+    ``schedule="sequential"`` — left fold ``((p0 ⊞ p1) ⊞ p2) ⊞ …``, the
+    schedule of a scalar MAC pipeline draining segment partials in order;
+    with one-row segments it *is* the paper's sequential MAC over the batch.
+    ``schedule="tree"``       — balanced pairwise tree over the S slots
+    (zero-padded to a power of two); lower depth, still device-count-stable
+    because the tree shape depends only on S.
+
+    Because ⊞ is only approximately associative the two schedules differ in
+    general; both are valid instances of the paper's arithmetic.
+    """
+    if schedule not in ("sequential", "tree"):
+        raise ValueError(f"unknown ⊞ combine schedule {schedule!r}; "
+                         "expected 'sequential' or 'tree'")
+    order = "sequential" if schedule == "sequential" else "pairwise"
+    return boxsum(parts, 0, eng, order=order)
+
+
 def lns_matmul(x: LNSArray, w: LNSArray, eng: DeltaEngine,
                order: str = "pairwise") -> LNSArray:
     """Emulated log-domain matmul: Z[m,n] = ⊞_k (X[m,k] ⊡ W[k,n]) (eq. 10).

@@ -119,11 +119,22 @@ def quantization_bound(fmt: LNSFormat) -> float:
 # ------------------------------------------------------------------------
 # Matmul backend dispatcher
 # ------------------------------------------------------------------------
+
+#: The valid values of every ``matmul_backend`` / ``backend`` switch in the
+#: repo (``LNSMatmulBackend``, ``MLPConfig``, ``TrainConfig``,
+#: ``NumericsPolicy``).  ``"emulate"`` is the pure-jnp sequential ⊞-MAC,
+#: ``"pallas"`` the blocked TPU kernels — bit-exact to each other.
+MATMUL_BACKENDS = ("emulate", "pallas")
+
+# Engine cache keyed by the full (DeltaSpec, LNSFormat) pair — both are
+# frozen/hashable dataclasses.  The key must include the *format*: the same
+# Δ spec yields different integer tables under lns16 (qf=10) and lns12
+# (qf=6), so a name- or spec-only key would alias engines across formats.
 _ENGINE_CACHE: dict = {}
 
 
 def _cached_engine(spec, fmt: LNSFormat):
-    key = (spec, fmt)  # both frozen dataclasses; name alone may collide
+    key = (spec, fmt)
     if key not in _ENGINE_CACHE:
         from .delta import DeltaEngine
         _ENGINE_CACHE[key] = DeltaEngine(spec, fmt)
@@ -143,31 +154,38 @@ class LNSMatmulBackend:
       ordering **bit-exactly**, so the two backends are interchangeable down
       to the last weight code.
 
-    All three products of the training step are covered (eqs. 10-14):
+    All three products of the training step are covered (eqs. 10-14), plus
+    the segmented variant that feeds the data-parallel gradient reduction:
 
     * ``matmul(x, w)``     Z  = X ⊞-MAC W          (forward)
     * ``matmul_dx(dy, w)`` dX = dY ⊞-MAC Wᵀ       (backward, activations)
     * ``matmul_dw(x, dy)`` dW = Xᵀ ⊞-MAC dY       (backward, weights)
+    * ``matmul_dw_partials(x, dy, S)``  per-segment dW partial codes
+      (S, K, N) — the emission side of the deterministic ⊞-allreduce
+      (``distributed/lns_reduce.py``)
 
-    ``interpret=None`` resolves at call time: interpret mode off only when a
-    real TPU backend is attached (on CPU the kernels run via the Pallas
-    interpreter for validation).  The dataclass is frozen/hashable so it can
-    be closed over by jit or passed as a static argument.
+    ``interpret=None`` (the default) resolves *at call time*, not at
+    construction: interpret mode switches on automatically whenever the
+    attached jax backend is not a real TPU, so the same config object runs
+    the compiled kernels on TPU and the Pallas interpreter on CPU.  Emulated
+    Δ engines are shared via a cache keyed by the full ``(spec, fmt)`` pair
+    (see ``_cached_engine``).  The dataclass is frozen/hashable so it can be
+    closed over by jit or passed as a static argument.
     """
 
     fmt: LNSFormat
     spec: Any  # DeltaSpec
-    backend: str = "emulate"          # 'emulate' | 'pallas'
+    backend: str = "emulate"          # one of MATMUL_BACKENDS
     block_m: int = 128
     block_n: int = 128
     block_k: int = 128
     interpret: bool | None = None
 
     def __post_init__(self):
-        if self.backend not in ("emulate", "pallas"):
+        if self.backend not in MATMUL_BACKENDS:
             raise ValueError(
                 f"unknown matmul backend {self.backend!r}; "
-                "expected 'emulate' or 'pallas'")
+                f"expected one of {MATMUL_BACKENDS}")
 
     def _interp(self) -> bool:
         if self.interpret is not None:
@@ -209,6 +227,36 @@ class LNSMatmulBackend:
         from .arithmetic import lns_matmul
         return lns_matmul(x.T, dy, _cached_engine(self.spec, self.fmt),
                           order="sequential")
+
+    def matmul_dw_partials(self, x: "LNSArray", dy: "LNSArray",
+                           num_segments: int) -> "LNSArray":
+        """Segmented dW: (S, K, N) per-segment partial codes.
+
+        The batch M is cut into ``num_segments`` contiguous equal segments;
+        slot ``s`` is the sequential ⊞-MAC over segment ``s``'s rows only.
+        ⊞-combining the slots in order 0..S-1 reproduces ``matmul_dw`` over
+        the canonical segmentation independent of which device produced
+        which slot — the determinism contract of the DP gradient reduce.
+        """
+        if self.backend == "pallas":
+            from ..kernels.lns_matmul import lns_matmul_dw_partials_kernel
+            return lns_matmul_dw_partials_kernel(
+                x, dy, num_segments=num_segments, fmt=self.fmt,
+                spec=self.spec, block_k=self.block_k, block_n=self.block_n,
+                interpret=self._interp())
+        from .arithmetic import lns_matmul
+        m = x.shape[0]
+        if num_segments < 1 or m % num_segments:
+            raise ValueError(
+                f"batch {m} not divisible into {num_segments} segments")
+        seg = m // num_segments
+        eng = _cached_engine(self.spec, self.fmt)
+        outs = [lns_matmul(x[s * seg:(s + 1) * seg].T,
+                           dy[s * seg:(s + 1) * seg], eng,
+                           order="sequential")
+                for s in range(num_segments)]
+        return LNSArray(jnp.stack([o.code for o in outs]),
+                        jnp.stack([o.sign for o in outs]))
 
     def affine(self, x: "LNSArray", w: "LNSArray", b: "LNSArray"
                ) -> "LNSArray":

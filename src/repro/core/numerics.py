@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from .delta import DELTA_DEFAULT, DeltaSpec
 from .formats import LNS12, LNS16, LNSFormat
-from .qat import lns_dot_exact, lns_quantize_ste
+from .qat import lns_dot_dispatch, lns_dot_exact, lns_quantize_ste
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +52,13 @@ class NumericsPolicy:
                 return lns_matmul_trainable(
                     x, w, fmt=fmt, spec=self.exact_spec,
                     backend=self.matmul_backend)
+            if self.matmul_backend != "emulate":
+                # Forward-only on the dispatcher (Pallas kernels off the
+                # emulation): the batched-serving path of the kernels.
+                from .lns import LNSMatmulBackend
+                return lns_dot_dispatch(
+                    x, w, LNSMatmulBackend(fmt=fmt, spec=self.exact_spec,
+                                           backend=self.matmul_backend))
             return lns_dot_exact(x, w, fmt, self.exact_spec)
         return jnp.matmul(self.q_act(x), self.q_param(w))
 
@@ -68,6 +75,15 @@ POLICIES = {
     "lns16-exact": NumericsPolicy(
         "lns16-exact", compute_dtype="float32", param_lns=LNS16,
         act_lns=LNS16, exact_spec=DELTA_DEFAULT),
+    # Same arithmetic, forward matmuls on the Pallas kernel path via the
+    # LNSMatmulBackend dispatcher (batched serving on the kernels).  NOTE:
+    # the dispatcher runs the *sequential* MAC order; 'lns16-exact' keeps
+    # the pairwise-tree emulation order of lns_dot_exact — both are valid
+    # paper arithmetic, so the two policies differ by (bounded)
+    # approximation reordering, not semantics.
+    "lns16-exact-pallas": NumericsPolicy(
+        "lns16-exact-pallas", compute_dtype="float32", param_lns=LNS16,
+        act_lns=LNS16, exact_spec=DELTA_DEFAULT, matmul_backend="pallas"),
     # End-to-end log-domain training: gradients run the transposed ⊞-MACs
     # (dX = dY ⊞ Wᵀ, dW = Xᵀ ⊞ dY) instead of straight-through float
     # matmuls — the hardware-shaped path of Hamad et al.

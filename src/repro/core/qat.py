@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from .arithmetic import lns_matmul
 from .delta import DeltaEngine, DeltaSpec
 from .formats import LNSFormat
-from .lns import _cached_engine, decode, encode
+from .lns import LNSMatmulBackend, _cached_engine, decode, encode
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1,))
@@ -75,3 +75,41 @@ def _d_bwd(fmt, spec, res, g):
 
 
 lns_dot_exact.defvjp(_d_fwd, _d_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def lns_dot_dispatch(x, w, be: LNSMatmulBackend):
+    """(..., K) @ (K, N) forward on the config-selected ⊞-MAC backend.
+
+    Like :func:`lns_dot_exact` but the forward matmul goes through
+    :class:`~repro.core.lns.LNSMatmulBackend` — ``backend="pallas"`` runs
+    the blocked TPU kernels (interpret mode off-TPU), ``"emulate"`` the
+    sequential-order jnp MAC; both are bit-exact to each other.  This is
+    the serving path of the kernels: batched inference picks the execution
+    backend by config instead of being pinned to the emulation.  Backward
+    is straight-through (float matmul at the quantized operands), matching
+    ``lns_dot_exact``; for log-domain *gradients* use
+    ``lns_matmul_trainable``.
+    """
+    fmt = be.fmt
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    z = be.matmul(encode(x2, fmt), encode(w, fmt))
+    return decode(z, fmt).reshape(lead + (w.shape[-1],))
+
+
+def _dd_fwd(x, w, be):
+    return lns_dot_dispatch(x, w, be), (x, w)
+
+
+def _dd_bwd(be, res, g):
+    x, w = res
+    fmt = be.fmt
+    xq = decode(encode(x, fmt), fmt)
+    wq = decode(encode(w, fmt), fmt)
+    gx = jnp.einsum("...n,kn->...k", g, wq)
+    gw = jnp.einsum("...k,...n->kn", xq, g)
+    return gx, gw
+
+
+lns_dot_dispatch.defvjp(_dd_fwd, _dd_bwd)

@@ -1,5 +1,22 @@
-"""Distribution: sharding rules, mesh helpers."""
+"""Distribution: sharding rules, mesh helpers, data-parallel LNS training.
+
+``lns_dp`` / ``lns_reduce`` — the deterministic log-domain gradient
+all-reduce subsystem (⊞-combine of per-segment dW partial codes in a
+device-count-stable schedule); see their module docstrings for the
+reduction-order contract.
+"""
+from .lns_dp import (DPConfig, LNSDataParallelMLP, make_data_mesh,
+                     reference_train_step,
+                     run_device_count_invariance_check)
+from .lns_reduce import (REDUCE_MODES, combine_partials,
+                         deterministic_boxplus_allreduce,
+                         float_psum_allreduce, gather_partials)
 from .sharding import (batch_specs, cache_specs, param_shardings,
                        param_specs)
 
-__all__ = ["batch_specs", "cache_specs", "param_shardings", "param_specs"]
+__all__ = ["batch_specs", "cache_specs", "param_shardings", "param_specs",
+           "DPConfig", "LNSDataParallelMLP", "make_data_mesh",
+           "reference_train_step", "run_device_count_invariance_check",
+           "REDUCE_MODES", "combine_partials",
+           "deterministic_boxplus_allreduce", "float_psum_allreduce",
+           "gather_partials"]

@@ -1,0 +1,269 @@
+"""Data-parallel LNS training with deterministic log-domain gradient reduce.
+
+This subsystem scales the paper's end-to-end log-domain training step
+(``paper/mlp.py: LNSMLP``) over a ``data`` mesh axis with ``shard_map``,
+while keeping the ⊞ accumulation order — which in LNS arithmetic is part of
+the *semantics*, not an implementation detail — a pure function of the
+problem, never of the hardware layout.
+
+The contract (see ``lns_reduce.py`` for the why):
+
+* The global batch is cut into ``grad_segments`` canonical contiguous
+  segments (fixed by config, not by device count); each device owns a
+  contiguous run of segments.
+* Backward-weight products are computed **per segment** on the kernel path
+  (``LNSMatmulBackend.matmul_dw_partials`` — the dW Pallas kernel with
+  partial-code flush), bias gradients per segment via sequential ⊞ folds.
+* Cross-device combine = all-gather in segment order + a fixed-schedule ⊞
+  fold (``reduce_mode="boxplus"``).  Training on any device count dividing
+  ``grad_segments`` yields **bit-identical weight codes**, equal to the
+  single-device ``reference_train_step`` running the same schedule without
+  any collective.
+* ``reduce_mode="float-psum"`` is the fast escape hatch: decode → psum →
+  re-encode.  Cheaper on the wire, not bit-stable across device counts.
+
+With ``grad_segments == global batch`` each segment is one sample, the
+per-segment partial is the sample's exact outer product (⊞-fold of a single
+term), and the sequential combine *is* the paper's sequential MAC over the
+batch — i.e. the schedule degrades gracefully to PR 1's single-device
+semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import (LNSArray, apply_update, boxdot, boxsum, ce_grad_init,
+                    ce_loss_readout, encode, llrelu_grad, log_softmax_lns)
+from .lns_reduce import (REDUCE_MODES, combine_partials,
+                         deterministic_boxplus_allreduce,
+                         float_psum_allreduce)
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Data-parallel execution config for the LNS train step.
+
+    ``grad_segments`` fixes the canonical segmentation of the global batch.
+    Bit-identical results across device counts hold for any set of runs
+    sharing the same ``grad_segments`` (every count must divide it);
+    ``0`` resolves to ``num_devices``, which keeps same-count runs
+    deterministic but ties the schedule to the device count — pass an
+    explicit value when comparing different counts.
+    """
+
+    num_devices: int = 1
+    reduce_mode: str = "boxplus"        # 'boxplus' | 'float-psum'
+    grad_segments: int = 0              # 0 → num_devices
+    reduce_schedule: str = "sequential"  # 'sequential' | 'tree'
+    axis_name: str = "data"
+    reduce_with_kernel: bool | None = None  # None → (backend == 'pallas')
+
+    def __post_init__(self):
+        if self.reduce_mode not in REDUCE_MODES:
+            raise ValueError(f"unknown reduce_mode {self.reduce_mode!r}; "
+                             f"expected one of {REDUCE_MODES}")
+        if self.num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got "
+                             f"{self.num_devices}")
+
+    def segments(self, global_batch: int) -> int:
+        s = self.grad_segments or self.num_devices
+        if s % self.num_devices:
+            raise ValueError(
+                f"grad_segments={s} not divisible by "
+                f"num_devices={self.num_devices}")
+        if global_batch % s:
+            raise ValueError(
+                f"global batch {global_batch} not divisible into {s} "
+                f"canonical segments")
+        return s
+
+
+def make_data_mesh(num_devices: int, axis_name: str = "data") -> Mesh:
+    """1-D mesh over the first ``num_devices`` local devices."""
+    devs = jax.devices()
+    if num_devices > len(devs):
+        raise ValueError(
+            f"requested data_parallel={num_devices} but only "
+            f"{len(devs)} devices are attached (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N to emulate "
+            f"more on CPU)")
+    return Mesh(np.array(devs[:num_devices]), (axis_name,))
+
+
+def _segmented_boxsum(d: LNSArray, num_segments: int, eng) -> LNSArray:
+    """Per-segment sequential ⊞-fold over the batch axis: (B, K) → (S, K)."""
+    b = d.shape[0]
+    seg = b // num_segments
+    tail = d.shape[1:]
+    parts = LNSArray(d.code.reshape((num_segments, seg) + tail),
+                     d.sign.reshape((num_segments, seg) + tail))
+    return boxsum(parts, 1, eng, order="sequential")
+
+
+def _per_segment_grads(inner, params, xb, yb, num_segments: int):
+    """LNSMLP backward pass emitting per-segment gradient partials.
+
+    Forward and the backward-activation product are row-independent, so
+    they run on the whole (local) batch at once; only the batch-contracted
+    products (dW, db) are segmented.  Returns (grads, loss) where every
+    grads leaf is an ``LNSArray`` with leading segment axis (S_local, ...).
+    """
+    f, eng = inner.fmt, inner.eng
+    x = encode(xb, f)
+    z1, a1, z2 = inner._forward(params, x)
+    p = log_softmax_lns(z2, inner.eng_sm)
+    d2 = ce_grad_init(p, yb, f, inner.eng_sm)
+    bp = inner.mm.matmul_dx(d2, params["w2"])
+    d1 = boxdot(bp, llrelu_grad(z1, inner.beta, f), f)
+    grads = dict(
+        w1=inner.mm.matmul_dw_partials(x, d1, num_segments),
+        b1=_segmented_boxsum(d1, num_segments, eng),
+        w2=inner.mm.matmul_dw_partials(a1, d2, num_segments),
+        b2=_segmented_boxsum(d2, num_segments, eng),
+    )
+    return grads, ce_loss_readout(p, yb, f)
+
+
+def _is_lns(v) -> bool:
+    return isinstance(v, LNSArray)
+
+
+class LNSDataParallelMLP:
+    """Drop-in ``make_mlp``-style model running the DP LNS train step.
+
+    Exposes the same ``init`` / ``train_step`` / ``predict`` surface as
+    :class:`~repro.paper.mlp.LNSMLP`, so ``paper/training.run_experiment``
+    drives it unchanged.  ``train_step`` shards the batch over the ``data``
+    mesh axis and reduces weight-gradient partials with the deterministic
+    ⊞ schedule (or float psum, per ``DPConfig.reduce_mode``).
+    """
+
+    def __init__(self, cfg, dp: DPConfig):
+        from ..paper.mlp import LNSMLP
+        self.cfg = cfg
+        self.dp = dp
+        self.inner = LNSMLP(cfg)
+        self.mesh = make_data_mesh(dp.num_devices, dp.axis_name)
+
+    # -- passthroughs ----------------------------------------------------
+    def init(self, key):
+        return self.inner.init(key)
+
+    def predict(self, params, xb):
+        return self.inner.predict(params, xb)
+
+    def _use_kernel(self) -> bool:
+        if self.dp.reduce_with_kernel is not None:
+            return self.dp.reduce_with_kernel
+        return self.inner.cfg.matmul_backend == "pallas"
+
+    # -- the DP step -----------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step(self, params, xb, yb):
+        inner, dp = self.inner, self.dp
+        segments = dp.segments(xb.shape[0])
+        segs_local = segments // dp.num_devices
+        axis = dp.axis_name
+
+        def local_fn(params, xb_l, yb_l):
+            grads, loss = _per_segment_grads(inner, params, xb_l, yb_l,
+                                             segs_local)
+            if dp.reduce_mode == "boxplus":
+                red = functools.partial(
+                    deterministic_boxplus_allreduce, axis_name=axis,
+                    eng=inner.eng, schedule=dp.reduce_schedule,
+                    use_kernel=self._use_kernel(),
+                    interpret=inner.mm._interp())
+            else:
+                red = functools.partial(float_psum_allreduce,
+                                        axis_name=axis, eng=inner.eng)
+            grads = jax.tree.map(red, grads, is_leaf=_is_lns)
+            return grads, jax.lax.pmean(loss, axis)
+
+        mapped = shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=(P(), P(axis), P(axis)),
+            out_specs=(P(), P()),
+            check_rep=False)
+        grads, loss = mapped(params, xb, yb)
+        new_params, _ = apply_update(params, grads, None, inner.sgd,
+                                     inner.eng)
+        return new_params, loss
+
+
+def reference_train_step(inner, params, xb, yb, *, grad_segments: int,
+                         reduce_schedule: str = "sequential"):
+    """Single-device sequential baseline of the canonical DP schedule.
+
+    Runs the identical segmented backward + fixed-schedule ⊞ combine on one
+    device with no mesh, no shard_map, and no collectives.  The DP step
+    must reproduce its weight codes bit-exactly at every device count
+    dividing ``grad_segments`` — this is the anchor the invariance tests
+    compare against.
+    """
+    grads, loss = _per_segment_grads(inner, params, xb, yb, grad_segments)
+    grads = jax.tree.map(
+        lambda g: combine_partials(g, inner.eng, schedule=reduce_schedule),
+        grads, is_leaf=_is_lns)
+    new_params, _ = apply_update(params, grads, None, inner.sgd, inner.eng)
+    return new_params, loss
+
+
+def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
+                                      steps: int = 3, batch: int = 8,
+                                      grad_segments: int = 4,
+                                      n_in: int = 12, n_hidden: int = 9,
+                                      n_out: int = 4,
+                                      matmul_backend: str = "pallas",
+                                      reduce_mode: str = "boxplus",
+                                      seed: int = 0, verbose: bool = False):
+    """Train the paper MLP at several device counts; compare weight codes.
+
+    Returns ``(ok, runs)`` where ``ok`` is True iff every device count
+    produced weight codes bit-identical to ``reference_train_step``.  Used
+    by tests (in-process when enough devices are attached, via a
+    subprocess with ``--xla_force_host_platform_device_count`` otherwise)
+    and by ``examples/train_data_parallel.py``.
+    """
+    from ..paper.mlp import LNSMLP, MLPConfig
+
+    rng = np.random.default_rng(seed)
+    xb = rng.uniform(0, 1, size=(batch, n_in)).astype(np.float32)
+    yb = rng.integers(0, n_out, size=(batch,))
+    cfg = MLPConfig(n_in=n_in, n_hidden=n_hidden, n_out=n_out,
+                    matmul_backend=matmul_backend, matmul_block=8)
+
+    inner = LNSMLP(cfg)
+    ref_params = inner.init(jax.random.PRNGKey(seed))
+    for _ in range(steps):
+        ref_params, ref_loss = reference_train_step(
+            inner, ref_params, xb, yb, grad_segments=grad_segments)
+
+    runs, ok = {}, True
+    for d in device_counts:
+        dp = DPConfig(num_devices=d, reduce_mode=reduce_mode,
+                      grad_segments=grad_segments)
+        model = LNSDataParallelMLP(cfg, dp)
+        params = model.init(jax.random.PRNGKey(seed))
+        for _ in range(steps):
+            params, loss = model.train_step(params, xb, yb)
+        same = all(
+            bool(np.array_equal(np.asarray(params[k].code),
+                                np.asarray(ref_params[k].code))
+                 and np.array_equal(np.asarray(params[k].sign),
+                                    np.asarray(ref_params[k].sign)))
+            for k in ref_params)
+        runs[d] = dict(params=params, loss=float(loss),
+                       matches_reference=same)
+        ok = ok and (same if reduce_mode == "boxplus" else True)
+        if verbose:
+            print(f"[lns_dp] devices={d} loss={float(loss):.4f} "
+                  f"bit-identical-to-reference={same}")
+    return ok, runs

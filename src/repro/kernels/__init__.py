@@ -6,7 +6,8 @@ accumulation on the VPU, Δ tables in VMEM).  Validated bit-exactly against
 ``ref.py`` in interpret mode; ``interpret=False`` targets real TPUs.
 """
 from .lns_boxsum import lns_boxsum_kernel, lns_boxsum_ref
-from .lns_matmul import (lns_matmul_dw_kernel, lns_matmul_dw_ref,
+from .lns_matmul import (lns_matmul_dw_kernel, lns_matmul_dw_partials_kernel,
+                         lns_matmul_dw_partials_ref, lns_matmul_dw_ref,
                          lns_matmul_dx_kernel, lns_matmul_dx_ref,
                          lns_matmul_kernel, lns_matmul_ref,
                          lns_matmul_trainable)
@@ -15,4 +16,5 @@ __all__ = ["lns_boxsum_kernel", "lns_boxsum_ref",
            "lns_matmul_kernel", "lns_matmul_ref",
            "lns_matmul_dx_kernel", "lns_matmul_dx_ref",
            "lns_matmul_dw_kernel", "lns_matmul_dw_ref",
+           "lns_matmul_dw_partials_kernel", "lns_matmul_dw_partials_ref",
            "lns_matmul_trainable"]

@@ -1,7 +1,11 @@
-from .ops import (lns_matmul_dw_kernel, lns_matmul_dx_kernel,
-                  lns_matmul_kernel, lns_matmul_trainable)
-from .ref import lns_matmul_dw_ref, lns_matmul_dx_ref, lns_matmul_ref
+from .ops import (lns_matmul_dw_kernel, lns_matmul_dw_partials_kernel,
+                  lns_matmul_dx_kernel, lns_matmul_kernel,
+                  lns_matmul_trainable)
+from .ref import (lns_matmul_dw_partials_ref, lns_matmul_dw_ref,
+                  lns_matmul_dx_ref, lns_matmul_ref)
 
 __all__ = ["lns_matmul_kernel", "lns_matmul_dx_kernel",
-           "lns_matmul_dw_kernel", "lns_matmul_trainable",
-           "lns_matmul_ref", "lns_matmul_dx_ref", "lns_matmul_dw_ref"]
+           "lns_matmul_dw_kernel", "lns_matmul_dw_partials_kernel",
+           "lns_matmul_trainable",
+           "lns_matmul_ref", "lns_matmul_dx_ref", "lns_matmul_dw_ref",
+           "lns_matmul_dw_partials_ref"]

@@ -117,19 +117,32 @@ def _mac_kernel(tabp_ref, tabm_ref, ac_ref, as_ref, bc_ref, bs_ref,
                 zc_ref, zs_ref, accc_ref, accs_ref, *,
                 fmt: LNSFormat, spec: DeltaSpec, n_ct: int, b_ct: int,
                 r_code: int, underflow: int,
-                a_contract_axis: int, b_contract_axis: int):
+                a_contract_axis: int, b_contract_axis: int,
+                partial_flush: bool = False):
     """Generic sequential ⊞-MAC over one contraction tile.
 
     The output tile is the outer product of A's non-contracted axis (rows)
     and B's non-contracted axis (columns); ``*_contract_axis`` selects which
     axis of each VMEM-resident operand block the fori_loop walks.
+
+    ``partial_flush=True`` turns the kernel into a *segment-partial* MAC:
+    the accumulator is re-initialized at every contraction block and each
+    block's ⊞-fold is flushed to its own output slot ``out[s]`` instead of
+    carrying across blocks — the per-segment partial codes that the
+    data-parallel deterministic ⊞-allreduce combines across devices
+    (``distributed/lns_reduce.py``).
     """
     ct_step = pl.program_id(2)
 
-    @pl.when(ct_step == 0)
-    def _init():
+    if partial_flush:
+        # Every contraction block is its own segment: fresh accumulator.
         accc_ref[...] = jnp.full_like(accc_ref, np.int32(fmt.zero_code))
         accs_ref[...] = jnp.zeros_like(accs_ref)
+    else:
+        @pl.when(ct_step == 0)
+        def _init():
+            accc_ref[...] = jnp.full_like(accc_ref, np.int32(fmt.zero_code))
+            accs_ref[...] = jnp.zeros_like(accs_ref)
 
     zero = np.int32(fmt.zero_code)
     delta = _make_delta_fn(tabp_ref, tabm_ref, fmt=fmt, spec=spec,
@@ -164,10 +177,15 @@ def _mac_kernel(tabp_ref, tabm_ref, ac_ref, as_ref, bc_ref, bs_ref,
     accc_ref[...] = acc_c
     accs_ref[...] = acc_s
 
-    @pl.when(ct_step == n_ct - 1)
-    def _flush():
-        zc_ref[...] = acc_c
-        zs_ref[...] = acc_s
+    if partial_flush:
+        # Output block (1, b_r, b_c) is this segment's slot: flush always.
+        zc_ref[0, :, :] = acc_c
+        zs_ref[0, :, :] = acc_s
+    else:
+        @pl.when(ct_step == n_ct - 1)
+        def _flush():
+            zc_ref[...] = acc_c
+            zs_ref[...] = acc_s
 
 
 def _pad2(code, sign, pad_r, pad_c, zero):
@@ -179,13 +197,18 @@ def _pad2(code, sign, pad_r, pad_c, zero):
 
 def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
                 spec: DeltaSpec, a_contract_axis: int, b_contract_axis: int,
-                block_r: int, block_c: int, block_ct: int, interpret: bool):
+                block_r: int, block_c: int, block_ct: int, interpret: bool,
+                partial_flush: bool = False):
     """Shared pallas_call launcher for the three ⊞-MAC kernels.
 
     ``a``'s non-contracted axis produces output rows (R), ``b``'s produces
     output columns (C); the contraction length (CT) must agree.  R/C/CT need
     not be multiples of the block sizes (inputs are padded with the zero
     code, which is the ⊞ identity).
+
+    With ``partial_flush=True`` the contraction is *not* carried across CT
+    blocks: the call returns ``(n_ct, R, C)`` per-segment partials, one slot
+    per contraction block of ``block_ct`` rows (see ``_mac_kernel``).
     """
     a_r_axis = 1 - a_contract_axis
     b_c_axis = 1 - b_contract_axis
@@ -230,13 +253,28 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
     kernel = functools.partial(
         _mac_kernel, fmt=fmt, spec=spec, n_ct=grid[2], b_ct=block_ct,
         r_code=r_code, underflow=underflow,
-        a_contract_axis=a_contract_axis, b_contract_axis=b_contract_axis)
+        a_contract_axis=a_contract_axis, b_contract_axis=b_contract_axis,
+        partial_flush=partial_flush)
 
     tab_spec = pl.BlockSpec(tabp.shape, lambda i, j, s: (0,))
-    out_shape = [
-        jax.ShapeDtypeStruct((rp, cp), jnp.int32),
-        jax.ShapeDtypeStruct((rp, cp), jnp.int32),
-    ]
+    if partial_flush:
+        out_shape = [
+            jax.ShapeDtypeStruct((grid[2], rp, cp), jnp.int32),
+            jax.ShapeDtypeStruct((grid[2], rp, cp), jnp.int32),
+        ]
+        out_specs = [
+            pl.BlockSpec((1, block_r, block_c), lambda i, j, s: (s, i, j)),
+            pl.BlockSpec((1, block_r, block_c), lambda i, j, s: (s, i, j)),
+        ]
+    else:
+        out_shape = [
+            jax.ShapeDtypeStruct((rp, cp), jnp.int32),
+            jax.ShapeDtypeStruct((rp, cp), jnp.int32),
+        ]
+        out_specs = [
+            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
+        ]
     zcodes, zsigns = pl.pallas_call(
         kernel,
         grid=grid,
@@ -247,10 +285,7 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
             pl.BlockSpec(b_block, b_index),
             pl.BlockSpec(b_block, b_index),
         ],
-        out_specs=[
-            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
-            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
-        ],
+        out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_r, block_c), jnp.int32),
@@ -258,6 +293,8 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
         ],
         interpret=interpret,
     )(tabp, tabm, a_code, a_sign, b_code, b_sign)
+    if partial_flush:
+        return zcodes[:, :r, :c], zsigns[:, :r, :c]
     return zcodes[:r, :c], zsigns[:r, :c]
 
 
@@ -302,3 +339,31 @@ def lns_matmul_dw_pallas(x_code, x_sign, dy_code, dy_sign, *,
                        a_contract_axis=0, b_contract_axis=0,
                        block_r=block_k, block_c=block_n, block_ct=block_m,
                        interpret=interpret)
+
+
+def lns_matmul_dw_partials_pallas(x_code, x_sign, dy_code, dy_sign, *,
+                                  num_segments: int, fmt: LNSFormat,
+                                  spec: DeltaSpec, block_k: int = 128,
+                                  block_n: int = 128,
+                                  interpret: bool = True):
+    """Backward-weight kernel with per-segment partial-code flush.
+
+    The batch M is split into ``num_segments`` equal contiguous segments
+    (M must divide exactly); segment ``s`` covers rows
+    ``[s·M/S, (s+1)·M/S)``.  Returns ``(S, K, N)`` code/sign planes where
+    ``out[s] = X[seg_s]ᵀ ⊞-MAC dY[seg_s]`` with the same ascending
+    sequential MAC order *within* the segment as ``lns_matmul_dw_pallas``.
+    The partials are what the data-parallel deterministic ⊞-allreduce
+    combines in canonical segment order — combining them sequentially
+    reproduces the single-device sequential MAC schedule over the canonical
+    segmentation regardless of how segments are assigned to devices.
+    """
+    m = x_code.shape[0]
+    if num_segments < 1 or m % num_segments:
+        raise ValueError(
+            f"batch {m} not divisible into {num_segments} equal segments")
+    return _launch_mac(x_code, x_sign, dy_code, dy_sign, fmt=fmt, spec=spec,
+                       a_contract_axis=0, b_contract_axis=0,
+                       block_r=block_k, block_c=block_n,
+                       block_ct=m // num_segments, interpret=interpret,
+                       partial_flush=True)

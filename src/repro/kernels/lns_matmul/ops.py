@@ -16,8 +16,8 @@ import jax
 from ...core.delta import DeltaSpec
 from ...core.formats import LNSFormat
 from ...core.lns import LNSArray, LNSMatmulBackend, decode, encode
-from .lns_matmul import (lns_matmul_dw_pallas, lns_matmul_dx_pallas,
-                         lns_matmul_pallas)
+from .lns_matmul import (lns_matmul_dw_pallas, lns_matmul_dw_partials_pallas,
+                         lns_matmul_dx_pallas, lns_matmul_pallas)
 
 
 @partial(jax.jit, static_argnames=("kind", "fmt", "spec", "block_r",
@@ -67,6 +67,34 @@ def lns_matmul_dw_kernel(x: LNSArray, dy: LNSArray, *, fmt: LNSFormat,
     """Backward-weight kernel: Xᵀ ⊞-MAC dY (M, N) → dW (K, N)."""
     code, sign = _call("dw", x.code, x.sign, dy.code, dy.sign, fmt, spec,
                        block_k, block_n, block_m, interpret)
+    return LNSArray(code, sign.astype("int8"))
+
+
+@partial(jax.jit, static_argnames=("num_segments", "fmt", "spec", "block_k",
+                                   "block_n", "interpret"))
+def _call_dw_partials(x_code, x_sign, dy_code, dy_sign, num_segments, fmt,
+                      spec, block_k, block_n, interpret):
+    return lns_matmul_dw_partials_pallas(
+        x_code, x_sign.astype("int32"), dy_code, dy_sign.astype("int32"),
+        num_segments=num_segments, fmt=fmt, spec=spec, block_k=block_k,
+        block_n=block_n, interpret=interpret)
+
+
+def lns_matmul_dw_partials_kernel(x: LNSArray, dy: LNSArray, *,
+                                  num_segments: int, fmt: LNSFormat,
+                                  spec: DeltaSpec, block_k: int = 128,
+                                  block_n: int = 128,
+                                  interpret: bool = True) -> LNSArray:
+    """Segmented backward-weight kernel: (S, K, N) per-segment dW partials.
+
+    The batch M is cut into ``num_segments`` contiguous equal segments; slot
+    ``s`` holds the sequential ⊞-MAC over segment ``s``'s rows only.  The
+    deterministic data-parallel all-reduce (``distributed/lns_reduce.py``)
+    ⊞-combines these slots in canonical segment order.
+    """
+    code, sign = _call_dw_partials(x.code, x.sign, dy.code, dy.sign,
+                                   num_segments, fmt, spec, block_k, block_n,
+                                   interpret)
     return LNSArray(code, sign.astype("int8"))
 
 

@@ -8,6 +8,8 @@ transposed operands — the comparison is **bit-exact**, not approximate.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from ...core.arithmetic import lns_matmul
 from ...core.delta import DeltaEngine, DeltaSpec
 from ...core.formats import LNSFormat
@@ -42,3 +44,25 @@ def lns_matmul_dw_ref(x_code, x_sign, dy_code, dy_sign, *, fmt: LNSFormat,
                       spec: DeltaSpec):
     """Backward-weight oracle: dW = Xᵀ ⊞-MAC dY, sequential over M."""
     return _mm(x_code, x_sign, dy_code, dy_sign, fmt, spec, t_a=True)
+
+
+def lns_matmul_dw_partials_ref(x_code, x_sign, dy_code, dy_sign, *,
+                               num_segments: int, fmt: LNSFormat,
+                               spec: DeltaSpec):
+    """Per-segment dW oracle: out[s] = X[seg_s]ᵀ ⊞-MAC dY[seg_s].
+
+    The batch M is cut into ``num_segments`` contiguous equal segments;
+    each partial is the sequential-order dW over its segment's rows only
+    (bit-exact vs ``lns_matmul_dw_partials_pallas``).
+    """
+    m = x_code.shape[0]
+    assert m % num_segments == 0, (m, num_segments)
+    seg = m // num_segments
+    codes, signs = [], []
+    for s in range(num_segments):
+        sl = slice(s * seg, (s + 1) * seg)
+        c, sg = _mm(x_code[sl], x_sign[sl], dy_code[sl], dy_sign[sl],
+                    fmt, spec, t_a=True)
+        codes.append(c)
+        signs.append(sg)
+    return jnp.stack(codes), jnp.stack(signs)

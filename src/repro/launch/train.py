@@ -43,6 +43,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="devices on the 'data' mesh axis (batch must "
+                    "divide; emulate extra CPU devices with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--reduce-mode", default="float-psum",
+                    choices=["float-psum", "boxplus"],
+                    help="gradient all-reduce semantics; 'boxplus' is the "
+                    "paper-MLP DP path (repro.distributed.lns_dp), the LM "
+                    "step uses float-psum")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -57,8 +66,24 @@ def main(argv=None):
     opt = (AdamWConfig(lr=args.lr) if args.optimizer == "adamw"
            else SGDConfig(lr=args.lr, momentum=0.9))
     tc = TrainConfig(microbatches=args.microbatches, grad_clip=1.0,
-                     compress_grads=args.compress_grads)
+                     compress_grads=args.compress_grads,
+                     data_parallel=args.data_parallel,
+                     reduce_mode=args.reduce_mode)
     rt = Runtime()   # host mesh; production path goes through dryrun specs
+
+    batch_sharding = state_sharding = None
+    if args.data_parallel > 1:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..distributed.lns_dp import make_data_mesh
+        if args.batch % args.data_parallel:
+            raise SystemExit(f"--batch {args.batch} not divisible by "
+                             f"--data-parallel {args.data_parallel}")
+        mesh = make_data_mesh(args.data_parallel)
+        batch_sharding = NamedSharding(mesh, P("data"))
+        state_sharding = NamedSharding(mesh, P())
+        print(f"[train] data-parallel over {args.data_parallel} devices "
+              f"(reduce_mode={args.reduce_mode}; XLA inserts the gradient "
+              f"all-reduce)")
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     state = init_train_state(params, opt, tc)
@@ -72,11 +97,15 @@ def main(argv=None):
 
     ds = SyntheticLMDataset(cfg, cell, DataConfig(seed=args.seed))
     step_fn = jax.jit(make_train_step(cfg, opt, rt, tc), donate_argnums=0)
+    if state_sharding is not None:
+        state = jax.device_put(state, state_sharding)
 
     t0 = time.time()
     losses = []
     for step in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        if batch_sharding is not None:
+            batch = jax.device_put(batch, batch_sharding)
         state, metrics = step_fn(state, batch)
         losses.append(float(metrics["loss"]))
         if (step + 1) % args.log_every == 0 or step == args.steps - 1:

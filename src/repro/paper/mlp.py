@@ -55,6 +55,11 @@ class MLPConfig:
                                     # (Gupta et al. 2015; beyond-paper)
     matmul_backend: str = "emulate"  # lns only: 'emulate' | 'pallas'
     matmul_block: int = 32          # kernel tile edge; ≥128 on real TPUs
+    data_parallel: int = 1          # lns only: devices on the 'data' axis
+    reduce_mode: str = "boxplus"    # lns DP only: 'boxplus' | 'float-psum'
+    grad_segments: int = 0          # lns DP only: canonical segment count
+                                    # (0 → data_parallel); see
+                                    # distributed/lns_dp.DPConfig
 
     @property
     def lns_fmt(self):
@@ -281,4 +286,22 @@ BACKENDS = {"float": FloatMLP, "fxp": FxpMLP, "lns": LNSMLP}
 
 
 def make_mlp(backend: str, cfg: MLPConfig):
+    if cfg.data_parallel > 1 and backend != "lns":
+        raise ValueError(
+            f"data_parallel={cfg.data_parallel} is the LNS DP subsystem "
+            f"(distributed/lns_dp); the {backend!r} backend has no "
+            f"deterministic-reduce train step")
+    if backend == "lns" and (cfg.data_parallel > 1 or cfg.grad_segments):
+        # Data-parallel LNS training with the deterministic ⊞ gradient
+        # all-reduce (lazy import: distributed pulls in shard_map/mesh
+        # machinery the single-device paths never need).  An explicit
+        # grad_segments routes here even at data_parallel=1 so that
+        # single- and multi-device runs sharing a canonical segmentation
+        # are bit-identical through this public surface; the unsegmented
+        # PR-1 LNSMLP remains the default when neither is set.
+        from ..distributed.lns_dp import DPConfig, LNSDataParallelMLP
+        dp = DPConfig(num_devices=cfg.data_parallel,
+                      reduce_mode=cfg.reduce_mode,
+                      grad_segments=cfg.grad_segments)
+        return LNSDataParallelMLP(cfg, dp)
     return BACKENDS[backend](cfg)

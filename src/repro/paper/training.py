@@ -48,6 +48,8 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
                    weight_decay: float | None = None, seed: int = 0,
                    data_dir: str = "data", stochastic_round: bool = False,
                    matmul_backend: str = "emulate",
+                   data_parallel: int = 1, reduce_mode: str = "boxplus",
+                   grad_segments: int = 0,
                    max_steps_per_epoch: int | None = None) -> RunResult:
     """Train the paper MLP with one backend; returns learning curve + acc.
 
@@ -59,6 +61,13 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
     ``matmul_backend`` (lns backend only) selects the ⊞-MAC execution path:
     ``"emulate"`` (pure jnp) or ``"pallas"`` (the TPU kernels; interpret
     mode on CPU).  Both produce bit-identical weight trajectories.
+
+    ``data_parallel > 1`` (lns only) trains under ``shard_map`` over a
+    ``data`` mesh axis with the deterministic ⊞ gradient all-reduce
+    (``reduce_mode="boxplus"``, bit-stable across device counts sharing
+    ``grad_segments``) or the fast float ``psum`` escape hatch
+    (``reduce_mode="float-psum"``).  ``batch_size`` must divide into the
+    canonical segment count (``grad_segments`` or ``data_parallel``).
     """
     x, yl, x_te, y_te, spec = datasets.load(dataset, data_dir, seed)
     x_tr, y_tr, x_val, y_val = datasets.train_val_split(x, yl, 5, seed)
@@ -66,7 +75,9 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
     cfg = MLPConfig(n_out=spec.n_classes, lr=lr, weight_decay=wd,
                     bits=bits, approx=approx,
                     stochastic_round=stochastic_round,
-                    matmul_backend=matmul_backend)
+                    matmul_backend=matmul_backend,
+                    data_parallel=data_parallel, reduce_mode=reduce_mode,
+                    grad_segments=grad_segments)
     model = make_mlp(backend, cfg)
     params = model.init(jax.random.PRNGKey(seed))
 

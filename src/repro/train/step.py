@@ -28,6 +28,12 @@ class TrainConfig:
     loss_dtype: str = "float32"
     matmul_backend: Optional[str] = None  # 'emulate' | 'pallas': overrides
                                      # the ⊞-MAC path of lns*-train policies
+    data_parallel: int = 1           # devices on the 'data' mesh axis
+    reduce_mode: str = "float-psum"  # gradient all-reduce semantics:
+                                     # 'float-psum' (XLA psum; LM path) |
+                                     # 'boxplus' (deterministic log-domain
+                                     # ⊞ schedule; paper-MLP path only —
+                                     # see distributed/lns_dp.py)
 
 
 def init_train_state(params, opt_cfg: OptimizerConfig,
@@ -54,15 +60,29 @@ def _clip(grads, max_norm):
 def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
                     rt: Runtime = Runtime(),
                     tc: TrainConfig = TrainConfig()):
+    if tc.reduce_mode not in ("float-psum", "boxplus"):
+        raise ValueError(f"unknown reduce_mode {tc.reduce_mode!r}; "
+                         "expected 'float-psum' or 'boxplus'")
+    if tc.reduce_mode == "boxplus" and tc.data_parallel > 1:
+        # The LM step's gradients are float-view (custom_vjp boundary), so
+        # only the linear psum semantics apply here; the deterministic
+        # log-domain ⊞ schedule lives where gradients *are* LNS codes.
+        raise NotImplementedError(
+            "reduce_mode='boxplus' applies to the end-to-end LNS paper-MLP "
+            "path (distributed/lns_dp.LNSDataParallelMLP / "
+            "run_experiment(..., data_parallel=...)); the LM train step "
+            "reduces float gradients — use reduce_mode='float-psum'")
     if tc.matmul_backend is not None:
         # Re-point an LNS end-to-end training policy at the requested
         # ⊞-MAC backend (emulated jnp vs Pallas kernels) without the
         # caller having to know the policy-name convention.  Works for any
         # lns*-train-<backend> policy family (the backend is the trailing
         # name segment); get_policy raises if the sibling doesn't exist.
+        from ..core.lns import MATMUL_BACKENDS
         from ..core.numerics import get_policy
-        if tc.matmul_backend not in ("emulate", "pallas"):
-            raise ValueError(f"matmul_backend={tc.matmul_backend!r}")
+        if tc.matmul_backend not in MATMUL_BACKENDS:
+            raise ValueError(f"matmul_backend={tc.matmul_backend!r}; "
+                             f"expected one of {MATMUL_BACKENDS}")
         if not get_policy(cfg.numerics).lns_grad:
             raise ValueError(
                 f"TrainConfig.matmul_backend requires an LNS end-to-end "
