@@ -12,7 +12,9 @@ CPU wall times characterize the *emulation* (all "devices" are host
 threads); the numbers track the relative cost of the two reduce paths and
 the scaling trend across PRs, not TPU performance.  Emits machine-readable
 ``BENCH_dp_scaling.json`` (op, shape, backend, devices, ms_per_step,
-tok_per_s — tok = training samples).
+tok_per_s — tok = training samples — and ``spec``, the resolved
+``NumericsSpec`` string the row ran under, so every number is
+attributable to an exact configuration).
 """
 from __future__ import annotations
 
@@ -30,6 +32,7 @@ import numpy as np
 
 def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
         n_in=64, n_hidden=32, n_out=10, backend="emulate", steps=5):
+    from repro.core import NumericsSpec
     from repro.distributed.lns_dp import DPConfig, LNSDataParallelMLP
     from repro.paper.mlp import MLPConfig
 
@@ -45,11 +48,15 @@ def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
             print(f"[dp_bench] skip devices={devices} (only {avail} attached)")
             continue
         for mode in ("boxplus", "float-psum"):
+            # One spec string describes the full configuration (format, Δ,
+            # backend, reduce semantics); the DP plan derives from it.
+            spec = NumericsSpec.parse(
+                f"lns16-train-{backend},reduce.mode={mode},"
+                f"reduce.grad_segments={grad_segments}")
             cfg = MLPConfig(n_in=n_in, n_hidden=n_hidden, n_out=n_out,
-                            matmul_backend=backend, matmul_block=16)
+                            spec=spec, matmul_block=16)
             model = LNSDataParallelMLP(
-                cfg, DPConfig(num_devices=devices, reduce_mode=mode,
-                              grad_segments=grad_segments))
+                cfg, DPConfig.from_spec(spec, num_devices=devices))
             params = model.init(jax.random.PRNGKey(0))
             params, _ = model.train_step(params, xb, yb)   # compile
             t0 = time.perf_counter()
@@ -60,7 +67,8 @@ def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
             rows.append(dict(op="dp_train_step", shape=shape,
                              backend=f"{backend}/{mode}", devices=devices,
                              ms_per_step=ms, tok_per_s=batch / (ms / 1e3),
-                             note=f"loss={float(loss):.4f}"))
+                             note=f"loss={float(loss):.4f}",
+                             spec=str(spec)))
             print(f"[dp_bench] devices={devices} reduce={mode:10s} "
                   f"{ms:8.1f} ms/step  {batch / (ms / 1e3):8.0f} samples/s")
     return rows

@@ -10,8 +10,9 @@ kernel path adds (see kernels/lns_matmul/lns_matmul.py).
 
 Run as a script to also emit machine-readable ``BENCH_kernels.json``
 (one row per op × backend: op, shape, backend, devices, ms_per_step,
-tok_per_s) so the perf trajectory is tracked across PRs; ``run()`` keeps
-the legacy (name, us, note) tuples for benchmarks/run.py.
+tok_per_s, and ``spec`` — the resolved ``NumericsSpec`` string the row
+ran under, so every number is attributable to an exact configuration);
+``run()`` keeps the legacy (name, us, note) tuples for benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, LNS16,
-                        DeltaEngine, LNSMatmulBackend, encode)
+                        DeltaEngine, LNSMatmulBackend, NumericsSpec, encode)
 from repro.core.arithmetic import lns_matmul
 from repro.kernels.lns_matmul import (lns_matmul_dw_kernel,
                                       lns_matmul_dx_kernel,
@@ -51,41 +52,55 @@ def records():
 
     rows = []
 
-    def add(op, backend, us, note):
+    def add(op, backend, us, note, numerics):
         rows.append(dict(op=op, shape=shape, backend=backend, devices=1,
                          ms_per_step=us / 1e3,
-                         tok_per_s=m / (us / 1e6), note=note))
+                         tok_per_s=m / (us / 1e6), note=note,
+                         spec=str(numerics)))
 
-    add("matmul_fwd", "float", _time(jax.jit(jnp.matmul), X, W), "ref")
+    add("matmul_fwd", "float", _time(jax.jit(jnp.matmul), X, W), "ref",
+        NumericsSpec.parse("fp32"))
     for name, spec in [("lut20", DELTA_DEFAULT), ("bitshift", DELTA_BITSHIFT)]:
         eng = DeltaEngine(spec, LNS16)
+        # The resolved spec each row actually runs under: the forward
+        # emulate row times the pairwise-tree lns_matmul (the lns16-exact
+        # serving path), the sequential-MAC emulate rows are the training
+        # path, and the pallas rows pin interpret=on (this bench always
+        # runs the interpreter).
+        ns_fwd_emu = NumericsSpec(fmt=LNS16, delta_spec=spec,
+                                  quantize="params+acts",
+                                  compute_dtype="float32")
+        ns_emu = NumericsSpec(fmt=LNS16, delta_spec=spec,
+                              quantize="params+acts+grads",
+                              compute_dtype="float32", backend="emulate")
+        ns_pal = ns_emu.with_(backend="pallas", interpret="on")
         # -- forward: Z = X ⊞-MAC W ------------------------------------
         emu = jax.jit(lambda a, b, e=eng: lns_matmul(a, b, e).code)
         add("matmul_fwd", f"emulate-{name}", _time(emu, x, w),
-            "pairwise tree")
+            "pairwise tree", ns_fwd_emu)
         pal = lambda a, b, s=spec: lns_matmul_kernel(
             a, b, fmt=LNS16, spec=s, block_m=32, block_n=32, block_k=98,
             interpret=True).code
         add("matmul_fwd", f"pallas-{name}", _time(pal, x, w, reps=2),
-            "sequential MAC (interpret)")
+            "sequential MAC (interpret)", ns_pal)
         # -- backward: dX = dY ⊞ Wᵀ and dW = Xᵀ ⊞ dY --------------------
         be = LNSMatmulBackend(fmt=LNS16, spec=spec, backend="emulate")
         emu_dx = jax.jit(lambda g, b, e=be: e.matmul_dx(g, b).code)
         add("matmul_dx", f"emulate-{name}", _time(emu_dx, dy, w),
-            "sequential MAC")
+            "sequential MAC", ns_emu)
         pal_dx = lambda g, b, s=spec: lns_matmul_dx_kernel(
             g, b, fmt=LNS16, spec=s, block_m=32, block_k=98, block_n=50,
             interpret=True).code
         add("matmul_dx", f"pallas-{name}", _time(pal_dx, dy, w, reps=2),
-            "sequential MAC (interpret)")
+            "sequential MAC (interpret)", ns_pal)
         emu_dw = jax.jit(lambda a, g, e=be: e.matmul_dw(a, g).code)
         add("matmul_dw", f"emulate-{name}", _time(emu_dw, x, dy),
-            "sequential MAC")
+            "sequential MAC", ns_emu)
         pal_dw = lambda a, g, s=spec: lns_matmul_dw_kernel(
             a, g, fmt=LNS16, spec=s, block_k=98, block_n=50, block_m=32,
             interpret=True).code
         add("matmul_dw", f"pallas-{name}", _time(pal_dw, x, dy, reps=2),
-            "sequential MAC (interpret)")
+            "sequential MAC (interpret)", ns_pal)
     return rows
 
 

@@ -4,9 +4,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_SOFTMAX, LNS16,
-                        DeltaEngine, LNSMatmulBackend, boxdot, boxplus,
-                        decode, encode, lns_matmul)
+from repro.core import (DELTA_DEFAULT, LNS16, DeltaEngine, NumericsSpec,
+                        boxdot, boxplus, decode, encode, lns_matmul)
 from repro.kernels import lns_matmul_kernel, lns_matmul_trainable
 from repro.paper import run_experiment
 
@@ -33,41 +32,57 @@ Zk = decode(lns_matmul_kernel(encode(A, fmt), encode(B, fmt), fmt=fmt,
 print(f"Pallas kernel (interpret mode) matches emulation structurally; "
       f"median rel err: {np.median(np.abs(Zk - A @ B) / np.abs(A @ B)):.3f}")
 
-print("\n=== 3. Training on the kernel path (backward ⊞-MACs) ===")
-# The dispatcher selects the execution path by config, not by import:
-# backend="emulate" is the pure-jnp sequential MAC, backend="pallas" the
-# blocked TPU kernels (interpret mode on CPU) — bit-exact to each other.
-# The same switch reaches the paper MLP via
-#   run_experiment("lns", ..., matmul_backend="pallas").
+print("\n=== 3. One spec, every numerics axis (NumericsSpec → LNSRuntime) ===")
+# Every axis of the arithmetic — format, Δ approximation, which tensors
+# are quantized, ⊞-MAC execution backend, interpret mode, DP gradient
+# reduction — lives in ONE frozen, serializable descriptor.  Parse an
+# alias, or an alias plus key=value overrides; str() round-trips to the
+# canonical form (so specs travel through CLIs and checkpoint metadata):
+spec = NumericsSpec.parse("lns16-train-pallas")
+print(f"spec: {spec}")
+print(f"  fmt={spec.fmt.name} delta={spec.delta_spec.kind} "
+      f"quantize={spec.quantize} backend={spec.backend} "
+      f"reduce.mode={spec.reduce.mode}")
+# Typed overrides replace policy-name surgery; invalid values raise with
+# the valid list:
+print(f"  with_(backend='emulate') → {spec.with_(backend='emulate')}")
+print(f"  parse('lns16-train-emulate,backend=pallas') → "
+      f"{NumericsSpec.parse('lns16-train-emulate,backend=pallas')}")
+
+# The spec resolved once is an LNSRuntime: it owns the cached matmul
+# backend (emulate = pure-jnp sequential MAC, pallas = the blocked TPU
+# kernels, interpret mode on CPU — bit-exact to each other):
 for be_name in ("emulate", "pallas"):
-    be = LNSMatmulBackend(fmt=fmt, spec=DELTA_DEFAULT, backend=be_name,
-                          block_m=8, block_n=8, block_k=16)
+    rt = spec.with_(backend=be_name).runtime(block_m=8, block_n=8,
+                                             block_k=16)
     dy = encode(np.ones((4, 3), np.float32), fmt)
-    dx = be.matmul_dx(dy, encode(B, fmt))       # dY ⊞ Bᵀ, no transpose copy
+    dx = rt.matmul.matmul_dx(dy, encode(B, fmt))  # dY ⊞ Bᵀ, no transpose
     print(f"backward dX on {be_name:7s}: first code = {int(dx.code[0, 0])}")
 
-# jax.grad flows through the same path via the custom_vjp boundary:
+# jax.grad flows through the same path via the custom_vjp boundary — the
+# kernels package accepts the spec directly:
 import jax
 g = jax.grad(lambda a: lns_matmul_trainable(
-    a, B, fmt=fmt, spec=DELTA_SOFTMAX, backend="pallas", block_m=8,
+    a, B, numerics="lns16-train-pallas,delta=lut640", block_m=8,
     block_n=8, block_k=16).sum())(A)
 print(f"jax.grad through the Pallas ⊞-MAC: gA.shape = {g.shape}")
 
 print("\n=== 4. End-to-end log-domain training (paper Sec. 4-5) ===")
-r = run_experiment("lns", "mnist", bits=16, approx="lut", epochs=1,
-                   max_steps_per_epoch=80)
+# The paper MLP takes the same descriptor (numerics= / MLPConfig.spec=);
+# emulate and pallas produce bit-identical weight trajectories.
+r = run_experiment("lns", "mnist", numerics="lns16-train-emulate",
+                   epochs=1, max_steps_per_epoch=80)
 print(f"LNS-16 LUT MLP, 80 steps: val acc {r.val_curve[-1]:.3f}")
 r = run_experiment("float", "mnist", epochs=1, max_steps_per_epoch=80)
 print(f"float32 MLP,   80 steps: val acc {r.val_curve[-1]:.3f}")
 print("(run benchmarks/run.py for the full Table-1 grid)")
 
-# The data-parallel switch: the same harness shards the batch over a
-# 'data' mesh axis and reduces weight-gradient partials with a
-# deterministic ⊞ schedule, so any device count dividing grad_segments
-# yields bit-identical weight codes:
+# The data-parallel switch rides the same spec: reduce.* selects the
+# gradient-reduce semantics, so any device count dividing
+# reduce.grad_segments yields bit-identical weight codes:
 #   run_experiment("lns", "mnist", batch_size=8, data_parallel=2,
-#                  reduce_mode="boxplus", grad_segments=4)
-# (reduce_mode="float-psum" is the fast non-bit-exact escape hatch; on
+#                  numerics="lns16-train-pallas,reduce.grad_segments=4")
+# (reduce.mode=float-psum is the fast non-bit-exact escape hatch; on
 # CPU emulate extra devices with
 #  XLA_FLAGS=--xla_force_host_platform_device_count=8 — see
 #  examples/train_data_parallel.py for the full 1/2/4-device drill.)

@@ -4,14 +4,15 @@ Run:  PYTHONPATH=src python examples/serve_batched.py --arch yi-6b
 (reduced-config model; the full configs serve identically on TPU meshes —
 see repro/launch/dryrun.py decode cells for the production lowering.)
 
-The matmul path is selected by ``--numerics`` through
-:class:`repro.core.lns.LNSMatmulBackend`:
+The matmul path is selected by ``--numerics`` — a ``NumericsSpec`` alias
+or spec string resolved once by the engine into an
+:class:`repro.core.spec.LNSRuntime`:
 
 * ``fp32`` / ``bf16``      — float XLA matmuls (fastest on CPU);
 * ``lns16-exact``          — emulated ⊞-MAC (pairwise-tree order);
 * ``lns16-exact-pallas``   — the Pallas ⊞-MAC kernels (sequential MAC,
   interpret mode off-TPU): batched serving on the same kernel datapath
-  that training uses.
+  that training uses.  Equivalently: ``lns16-exact,backend=pallas``.
 """
 import argparse
 import time
@@ -20,27 +21,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core.numerics import get_policy
 from repro.nn import init_params
 from repro.serve import ServeConfig, ServingEngine
-
-
-def matmul_path(numerics: str) -> str:
-    """Human-readable description of the matmul backend a policy selects.
-
-    Mirrors ``NumericsPolicy.linear``'s dispatch: exact-spec policies only
-    reach the ``LNSMatmulBackend`` dispatcher when training log-domain
-    gradients or when a non-emulate backend is configured; plain
-    ``lns16-exact`` serves through ``lns_dot_exact`` (pairwise-tree
-    emulation order).
-    """
-    pol = get_policy(numerics)
-    if pol.exact_spec is None:
-        return f"float XLA matmul ({pol.compute_dtype})"
-    if pol.lns_grad or pol.matmul_backend != "emulate":
-        return (f"LNS ⊞-MAC via LNSMatmulBackend(backend="
-                f"'{pol.matmul_backend}')")
-    return "LNS ⊞-MAC via lns_dot_exact (emulated, pairwise-tree order)"
 
 
 def main(argv=None):
@@ -50,9 +32,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--numerics", default="fp32",
-                    help="fp32 | lns16-exact | lns16-exact-pallas (the "
-                    "kernel path; slower on CPU where the Pallas "
-                    "interpreter runs the kernels)")
+                    help="NumericsSpec alias or spec string: fp32 | "
+                    "lns16-exact | lns16-exact-pallas (the kernel path; "
+                    "slower on CPU where the Pallas interpreter runs the "
+                    "kernels) | 'lns16-exact,backend=pallas' | ...")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch)).with_(numerics=args.numerics,
@@ -73,7 +56,8 @@ def main(argv=None):
     n = sum(len(o) for o in outs)
     print(f"[serve] {args.requests} requests, {n} new tokens, "
           f"{n/dt:.1f} tok/s (continuous batching over 3 slots)")
-    print(f"[serve] batch served by: {matmul_path(args.numerics)}")
+    print(f"[serve] numerics spec: {engine.numerics.spec}")
+    print(f"[serve] batch served by: {engine.matmul_path}")
     return outs
 
 

@@ -5,13 +5,15 @@ Run:  PYTHONPATH=src python examples/train_data_parallel.py
 Emulates 8 host devices on CPU (the XLA flag below must precede the jax
 import), then trains the paper MLP on 1, 2, and 4 devices under
 ``shard_map`` and verifies the reduction-order contract of
-``repro/distributed/lns_dp.py``:
+``repro/distributed/lns_dp.py``.  The reduce semantics are one axis of
+the unified ``NumericsSpec`` (``reduce.mode`` / ``reduce.grad_segments``
+/ ``reduce.schedule``):
 
-* ``reduce_mode="boxplus"``    — per-segment dW partial codes are
+* ``reduce.mode=boxplus``    — per-segment dW partial codes are
   all-gathered in canonical segment order and ⊞-combined with a fixed
   sequential schedule → **bit-identical weight codes at every device
   count**, equal to the single-device sequential baseline.
-* ``reduce_mode="float-psum"`` — decode → psum → re-encode: faster on the
+* ``reduce.mode=float-psum`` — decode → psum → re-encode: faster on the
   wire, within quantization-level tolerance but NOT bit-stable.
 """
 import os
@@ -47,6 +49,7 @@ print(f"float-psum weights drift from the ⊞ schedule by ≤ {dev:.3%} "
 print("\n=== 3. The same switch through the paper harness ===")
 r = run_experiment("lns", "mnist", epochs=1, batch_size=8,
                    max_steps_per_epoch=10, data_parallel=2,
-                   reduce_mode="boxplus", grad_segments=4)
-print(f"run_experiment(..., data_parallel=2, reduce_mode='boxplus'): "
+                   numerics="lns16-train-emulate,reduce.grad_segments=4")
+print(f"run_experiment(..., data_parallel=2, numerics='lns16-train-"
+      f"emulate,reduce.grad_segments=4'): "
       f"val acc {r.val_curve[-1]:.3f} in {r.seconds:.1f}s")

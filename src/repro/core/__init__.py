@@ -12,7 +12,9 @@ Sub-modules:
   linear_fixed   linear-domain fixed-point baseline arithmetic
   sgd            pure-LNS SGD (+momentum, weight decay)
   qat            straight-through LNS quantization / emulated-MAC dot
-  numerics       per-op numerics policy registry (fp32/bf16/lns*)
+  spec           NumericsSpec / ReduceSpec / LNSRuntime — the unified
+                 serializable numerics descriptor and its resolution
+  numerics       alias registry over spec (fp32/bf16/lns*) + get_policy
 """
 from .arithmetic import (bias_add, boxabs_max, boxdiv, boxdot, boxminus,
                          boxneg, boxplus, boxsum, boxsum_partials,
@@ -30,6 +32,8 @@ from .lns import (MATMUL_BACKENDS, LNSArray, LNSMatmulBackend, decode,
                   encode, from_parts, quantization_bound, scalar, zeros)
 from .numerics import POLICIES, NumericsPolicy, get_policy
 from .qat import lns_dot_dispatch, lns_dot_exact, lns_quantize_ste
+from .spec import (ALIASES, INTERPRET_MODES, REDUCE_MODES, REDUCE_SCHEDULES,
+                   LNSRuntime, NumericsSpec, ReduceSpec)
 from .sgd import LogSGDConfig, apply_update, init_momentum
 from .softmax import ce_grad_init, ce_loss_readout, log_softmax_lns
 

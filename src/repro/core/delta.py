@@ -43,11 +43,22 @@ def delta_minus_float(d):
 
 @dataclasses.dataclass(frozen=True)
 class DeltaSpec:
-    """Configuration of the Δ approximation."""
+    """Configuration of the Δ approximation.
+
+    ``d_max``/``r`` only parameterize the ``lut`` kind; for ``exact`` and
+    ``bitshift`` they are normalized back to the defaults so that equal
+    behavior means equal (and equal-hash) specs — the serialization
+    round-trip in ``core.spec`` relies on this.
+    """
 
     kind: str = "lut"  # 'exact' | 'lut' | 'bitshift'
     d_max: float = 10.0
     r: float = 0.5
+
+    def __post_init__(self):
+        if self.kind != "lut":
+            object.__setattr__(self, "d_max", 10.0)
+            object.__setattr__(self, "r", 0.5)
 
     @property
     def table_size(self) -> int:

@@ -1,105 +1,44 @@
-"""Pluggable numerics policies — the paper's technique as a first-class mode.
+"""Numerics policy registry — now a thin view over ``core.spec``.
 
-Every linear layer in `repro.nn` routes its weight matmuls through a
-:class:`NumericsPolicy`.  Selecting ``lns16-qat`` (etc.) turns any assigned
-architecture into an LNS-grid-quantized model without touching model code.
+Every linear layer in ``repro.nn`` routes its weight matmuls through the
+runtime returned by :func:`get_policy`.  Selecting ``lns16-qat`` (etc.)
+turns any assigned architecture into an LNS-grid-quantized model without
+touching model code; any axis can be overridden inline in the numerics
+string (``"lns16-train-emulate,backend=pallas"``).
+
+The registry itself lives in :mod:`repro.core.spec`: ``POLICIES`` maps
+alias → :class:`~repro.core.spec.NumericsSpec` (a frozen, serializable
+descriptor), and :func:`get_policy` resolves a name / spec-string / spec
+into the cached :class:`~repro.core.spec.LNSRuntime` that owns the matmul
+backend, the Δ engine, and the per-op quantization behavior.
+
+``NumericsPolicy`` is kept as a deprecated alias of ``LNSRuntime`` for
+annotations and isinstance checks written against the pre-spec API; the
+legacy attribute names (``param_lns`` / ``exact_spec`` / ``lns_grad`` /
+``matmul_backend`` …) live on the runtime itself.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+from .spec import ALIASES, LNSRuntime, NumericsSpec, ReduceSpec
 
-import jax.numpy as jnp
+#: Alias registry: name → NumericsSpec.  (Formerly name → NumericsPolicy;
+#: behavior now resolves through ``NumericsSpec.runtime()``.)
+POLICIES = ALIASES
 
-from .delta import DELTA_DEFAULT, DeltaSpec
-from .formats import LNS12, LNS16, LNSFormat
-from .qat import lns_dot_dispatch, lns_dot_exact, lns_quantize_ste
-
-
-@dataclasses.dataclass(frozen=True)
-class NumericsPolicy:
-    name: str
-    compute_dtype: str = "bfloat16"          # dtype fed to the MXU
-    param_lns: Optional[LNSFormat] = None    # LNS grid for parameters
-    act_lns: Optional[LNSFormat] = None      # LNS grid for activations
-    exact_spec: Optional[DeltaSpec] = None   # if set: emulated ⊞-MAC forward
-    lns_grad: bool = False                   # if set: ⊞-MAC backward too
-    matmul_backend: str = "emulate"          # 'emulate' | 'pallas'
-
-    @property
-    def dtype(self):
-        return jnp.dtype(self.compute_dtype)
-
-    def q_param(self, w):
-        if self.param_lns is not None:
-            w = lns_quantize_ste(w, self.param_lns)
-        return w.astype(self.dtype)
-
-    def q_act(self, x):
-        if self.act_lns is not None:
-            x = lns_quantize_ste(x, self.act_lns)
-        return x.astype(self.dtype)
-
-    def linear(self, x, w):
-        """Contract x's last dim against w's first dim under this policy."""
-        if self.exact_spec is not None:
-            fmt = self.param_lns or LNS16
-            if self.lns_grad:
-                # Forward AND cotangent matmuls on the ⊞-MAC path
-                # (custom_vjp boundary in kernels/lns_matmul/ops.py); lazy
-                # import keeps core importable without the kernels package.
-                from ..kernels.lns_matmul import lns_matmul_trainable
-                return lns_matmul_trainable(
-                    x, w, fmt=fmt, spec=self.exact_spec,
-                    backend=self.matmul_backend)
-            if self.matmul_backend != "emulate":
-                # Forward-only on the dispatcher (Pallas kernels off the
-                # emulation): the batched-serving path of the kernels.
-                from .lns import LNSMatmulBackend
-                return lns_dot_dispatch(
-                    x, w, LNSMatmulBackend(fmt=fmt, spec=self.exact_spec,
-                                           backend=self.matmul_backend))
-            return lns_dot_exact(x, w, fmt, self.exact_spec)
-        return jnp.matmul(self.q_act(x), self.q_param(w))
+#: Deprecated name for the resolved-runtime type.
+NumericsPolicy = LNSRuntime
 
 
-POLICIES = {
-    "fp32": NumericsPolicy("fp32", compute_dtype="float32"),
-    "bf16": NumericsPolicy("bf16", compute_dtype="bfloat16"),
-    "lns16-qat": NumericsPolicy(
-        "lns16-qat", compute_dtype="bfloat16", param_lns=LNS16, act_lns=LNS16),
-    "lns12-qat": NumericsPolicy(
-        "lns12-qat", compute_dtype="bfloat16", param_lns=LNS12, act_lns=LNS12),
-    "lns16-w-only": NumericsPolicy(
-        "lns16-w-only", compute_dtype="bfloat16", param_lns=LNS16),
-    "lns16-exact": NumericsPolicy(
-        "lns16-exact", compute_dtype="float32", param_lns=LNS16,
-        act_lns=LNS16, exact_spec=DELTA_DEFAULT),
-    # Same arithmetic, forward matmuls on the Pallas kernel path via the
-    # LNSMatmulBackend dispatcher (batched serving on the kernels).  NOTE:
-    # the dispatcher runs the *sequential* MAC order; 'lns16-exact' keeps
-    # the pairwise-tree emulation order of lns_dot_exact — both are valid
-    # paper arithmetic, so the two policies differ by (bounded)
-    # approximation reordering, not semantics.
-    "lns16-exact-pallas": NumericsPolicy(
-        "lns16-exact-pallas", compute_dtype="float32", param_lns=LNS16,
-        act_lns=LNS16, exact_spec=DELTA_DEFAULT, matmul_backend="pallas"),
-    # End-to-end log-domain training: gradients run the transposed ⊞-MACs
-    # (dX = dY ⊞ Wᵀ, dW = Xᵀ ⊞ dY) instead of straight-through float
-    # matmuls — the hardware-shaped path of Hamad et al.
-    "lns16-train-emulate": NumericsPolicy(
-        "lns16-train-emulate", compute_dtype="float32", param_lns=LNS16,
-        act_lns=LNS16, exact_spec=DELTA_DEFAULT, lns_grad=True,
-        matmul_backend="emulate"),
-    "lns16-train-pallas": NumericsPolicy(
-        "lns16-train-pallas", compute_dtype="float32", param_lns=LNS16,
-        act_lns=LNS16, exact_spec=DELTA_DEFAULT, lns_grad=True,
-        matmul_backend="pallas"),
-}
+def get_policy(name: "str | NumericsSpec") -> LNSRuntime:
+    """Resolve a numerics alias / spec string / spec into its runtime.
+
+    Accepts every registry alias (``sorted(POLICIES)``), ``key=value``
+    spec strings, and alias + overrides
+    (``"lns16-train-emulate,backend=pallas"``).  Unknown names raise with
+    the valid-values list.
+    """
+    return NumericsSpec.parse(name).runtime()
 
 
-def get_policy(name: str) -> NumericsPolicy:
-    if name not in POLICIES:
-        raise KeyError(f"unknown numerics policy {name!r}; "
-                       f"have {sorted(POLICIES)}")
-    return POLICIES[name]
+__all__ = ["ALIASES", "LNSRuntime", "NumericsPolicy", "NumericsSpec",
+           "POLICIES", "ReduceSpec", "get_policy"]

@@ -40,8 +40,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core import (LNSArray, apply_update, boxdot, boxsum, ce_grad_init,
                     ce_loss_readout, encode, llrelu_grad, log_softmax_lns)
-from .lns_reduce import (REDUCE_MODES, combine_partials,
-                         deterministic_boxplus_allreduce,
+from ..core.spec import NumericsSpec, ReduceSpec
+from .lns_reduce import (combine_partials, deterministic_boxplus_allreduce,
                          float_psum_allreduce)
 
 
@@ -49,31 +49,54 @@ from .lns_reduce import (REDUCE_MODES, combine_partials,
 class DPConfig:
     """Data-parallel execution config for the LNS train step.
 
-    ``grad_segments`` fixes the canonical segmentation of the global batch.
-    Bit-identical results across device counts hold for any set of runs
-    sharing the same ``grad_segments`` (every count must divide it);
+    The reduction semantics live in one :class:`~repro.core.spec.ReduceSpec`
+    (``mode`` / ``grad_segments`` / ``schedule``) — the same object a
+    :class:`~repro.core.spec.NumericsSpec` carries, so a DP plan is derived
+    from a spec with :meth:`from_spec` (or ``runtime.dp_config``) and the
+    reduce axis is configured in exactly one place.
+
+    ``reduce.grad_segments`` fixes the canonical segmentation of the global
+    batch.  Bit-identical results across device counts hold for any set of
+    runs sharing the same ``grad_segments`` (every count must divide it);
     ``0`` resolves to ``num_devices``, which keeps same-count runs
     deterministic but ties the schedule to the device count — pass an
     explicit value when comparing different counts.
+
+    The legacy loose knobs (``reduce_mode=`` / ``grad_segments=`` /
+    ``reduce_schedule=``) are still accepted as constructor keywords and
+    fold into ``reduce``; the same names read back as properties.
     """
 
     num_devices: int = 1
-    reduce_mode: str = "boxplus"        # 'boxplus' | 'float-psum'
-    grad_segments: int = 0              # 0 → num_devices
-    reduce_schedule: str = "sequential"  # 'sequential' | 'tree'
+    reduce: ReduceSpec = ReduceSpec()
     axis_name: str = "data"
     reduce_with_kernel: bool | None = None  # None → (backend == 'pallas')
+    # legacy loose knobs, folded into ``reduce`` (None → keep spec value)
+    reduce_mode: dataclasses.InitVar["str | None"] = None
+    grad_segments: dataclasses.InitVar["int | None"] = None
+    reduce_schedule: dataclasses.InitVar["str | None"] = None
 
-    def __post_init__(self):
-        if self.reduce_mode not in REDUCE_MODES:
-            raise ValueError(f"unknown reduce_mode {self.reduce_mode!r}; "
-                             f"expected one of {REDUCE_MODES}")
+    def __post_init__(self, reduce_mode, grad_segments, reduce_schedule):
+        legacy = {k: v for k, v in (("mode", reduce_mode),
+                                    ("grad_segments", grad_segments),
+                                    ("schedule", reduce_schedule))
+                  if v is not None}
+        if legacy:
+            # ReduceSpec validation raises with the valid-values list.
+            object.__setattr__(self, "reduce", self.reduce.with_(**legacy))
         if self.num_devices < 1:
             raise ValueError(f"num_devices must be >= 1, got "
                              f"{self.num_devices}")
 
+    @classmethod
+    def from_spec(cls, spec: "NumericsSpec | str", num_devices: int = 1,
+                  **kw) -> "DPConfig":
+        """The DP plan a :class:`NumericsSpec` describes."""
+        return cls(num_devices=num_devices,
+                   reduce=NumericsSpec.parse(spec).reduce, **kw)
+
     def segments(self, global_batch: int) -> int:
-        s = self.grad_segments or self.num_devices
+        s = self.reduce.grad_segments or self.num_devices
         if s % self.num_devices:
             raise ValueError(
                 f"grad_segments={s} not divisible by "
@@ -83,6 +106,14 @@ class DPConfig:
                 f"global batch {global_batch} not divisible into {s} "
                 f"canonical segments")
         return s
+
+
+# Legacy read access: cfg.reduce_mode etc. keep working as views over the
+# nested ReduceSpec.  (Assigned post-class: the names double as InitVar
+# constructor keywords above.)
+DPConfig.reduce_mode = property(lambda self: self.reduce.mode)
+DPConfig.grad_segments = property(lambda self: self.reduce.grad_segments)
+DPConfig.reduce_schedule = property(lambda self: self.reduce.schedule)
 
 
 def make_data_mesh(num_devices: int, axis_name: str = "data") -> Mesh:
@@ -162,7 +193,7 @@ class LNSDataParallelMLP:
     def _use_kernel(self) -> bool:
         if self.dp.reduce_with_kernel is not None:
             return self.dp.reduce_with_kernel
-        return self.inner.cfg.matmul_backend == "pallas"
+        return self.inner.cfg.spec.backend == "pallas"
 
     # -- the DP step -----------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
@@ -175,10 +206,10 @@ class LNSDataParallelMLP:
         def local_fn(params, xb_l, yb_l):
             grads, loss = _per_segment_grads(inner, params, xb_l, yb_l,
                                              segs_local)
-            if dp.reduce_mode == "boxplus":
+            if dp.reduce.mode == "boxplus":
                 red = functools.partial(
                     deterministic_boxplus_allreduce, axis_name=axis,
-                    eng=inner.eng, schedule=dp.reduce_schedule,
+                    eng=inner.eng, schedule=dp.reduce.schedule,
                     use_kernel=self._use_kernel(),
                     interpret=inner.mm._interp())
             else:
@@ -237,8 +268,12 @@ def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
     rng = np.random.default_rng(seed)
     xb = rng.uniform(0, 1, size=(batch, n_in)).astype(np.float32)
     yb = rng.integers(0, n_out, size=(batch,))
+    spec = NumericsSpec.parse(
+        f"lns16-train-{matmul_backend},reduce.mode={reduce_mode},"
+        f"reduce.grad_segments={grad_segments}")
     cfg = MLPConfig(n_in=n_in, n_hidden=n_hidden, n_out=n_out,
-                    matmul_backend=matmul_backend, matmul_block=8)
+                    spec=spec.with_(**{"reduce.grad_segments": 0}),
+                    matmul_block=8)
 
     inner = LNSMLP(cfg)
     ref_params = inner.init(jax.random.PRNGKey(seed))
@@ -248,8 +283,7 @@ def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
 
     runs, ok = {}, True
     for d in device_counts:
-        dp = DPConfig(num_devices=d, reduce_mode=reduce_mode,
-                      grad_segments=grad_segments)
+        dp = DPConfig.from_spec(spec, num_devices=d)
         model = LNSDataParallelMLP(cfg, dp)
         params = model.init(jax.random.PRNGKey(seed))
         for _ in range(steps):

@@ -39,8 +39,9 @@ import jax.numpy as jnp
 from ..core.arithmetic import boxsum_partials
 from ..core.delta import DeltaEngine
 from ..core.lns import LNSArray, decode, encode
-
-REDUCE_MODES = ("boxplus", "float-psum")
+from ..core.spec import REDUCE_MODES, REDUCE_SCHEDULES  # noqa: F401
+# (re-exported: the valid values live in core.spec, next to ReduceSpec —
+# the serializable descriptor these semantics are selected by.)
 
 
 def gather_partials(p: LNSArray, axis_name: str) -> LNSArray:

@@ -19,10 +19,22 @@ def _call(codes, signs, fmt, spec, block_m, block_k, interpret):
                              interpret=interpret)
 
 
-def lns_boxsum_kernel(x: LNSArray, *, fmt: LNSFormat, spec: DeltaSpec,
+def lns_boxsum_kernel(x: LNSArray, *, fmt: LNSFormat | None = None,
+                      spec: DeltaSpec | None = None,
                       block_m: int = 128, block_k: int = 128,
-                      interpret: bool = True) -> LNSArray:
-    """⊞-reduce an (M, K) LNSArray over axis 1 (the softmax Σ⊞)."""
+                      interpret: bool | None = None,
+                      numerics=None) -> LNSArray:
+    """⊞-reduce an (M, K) LNSArray over axis 1 (the softmax Σ⊞).
+
+    ``fmt`` / ``spec`` / ``interpret`` may instead come from one
+    ``numerics``: a :class:`~repro.core.spec.NumericsSpec` (or parseable
+    spec string); explicit pieces win.  ``interpret`` defaults to ``True``
+    (CPU validation) when neither supplies it.
+    """
+    from ...core.spec import resolve_kernel_args
+    fmt, spec, _, interpret = resolve_kernel_args(
+        numerics, fmt=fmt, spec=spec, interpret=interpret,
+        op="lns_boxsum_kernel")
     code, sign = _call(x.code, x.sign, fmt, spec, block_m, block_k,
-                       interpret)
+                       True if interpret is None else interpret)
     return LNSArray(code, sign.astype("int8"))

@@ -101,6 +101,23 @@ def lns_matmul_dw_partials_kernel(x: LNSArray, dy: LNSArray, *,
 # ------------------------------------------------------------------------
 # Differentiable op: LNS forward AND backward under jax.grad
 # ------------------------------------------------------------------------
+def _resolve_numerics(numerics, fmt, spec, backend, interpret):
+    """Fill the ⊞-MAC config pieces from a NumericsSpec, explicit args win.
+
+    ``backend`` defaults to ``"pallas"`` when neither an explicit value nor
+    a spec supplies one (this is the kernels package, after all);
+    ``interpret=None`` keeps the backend's call-time auto-resolution unless
+    the spec pins it on/off.
+    """
+    from ...core.spec import resolve_kernel_args
+    fmt, spec, backend, interpret = resolve_kernel_args(
+        numerics, fmt=fmt, spec=spec, backend=backend, interpret=interpret,
+        op="lns_matmul_trainable")
+    return fmt, spec, (backend if backend is not None else "pallas"), \
+        interpret
+
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _trainable(x, w, be: LNSMatmulBackend):
     z = be.matmul(encode(x, be.fmt), encode(w, be.fmt))
@@ -127,11 +144,13 @@ def _trainable_bwd(be, res, g):
 _trainable.defvjp(_trainable_fwd, _trainable_bwd)
 
 
-def lns_matmul_trainable(x, w, *, fmt: LNSFormat, spec: DeltaSpec,
-                         backend: str = "pallas",
+def lns_matmul_trainable(x, w, *, fmt: LNSFormat | None = None,
+                         spec: DeltaSpec | None = None,
+                         backend: str | None = None,
                          block_m: int = 128, block_n: int = 128,
                          block_k: int = 128,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         numerics=None):
     """Differentiable float-view matmul on the log-domain MAC path.
 
     ``x``: (..., K) float, ``w``: (K, N) float.  Forward encodes both
@@ -140,7 +159,14 @@ def lns_matmul_trainable(x, w, *, fmt: LNSFormat, spec: DeltaSpec,
     (dX = dY ⊞ Wᵀ, dW = Xᵀ ⊞ dY) on the same path — no float matmul in
     either direction.  Every later scaling PR (sharded training, batched
     serving on the kernel path) composes with this boundary.
+
+    The arithmetic is configured either by the explicit ``fmt`` / ``spec``
+    / ``backend`` / ``interpret`` pieces or, preferably, by one
+    ``numerics``: a :class:`~repro.core.spec.NumericsSpec` (or parseable
+    spec string) supplying all four; explicit pieces win over the spec.
     """
+    fmt, spec, backend, interpret = _resolve_numerics(
+        numerics, fmt, spec, backend, interpret)
     be = LNSMatmulBackend(fmt=fmt, spec=spec, backend=backend,
                           block_m=block_m, block_n=block_n, block_k=block_k,
                           interpret=interpret)

@@ -20,6 +20,7 @@ import numpy as np
 
 from ..configs import get_config, reduced
 from ..ckpt import CheckpointManager
+from ..core.spec import NumericsSpec
 from ..data import DataConfig, SyntheticLMDataset
 from ..nn import Runtime, init_params
 from ..nn.config import ShapeCell
@@ -36,7 +37,11 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--optimizer", choices=["adamw", "sgd"], default="adamw")
     ap.add_argument("--numerics", default="bf16",
-                    help="bf16 | fp32 | lns16-qat | lns12-qat | lns16-exact")
+                    help="a NumericsSpec alias (bf16 | fp32 | lns16-qat | "
+                    "lns12-qat | lns16-exact | lns16-train-{emulate,pallas} "
+                    "| ...) optionally followed by key=value overrides, "
+                    "e.g. 'lns16-train-pallas,reduce.mode=boxplus' or "
+                    "'lns16-train-emulate,backend=pallas'")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--ckpt-dir", default=None)
@@ -47,11 +52,13 @@ def main(argv=None):
                     help="devices on the 'data' mesh axis (batch must "
                     "divide; emulate extra CPU devices with XLA_FLAGS="
                     "--xla_force_host_platform_device_count=N)")
-    ap.add_argument("--reduce-mode", default="float-psum",
+    ap.add_argument("--reduce-mode", default=None,
                     choices=["float-psum", "boxplus"],
                     help="gradient all-reduce semantics; 'boxplus' is the "
                     "paper-MLP DP path (repro.distributed.lns_dp), the LM "
-                    "step uses float-psum")
+                    "step uses float-psum.  Default: whatever the "
+                    "--numerics spec says (reduce.mode=...), else "
+                    "float-psum")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -59,16 +66,27 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    cfg = cfg.with_(numerics=args.numerics,
+    # Fold an explicit CLI --reduce-mode into the numerics string (an
+    # explicit flag wins over a reduce.mode inside --numerics: later
+    # key=value tokens override earlier ones).  The string is validated
+    # here, so a bad alias/override fails before any compilation, and kept
+    # as written (not canonicalized) so an explicit reduce.mode=boxplus —
+    # which canonicalization would strip as an alias default — still
+    # reaches make_train_step's supported-modes guard.
+    numerics = args.numerics
+    if args.reduce_mode is not None:
+        numerics += f",reduce.mode={args.reduce_mode}"
+    spec = NumericsSpec.parse(numerics)
+    cfg = cfg.with_(numerics=numerics,
                     remat="none" if args.reduced else "block")
+    print(f"[train] numerics spec: {spec}")
     cell = ShapeCell("train_cli", args.seq, args.batch, "train")
 
     opt = (AdamWConfig(lr=args.lr) if args.optimizer == "adamw"
            else SGDConfig(lr=args.lr, momentum=0.9))
     tc = TrainConfig(microbatches=args.microbatches, grad_clip=1.0,
                      compress_grads=args.compress_grads,
-                     data_parallel=args.data_parallel,
-                     reduce_mode=args.reduce_mode)
+                     data_parallel=args.data_parallel)
     rt = Runtime()   # host mesh; production path goes through dryrun specs
 
     batch_sharding = state_sharding = None
@@ -81,8 +99,11 @@ def main(argv=None):
         mesh = make_data_mesh(args.data_parallel)
         batch_sharding = NamedSharding(mesh, P("data"))
         state_sharding = NamedSharding(mesh, P())
+        eff_mode = (spec.reduce.mode
+                    if "reduce.mode" in NumericsSpec.explicit_keys(numerics)
+                    else "float-psum")
         print(f"[train] data-parallel over {args.data_parallel} devices "
-              f"(reduce_mode={args.reduce_mode}; XLA inserts the gradient "
+              f"(reduce.mode={eff_mode}; XLA inserts the gradient "
               f"all-reduce)")
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)

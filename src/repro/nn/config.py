@@ -85,7 +85,12 @@ class ModelConfig:
     frontend: Optional[str] = None   # audio_stub | vision_stub
     frontend_frac: float = 0.25      # fraction of sequence from the frontend
     # execution
-    numerics: str = "bf16"
+    numerics: str = "bf16"           # NumericsSpec alias or spec string,
+                                     # e.g. "lns16-train-emulate,
+                                     # backend=pallas" (kept as a string so
+                                     # the config stays trivially
+                                     # serializable; parse via
+                                     # .numerics_spec)
     param_dtype: str = "float32"     # master weights
     q_chunk: int = 512               # query-chunked attention block
     attn_bands: int = 8              # banded-causal KV extents (see
@@ -124,6 +129,14 @@ class ModelConfig:
 
     def with_(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
+
+    @property
+    def numerics_spec(self):
+        """The parsed :class:`~repro.core.spec.NumericsSpec` of
+        ``numerics`` (cached by the parser; raises with the valid-values
+        list on an unknown alias/key)."""
+        from ..core.spec import NumericsSpec
+        return NumericsSpec.parse(self.numerics)
 
     # ---- parameter counting (for 6·N·D roofline model flops) -------------
     def param_count(self) -> int:

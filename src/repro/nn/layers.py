@@ -4,16 +4,18 @@ All layers are pure functions over explicit param pytrees; ``init_*``
 functions are pure in the PRNG key so ``jax.eval_shape`` can derive
 ShapeDtypeStruct trees for the dry-run without allocating.
 
-Weight matmuls route through the model's NumericsPolicy (core/numerics.py),
-which is how the paper's LNS arithmetic becomes a first-class mode for
-every architecture.
+Weight matmuls route through the model's resolved numerics runtime
+(``core.spec.LNSRuntime``, obtained via ``core.numerics.get_policy`` from
+the config's ``NumericsSpec`` string), which is how the paper's LNS
+arithmetic becomes a first-class mode for every architecture.
+``NumericsPolicy`` below is the legacy alias of that runtime type.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ..core.numerics import NumericsPolicy
+from ..core.numerics import NumericsPolicy  # = core.spec.LNSRuntime
 from .config import ModelConfig
 
 

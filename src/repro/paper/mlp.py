@@ -11,16 +11,20 @@ Backprop follows eq. (10)-(14): δ2 = P ⊟ Y, gW2 = a1ᵀ ⊡⊞ δ2, δ1 =
 (δ2 ⊡⊞ W2ᵀ) ⊡ llReLU'(z1), gW1 = xᵀ ⊡⊞ δ1, SGD per core/sgd.py.
 
 All LNS matmuls (forward *and* the three backward products) route through
-:class:`~repro.core.lns.LNSMatmulBackend`, selected by
-``MLPConfig.matmul_backend``: ``"emulate"`` runs the pure-jnp sequential
-MAC, ``"pallas"`` the blocked TPU kernels (interpret mode on CPU).  The
-two backends are bit-exact down to the last weight code, so experiments
-validated on one transfer to the other unchanged.
+the :class:`~repro.core.spec.LNSRuntime` resolved from ``MLPConfig.spec``
+(a :class:`~repro.core.spec.NumericsSpec`): ``backend="emulate"`` runs the
+pure-jnp sequential MAC, ``"pallas"`` the blocked TPU kernels (interpret
+mode on CPU).  The two backends are bit-exact down to the last weight
+code, so experiments validated on one transfer to the other unchanged.
+The legacy loose knobs (``matmul_backend=`` / ``reduce_mode=`` /
+``grad_segments=``) still construct, with a ``DeprecationWarning``
+pointing at the spec field they fold into.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -30,16 +34,20 @@ import numpy as np
 from ..core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
                     DELTA_SOFTMAX, FXP12, FXP16, LNS12, LNS16, DeltaEngine,
                     DeltaSpec, LNSArray, LNSMatmulBackend, LogSGDConfig,
-                    apply_update, beta_code, boxabs_max, boxdot, boxsum,
-                    ce_grad_init, ce_loss_readout, decode, encode, he_sigma,
-                    llrelu, llrelu_grad, log_normal_init, log_softmax_lns,
-                    scalar, zeros)
+                    NumericsSpec, apply_update, beta_code, boxabs_max,
+                    boxdot, boxsum, ce_grad_init, ce_loss_readout, decode,
+                    encode, he_sigma, llrelu, llrelu_grad, log_normal_init,
+                    log_softmax_lns, scalar, zeros)
 from ..core.linear_fixed import (fxp_affine, fxp_decode, fxp_encode,
                                  fxp_leaky_relu, fxp_leaky_relu_grad,
                                  fxp_matmul, fxp_mul, fxp_sat)
+from ..core.spec import LNSRuntime
 
 HIDDEN = 100
 ALPHA = 0.01  # leaky-ReLU slope [20]
+
+_APPROX_DELTA = {"lut": DELTA_DEFAULT, "bitshift": DELTA_BITSHIFT,
+                 "exact": DELTA_EXACT}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,16 +61,50 @@ class MLPConfig:
     approx: str = "lut"            # 'lut' | 'bitshift' | 'exact' (lns only)
     stochastic_round: bool = False  # fxp only: SR on the weight update
                                     # (Gupta et al. 2015; beyond-paper)
-    matmul_backend: str = "emulate"  # lns only: 'emulate' | 'pallas'
+    spec: Any = None                # NumericsSpec | spec string | None;
+                                    # None → derived from bits/approx
+                                    # (end-to-end train spec, emulate)
     matmul_block: int = 32          # kernel tile edge; ≥128 on real TPUs
     data_parallel: int = 1          # lns only: devices on the 'data' axis
-    reduce_mode: str = "boxplus"    # lns DP only: 'boxplus' | 'float-psum'
-    grad_segments: int = 0          # lns DP only: canonical segment count
-                                    # (0 → data_parallel); see
-                                    # distributed/lns_dp.DPConfig
+    # -- legacy loose knobs, deprecated: fold into ``spec`` ----------------
+    matmul_backend: dataclasses.InitVar[Any] = None   # → spec.backend
+    reduce_mode: dataclasses.InitVar[Any] = None      # → spec.reduce.mode
+    grad_segments: dataclasses.InitVar[Any] = None    # → spec.reduce
+                                                      #   .grad_segments
+
+    def __post_init__(self, matmul_backend, reduce_mode, grad_segments):
+        spec = self.spec
+        if spec is not None:
+            spec = NumericsSpec.parse(spec)
+        else:
+            # The paper's end-to-end log-domain training arithmetic at
+            # this config's format / Δ approximation.
+            spec = NumericsSpec(
+                fmt=self.lns_fmt, delta_spec=_APPROX_DELTA[self.approx],
+                quantize="params+acts+grads", compute_dtype="float32")
+        # A legacy value equal to what the spec already resolves to is a
+        # no-op and stays silent — this also keeps dataclasses.replace()
+        # warning-free (replace() re-passes the property-read values of
+        # the InitVar names, which by construction equal the spec's).
+        current = {"backend": spec.backend, "reduce.mode": spec.reduce.mode,
+                   "reduce.grad_segments": spec.reduce.grad_segments}
+        legacy = {k: v for k, v in (("backend", matmul_backend),
+                                    ("reduce.mode", reduce_mode),
+                                    ("reduce.grad_segments", grad_segments))
+                  if v is not None and v != current[k]}
+        if legacy:
+            spec = spec.with_(**legacy)
+            warnings.warn(
+                f"MLPConfig(matmul_backend=/reduce_mode=/grad_segments=) "
+                f"are deprecated; pass the unified descriptor instead: "
+                f"MLPConfig(spec={str(spec)!r})",
+                DeprecationWarning, stacklevel=3)
+        object.__setattr__(self, "spec", spec)
 
     @property
     def lns_fmt(self):
+        if isinstance(self.spec, NumericsSpec) and self.spec.fmt is not None:
+            return self.spec.fmt
         return LNS16 if self.bits == 16 else LNS12
 
     @property
@@ -71,14 +113,40 @@ class MLPConfig:
 
     @property
     def delta_spec(self) -> DeltaSpec:
-        return {"lut": DELTA_DEFAULT, "bitshift": DELTA_BITSHIFT,
-                "exact": DELTA_EXACT}[self.approx]
+        if (isinstance(self.spec, NumericsSpec)
+                and self.spec.delta_spec is not None):
+            return self.spec.delta_spec
+        return _APPROX_DELTA[self.approx]
 
     @property
     def softmax_spec(self) -> DeltaSpec:
         # Paper: softmax is approximation-sensitive → r = 1/64 table,
         # also when the rest of the net uses bit-shifts.
-        return DELTA_EXACT if self.approx == "exact" else DELTA_SOFTMAX
+        return DELTA_EXACT if self.delta_spec.kind == "exact" \
+            else DELTA_SOFTMAX
+
+    def runtime(self) -> LNSRuntime:
+        """The resolved LNS runtime (matmul backend at this tile size).
+
+        The paper MLP always runs the end-to-end ⊞-MAC path, so a spec
+        without an explicit fmt/Δ (e.g. ``"fp32"`` passed through) is
+        completed from ``bits`` / ``approx`` before resolution.
+        """
+        spec = self.spec
+        if spec.fmt is None or spec.delta_spec is None:
+            spec = spec.with_(fmt=self.lns_fmt, delta_spec=self.delta_spec)
+        return spec.runtime(block_m=self.matmul_block,
+                            block_n=self.matmul_block,
+                            block_k=self.matmul_block)
+
+
+# Legacy read access (cfg.matmul_backend etc.): views over the spec.  The
+# names double as deprecated constructor keywords (InitVars) above, so the
+# properties are attached post-class.
+MLPConfig.matmul_backend = property(lambda self: self.spec.backend)
+MLPConfig.reduce_mode = property(lambda self: self.spec.reduce.mode)
+MLPConfig.grad_segments = property(
+    lambda self: self.spec.reduce.grad_segments)
 
 
 # ---------------------------------------------------------------- float --
@@ -227,12 +295,12 @@ class LNSMLP:
         self.eng_sm = DeltaEngine(cfg.softmax_spec, self.fmt)
         self.beta = beta_code(ALPHA, self.fmt)
         self.sgd = LogSGDConfig(lr=cfg.lr, weight_decay=cfg.weight_decay)
-        # All four training matmuls (fwd ×2, dX, dW) go through the
-        # dispatcher; emulate and pallas agree bit-exactly (sequential MAC).
-        self.mm = LNSMatmulBackend(
-            fmt=self.fmt, spec=cfg.delta_spec, backend=cfg.matmul_backend,
-            block_m=cfg.matmul_block, block_n=cfg.matmul_block,
-            block_k=cfg.matmul_block)
+        # The spec resolved once: all four training matmuls (fwd ×2, dX,
+        # dW) go through runtime.matmul — the config-selected
+        # LNSMatmulBackend; emulate and pallas agree bit-exactly
+        # (sequential MAC).
+        self.runtime = cfg.runtime()
+        self.mm = self.runtime.matmul
 
     def init(self, key):
         k1, k2 = jax.random.split(key)
@@ -291,7 +359,8 @@ def make_mlp(backend: str, cfg: MLPConfig):
             f"data_parallel={cfg.data_parallel} is the LNS DP subsystem "
             f"(distributed/lns_dp); the {backend!r} backend has no "
             f"deterministic-reduce train step")
-    if backend == "lns" and (cfg.data_parallel > 1 or cfg.grad_segments):
+    if backend == "lns" and (cfg.data_parallel > 1
+                             or cfg.spec.reduce.grad_segments):
         # Data-parallel LNS training with the deterministic ⊞ gradient
         # all-reduce (lazy import: distributed pulls in shard_map/mesh
         # machinery the single-device paths never need).  An explicit
@@ -301,7 +370,6 @@ def make_mlp(backend: str, cfg: MLPConfig):
         # PR-1 LNSMLP remains the default when neither is set.
         from ..distributed.lns_dp import DPConfig, LNSDataParallelMLP
         dp = DPConfig(num_devices=cfg.data_parallel,
-                      reduce_mode=cfg.reduce_mode,
-                      grad_segments=cfg.grad_segments)
+                      reduce=cfg.spec.reduce)
         return LNSDataParallelMLP(cfg, dp)
     return BACKENDS[backend](cfg)

@@ -47,9 +47,11 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
                    batch_size: int = 5, lr: float = 0.01,
                    weight_decay: float | None = None, seed: int = 0,
                    data_dir: str = "data", stochastic_round: bool = False,
-                   matmul_backend: str = "emulate",
-                   data_parallel: int = 1, reduce_mode: str = "boxplus",
-                   grad_segments: int = 0,
+                   numerics=None,
+                   matmul_backend: str | None = None,
+                   data_parallel: int = 1,
+                   reduce_mode: str | None = None,
+                   grad_segments: int | None = None,
                    max_steps_per_epoch: int | None = None) -> RunResult:
     """Train the paper MLP with one backend; returns learning curve + acc.
 
@@ -58,26 +60,32 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
     fit this container's CPU budget (the LNS path emulates every ⊞ in
     integer ops); pass epochs=20 and real IDX data for the full protocol.
 
-    ``matmul_backend`` (lns backend only) selects the ⊞-MAC execution path:
-    ``"emulate"`` (pure jnp) or ``"pallas"`` (the TPU kernels; interpret
-    mode on CPU).  Both produce bit-identical weight trajectories.
-
-    ``data_parallel > 1`` (lns only) trains under ``shard_map`` over a
-    ``data`` mesh axis with the deterministic ⊞ gradient all-reduce
-    (``reduce_mode="boxplus"``, bit-stable across device counts sharing
-    ``grad_segments``) or the fast float ``psum`` escape hatch
-    (``reduce_mode="float-psum"``).  ``batch_size`` must divide into the
-    canonical segment count (``grad_segments`` or ``data_parallel``).
+    ``numerics`` (lns backend only) is the unified arithmetic descriptor —
+    a :class:`~repro.core.spec.NumericsSpec` or spec string such as
+    ``"lns16-train-pallas"`` or
+    ``"lns16-train-emulate,reduce.mode=float-psum,reduce.grad_segments=4"``
+    — selecting the ⊞-MAC execution backend (``backend=emulate|pallas``,
+    bit-identical weight trajectories) and, with ``data_parallel > 1``,
+    the gradient-reduce semantics: ``reduce.mode=boxplus`` is the
+    deterministic ⊞ all-reduce (bit-stable across device counts sharing
+    ``reduce.grad_segments``), ``float-psum`` the fast escape hatch.
+    ``batch_size`` must divide into the canonical segment count
+    (``grad_segments`` or ``data_parallel``).  The loose
+    ``matmul_backend=`` / ``reduce_mode=`` / ``grad_segments=`` keywords
+    are the deprecated pre-spec spelling (forwarded to ``MLPConfig``,
+    which warns).
     """
     x, yl, x_te, y_te, spec = datasets.load(dataset, data_dir, seed)
     x_tr, y_tr, x_val, y_val = datasets.train_val_split(x, yl, 5, seed)
     wd = WEIGHT_DECAY[bits] if weight_decay is None else weight_decay
+    legacy = {k: v for k, v in (("matmul_backend", matmul_backend),
+                                ("reduce_mode", reduce_mode),
+                                ("grad_segments", grad_segments))
+              if v is not None}
     cfg = MLPConfig(n_out=spec.n_classes, lr=lr, weight_decay=wd,
                     bits=bits, approx=approx,
                     stochastic_round=stochastic_round,
-                    matmul_backend=matmul_backend,
-                    data_parallel=data_parallel, reduce_mode=reduce_mode,
-                    grad_segments=grad_segments)
+                    spec=numerics, data_parallel=data_parallel, **legacy)
     model = make_mlp(backend, cfg)
     params = model.init(jax.random.PRNGKey(seed))
 

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.numerics import get_policy
 from ..nn import Runtime, decode_step, init_decode_caches, prefill
 from ..nn.config import ModelConfig
 
@@ -36,6 +37,10 @@ class ServingEngine:
         self.params = params
         self.sc = sc
         self.rt = rt
+        # Resolve the model's numerics spec once: every decode-step matmul
+        # routes through this runtime (fails fast on a bad spec string,
+        # before any compilation).
+        self.numerics = get_policy(cfg.numerics)
         self.caches = init_decode_caches(
             cfg, sc.max_batch, sc.max_len,
             jnp.dtype(cfg.param_dtype), enc_len=sc.max_len)
@@ -46,6 +51,13 @@ class ServingEngine:
         self._step = jax.jit(
             lambda p, t, c, q: decode_step(p, t, c, q, cfg, rt))
         self._rng = jax.random.PRNGKey(sc.seed)
+
+    @property
+    def matmul_path(self) -> str:
+        """The matmul path serving runs on, straight from the runtime
+        (lives next to ``LNSRuntime.linear`` so it cannot drift from the
+        actual dispatch)."""
+        return self.numerics.matmul_path
 
     # -- slot management ---------------------------------------------------
     def add_request(self, prompt: np.ndarray) -> Optional[int]:

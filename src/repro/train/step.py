@@ -9,11 +9,13 @@ leaf-for-leaf.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..core.spec import NumericsSpec
 from ..nn import Runtime, loss_fn
 from ..nn.config import ModelConfig
 from ..optim import fake_compress_roundtrip, make_optimizer
@@ -22,18 +24,73 @@ from ..optim.optimizers import OptimizerConfig
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
+    """Execution config of the LM train step.
+
+    Numerics axes (⊞-MAC backend, gradient-reduce semantics) belong to the
+    model's :class:`~repro.core.spec.NumericsSpec` — set them in
+    ``ModelConfig.numerics`` (``"lns16-train-emulate,backend=pallas"``,
+    ``"bf16,reduce.mode=float-psum"``, …).  The loose ``matmul_backend=``
+    and ``reduce_mode=`` keywords are the deprecated pre-spec spelling;
+    they still work (folded into the spec by ``resolve_numerics``) with a
+    ``DeprecationWarning``.
+    """
+
     microbatches: int = 1            # gradient-accumulation splits
     grad_clip: float = 0.0           # global-norm clip; 0 = off
     compress_grads: bool = False     # log-int8 roundtrip + error feedback
     loss_dtype: str = "float32"
-    matmul_backend: Optional[str] = None  # 'emulate' | 'pallas': overrides
-                                     # the ⊞-MAC path of lns*-train policies
+    matmul_backend: Optional[str] = None  # DEPRECATED → numerics spec
+                                     # 'backend=' override
     data_parallel: int = 1           # devices on the 'data' mesh axis
-    reduce_mode: str = "float-psum"  # gradient all-reduce semantics:
-                                     # 'float-psum' (XLA psum; LM path) |
-                                     # 'boxplus' (deterministic log-domain
-                                     # ⊞ schedule; paper-MLP path only —
+    reduce_mode: Optional[str] = None  # DEPRECATED → numerics spec
+                                     # 'reduce.mode='.  None resolves to
+                                     # the spec's reduce.mode; the LM path
+                                     # supports 'float-psum' only (boxplus
+                                     # is the paper-MLP DP subsystem —
                                      # see distributed/lns_dp.py)
+
+    def __post_init__(self):
+        legacy = [f"{k}={v!r}" for k, v in
+                  (("matmul_backend", self.matmul_backend),
+                   ("reduce_mode", self.reduce_mode)) if v is not None]
+        if legacy:
+            hints = []
+            if self.matmul_backend is not None:
+                hints.append(f"backend={self.matmul_backend}")
+            if self.reduce_mode is not None:
+                hints.append(f"reduce.mode={self.reduce_mode}")
+            warnings.warn(
+                f"TrainConfig({', '.join(legacy)}) is deprecated; append "
+                f"the override to the numerics spec instead, e.g. "
+                f"ModelConfig.numerics='<spec>,{','.join(hints)}'",
+                DeprecationWarning, stacklevel=3)
+
+
+def resolve_numerics(cfg: ModelConfig,
+                     tc: "TrainConfig" = None) -> tuple[ModelConfig,
+                                                        NumericsSpec]:
+    """Fold TrainConfig's legacy numerics overrides into one resolved spec.
+
+    Parses ``cfg.numerics`` (alias, spec string, or alias + ``key=value``
+    overrides), applies ``tc.matmul_backend`` / ``tc.reduce_mode`` as typed
+    ``spec.with_(...)`` overrides (invalid values raise with the
+    valid-values list), and returns ``(cfg with canonical numerics string,
+    spec)``.  This replaces the old policy-name string surgery
+    (``cfg.numerics.rsplit("-", 1)[0] + "-" + tc.matmul_backend``): the
+    override is a dataclass-field update, so it works for *any* spec — no
+    naming convention required.
+    """
+    spec = NumericsSpec.parse(cfg.numerics)
+    if tc is not None and tc.matmul_backend is not None:
+        if not spec.lns_grad:
+            raise ValueError(
+                f"the matmul-backend override requires an LNS end-to-end "
+                f"training spec (quantize includes 'grads'), got "
+                f"{cfg.numerics!r}")
+        spec = spec.with_(backend=tc.matmul_backend)
+    if tc is not None and tc.reduce_mode is not None:
+        spec = spec.with_(**{"reduce.mode": tc.reduce_mode})
+    return cfg.with_(numerics=str(spec)), spec
 
 
 def init_train_state(params, opt_cfg: OptimizerConfig,
@@ -60,36 +117,31 @@ def _clip(grads, max_norm):
 def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
                     rt: Runtime = Runtime(),
                     tc: TrainConfig = TrainConfig()):
-    if tc.reduce_mode not in ("float-psum", "boxplus"):
-        raise ValueError(f"unknown reduce_mode {tc.reduce_mode!r}; "
-                         "expected 'float-psum' or 'boxplus'")
-    if tc.reduce_mode == "boxplus" and tc.data_parallel > 1:
+    # One resolved spec decides every numerics axis (⊞-MAC backend,
+    # reduce semantics); legacy TrainConfig overrides fold in here.  The
+    # spec's ReduceSpec defaults to boxplus (the paper-MLP contract), but
+    # the LM step always reduces float-psum — so only an *explicit*
+    # boxplus request (a reduce.mode key in the numerics string, detected
+    # by the parser's own tokenizer, or the deprecated knob) trips the
+    # not-supported guard.  Best-effort by design: canonical spec strings
+    # never carry alias-default fields, so a round-trip through str()
+    # drops an explicit boxplus marker and skips this diagnostic — the
+    # executed semantics are float-psum either way (the guard gates an
+    # error message, never the arithmetic).
+    requested_boxplus = (
+        tc.reduce_mode == "boxplus"
+        or ("reduce.mode" in NumericsSpec.explicit_keys(cfg.numerics)
+            and NumericsSpec.parse(cfg.numerics).reduce.mode == "boxplus"))
+    cfg, spec = resolve_numerics(cfg, tc)
+    if requested_boxplus and tc.data_parallel > 1:
         # The LM step's gradients are float-view (custom_vjp boundary), so
         # only the linear psum semantics apply here; the deterministic
         # log-domain ⊞ schedule lives where gradients *are* LNS codes.
         raise NotImplementedError(
-            "reduce_mode='boxplus' applies to the end-to-end LNS paper-MLP "
+            "reduce.mode='boxplus' applies to the end-to-end LNS paper-MLP "
             "path (distributed/lns_dp.LNSDataParallelMLP / "
             "run_experiment(..., data_parallel=...)); the LM train step "
-            "reduces float gradients — use reduce_mode='float-psum'")
-    if tc.matmul_backend is not None:
-        # Re-point an LNS end-to-end training policy at the requested
-        # ⊞-MAC backend (emulated jnp vs Pallas kernels) without the
-        # caller having to know the policy-name convention.  Works for any
-        # lns*-train-<backend> policy family (the backend is the trailing
-        # name segment); get_policy raises if the sibling doesn't exist.
-        from ..core.lns import MATMUL_BACKENDS
-        from ..core.numerics import get_policy
-        if tc.matmul_backend not in MATMUL_BACKENDS:
-            raise ValueError(f"matmul_backend={tc.matmul_backend!r}; "
-                             f"expected one of {MATMUL_BACKENDS}")
-        if not get_policy(cfg.numerics).lns_grad:
-            raise ValueError(
-                f"TrainConfig.matmul_backend requires an LNS end-to-end "
-                f"training policy (lns_grad=True), got {cfg.numerics!r}")
-        target = cfg.numerics.rsplit("-", 1)[0] + "-" + tc.matmul_backend
-        get_policy(target)  # fail fast with the known-policies message
-        cfg = cfg.with_(numerics=target)
+            "reduces float gradients — use reduce.mode='float-psum'")
     _, opt_update = make_optimizer(opt_cfg)
 
     def grads_of(params, batch):

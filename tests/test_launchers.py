@@ -25,6 +25,24 @@ def test_train_resume_drill(tmp_path):
     assert max(losses2) < 2.0 * max(losses1), "resumed loss diverged"
 
 
+def test_train_cli_numerics_alias_and_override(capsys):
+    """--numerics accepts a registry alias plus key=value overrides; the
+    resolved canonical spec string is echoed and drives the step."""
+    common = ["--arch", "olmo-1b", "--steps", "2", "--batch", "2",
+              "--seq", "16", "--log-every", "100"]
+    losses = train_cli.main(
+        common + ["--numerics", "lns16-qat,compute_dtype=float32"])
+    assert len(losses) == 2 and np.isfinite(losses).all()
+    out = capsys.readouterr().out
+    assert "numerics spec: lns16-qat,compute_dtype=float32" in out
+    # a bad alias/override fails fast with the valid-values list
+    import pytest
+    with pytest.raises(ValueError, match="lns16-qat"):
+        train_cli.main(common + ["--numerics", "lns17-qat"])
+    with pytest.raises(ValueError, match="emulate, pallas"):
+        train_cli.main(common + ["--numerics", "bf16,backend=cuda"])
+
+
 def test_serve_cli_batched(capsys):
     outs = serve_cli.main(["--arch", "qwen3-1.7b", "--requests", "3",
                            "--max-new", "4", "--max-batch", "2",
