@@ -12,9 +12,12 @@ CPU wall times characterize the *emulation* (all "devices" are host
 threads); the numbers track the relative cost of the two reduce paths and
 the scaling trend across PRs, not TPU performance.  Emits machine-readable
 ``BENCH_dp_scaling.json`` (op, shape, backend, devices, ms_per_step,
-tok_per_s — tok = training samples — and ``spec``, the resolved
-``NumericsSpec`` string the row ran under, so every number is
-attributable to an exact configuration).
+tok_per_s — tok = training samples — ``spec``, the resolved default
+``NumericsSpec`` string, and ``plan``, the canonical per-layer
+``NumericsPlan`` string the row ran under, so every number is
+attributable to an exact configuration).  ``--numerics`` accepts an
+explicit spec/plan string — e.g. the mixed lns12/lns16 plan the
+tier1-multidevice CI job benches.
 """
 from __future__ import annotations
 
@@ -31,15 +34,28 @@ import numpy as np
 
 
 def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
-        n_in=64, n_hidden=32, n_out=10, backend="emulate", steps=5):
-    from repro.core import NumericsSpec
+        n_in=64, n_hidden=32, n_out=10, backend="emulate", steps=5,
+        numerics=None):
+    from repro.core import NumericsPlan
     from repro.distributed.lns_dp import DPConfig, LNSDataParallelMLP
     from repro.paper.mlp import MLPConfig
 
     rng = np.random.default_rng(0)
     xb = rng.uniform(0, 1, size=(batch, n_in)).astype(np.float32)
     yb = rng.integers(0, n_out, size=(batch,))
-    shape = f"b{batch}_{n_in}x{n_hidden}x{n_out}_s{grad_segments}"
+
+    if numerics is not None:
+        # One explicit descriptor (spec or per-layer plan) — e.g. the
+        # mixed lns12/lns16 plan the tier1-multidevice CI job times.
+        # It fully determines backend/reduce semantics, so --backend and
+        # --grad-segments do not apply to it (the row labels below read
+        # everything from the plan itself).
+        plans = [NumericsPlan.parse(numerics)]
+    else:
+        plans = [NumericsPlan.parse(
+            f"lns16-train-{backend},reduce.mode={mode},"
+            f"reduce.grad_segments={grad_segments}")
+            for mode in ("boxplus", "float-psum")]
 
     rows = []
     avail = len(jax.devices())
@@ -47,16 +63,20 @@ def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
         if devices > avail:
             print(f"[dp_bench] skip devices={devices} (only {avail} attached)")
             continue
-        for mode in ("boxplus", "float-psum"):
-            # One spec string describes the full configuration (format, Δ,
-            # backend, reduce semantics); the DP plan derives from it.
-            spec = NumericsSpec.parse(
-                f"lns16-train-{backend},reduce.mode={mode},"
-                f"reduce.grad_segments={grad_segments}")
+        for plan in plans:
+            # One plan string describes the full configuration (per-layer
+            # format/Δ, backend, reduce semantics); the DP plan derives
+            # from it.
+            mode = plan.reduce.mode
+            # Shape label reads the segment count the row actually ran
+            # under (the plan's, which may differ from --grad-segments
+            # when --numerics is explicit; 0 resolves to device count).
+            segs = plan.reduce.grad_segments or devices
+            shape = f"b{batch}_{n_in}x{n_hidden}x{n_out}_s{segs}"
             cfg = MLPConfig(n_in=n_in, n_hidden=n_hidden, n_out=n_out,
-                            spec=spec, matmul_block=16)
+                            spec=plan, matmul_block=16)
             model = LNSDataParallelMLP(
-                cfg, DPConfig.from_spec(spec, num_devices=devices))
+                cfg, DPConfig.from_spec(plan, num_devices=devices))
             params = model.init(jax.random.PRNGKey(0))
             params, _ = model.train_step(params, xb, yb)   # compile
             t0 = time.perf_counter()
@@ -65,12 +85,15 @@ def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
             jax.block_until_ready(params)
             ms = (time.perf_counter() - t0) / steps * 1e3
             rows.append(dict(op="dp_train_step", shape=shape,
-                             backend=f"{backend}/{mode}", devices=devices,
+                             backend=f"{plan.backend}/{mode}"
+                             + ("" if plan.is_uniform else "/mixed"),
+                             devices=devices,
                              ms_per_step=ms, tok_per_s=batch / (ms / 1e3),
                              note=f"loss={float(loss):.4f}",
-                             spec=str(spec)))
+                             spec=str(plan.default), plan=str(plan)))
             print(f"[dp_bench] devices={devices} reduce={mode:10s} "
-                  f"{ms:8.1f} ms/step  {batch / (ms / 1e3):8.0f} samples/s")
+                  f"{ms:8.1f} ms/step  {batch / (ms / 1e3):8.0f} samples/s"
+                  + ("" if plan.is_uniform else "  (mixed plan)"))
     return rows
 
 
@@ -83,12 +106,18 @@ def main(argv=None):
                     choices=["emulate", "pallas"],
                     help="⊞-MAC path; 'pallas' runs the interpreter on CPU "
                     "(slow) and the compiled kernels on TPU")
+    ap.add_argument("--numerics", default=None,
+                    help="explicit spec/plan string overriding the "
+                    "backend/reduce-mode grid — e.g. a mixed per-layer "
+                    "plan 'lns16-train-emulate,reduce.grad_segments=4;"
+                    "hidden=fmt:lns12'.  Supersedes --backend and "
+                    "--grad-segments (the plan carries both axes)")
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--out", default="BENCH_dp_scaling.json")
     args = ap.parse_args(argv)
     rows = run(tuple(args.devices), batch=args.batch,
                grad_segments=args.grad_segments, backend=args.backend,
-               steps=args.steps)
+               steps=args.steps, numerics=args.numerics)
     with open(args.out, "w") as f:
         json.dump({"benchmark": "dp_scaling", "rows": rows}, f, indent=1)
     print(f"[dp_bench] wrote {len(rows)} rows to {args.out}")

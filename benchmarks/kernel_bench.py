@@ -10,9 +10,12 @@ kernel path adds (see kernels/lns_matmul/lns_matmul.py).
 
 Run as a script to also emit machine-readable ``BENCH_kernels.json``
 (one row per op × backend: op, shape, backend, devices, ms_per_step,
-tok_per_s, and ``spec`` — the resolved ``NumericsSpec`` string the row
-ran under, so every number is attributable to an exact configuration);
-``run()`` keeps the legacy (name, us, note) tuples for benchmarks/run.py.
+tok_per_s, and ``spec``/``plan`` — the resolved ``NumericsSpec`` and
+canonical ``NumericsPlan`` strings the row ran under, so every number is
+attributable to an exact configuration — including the lns12 rows of the
+mixed-format path, whose narrower Δ tables are the point of per-layer
+plans); ``run()`` keeps the legacy (name, us, note) tuples for
+benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -23,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, LNS16,
-                        DeltaEngine, LNSMatmulBackend, NumericsSpec, encode)
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, LNS12,
+                        LNS16, DeltaEngine, LNSMatmulBackend, NumericsPlan,
+                        NumericsSpec, encode)
 from repro.core.arithmetic import lns_matmul
 from repro.kernels.lns_matmul import (lns_matmul_dw_kernel,
                                       lns_matmul_dx_kernel,
@@ -53,10 +57,14 @@ def records():
     rows = []
 
     def add(op, backend, us, note, numerics):
+        # ``plan`` is the canonical per-layer NumericsPlan string (equal
+        # to ``spec`` for these single-spec rows; mixed-plan rows in the
+        # DP bench carry their rules here).
         rows.append(dict(op=op, shape=shape, backend=backend, devices=1,
                          ms_per_step=us / 1e3,
                          tok_per_s=m / (us / 1e6), note=note,
-                         spec=str(numerics)))
+                         spec=str(numerics),
+                         plan=str(NumericsPlan.parse(numerics))))
 
     add("matmul_fwd", "float", _time(jax.jit(jnp.matmul), X, W), "ref",
         NumericsSpec.parse("fp32"))
@@ -101,6 +109,25 @@ def records():
             interpret=True).code
         add("matmul_dw", f"pallas-{name}", _time(pal_dw, x, dy, reps=2),
             "sequential MAC (interpret)", ns_pal)
+
+    # -- mixed-format row: the lns12 hidden-layer path of a per-layer
+    # NumericsPlan (narrower 6-fraction-bit Δ table, same kernels) -------
+    x12, w12 = encode(X, LNS12), encode(W, LNS12)
+    ns12_emu = NumericsSpec(fmt=LNS12, delta_spec=DELTA_DEFAULT,
+                            quantize="params+acts+grads",
+                            compute_dtype="float32", backend="emulate")
+    ns12_pal = ns12_emu.with_(backend="pallas", interpret="on")
+    be12 = LNSMatmulBackend(fmt=LNS12, spec=DELTA_DEFAULT,
+                            backend="emulate")
+    emu12 = jax.jit(lambda a, b, e=be12: e.matmul(a, b).code)
+    add("matmul_fwd", "emulate-lut20-lns12", _time(emu12, x12, w12),
+        "sequential MAC, lns12 (mixed-plan hidden layer)", ns12_emu)
+    pal12 = lambda a, b: lns_matmul_kernel(
+        a, b, fmt=LNS12, spec=DELTA_DEFAULT, block_m=32, block_n=32,
+        block_k=98, interpret=True).code
+    add("matmul_fwd", "pallas-lut20-lns12", _time(pal12, x12, w12, reps=2),
+        "sequential MAC (interpret), lns12 (mixed-plan hidden layer)",
+        ns12_pal)
     return rows
 
 

@@ -87,6 +87,31 @@ print("(run benchmarks/run.py for the full Table-1 grid)")
 #  XLA_FLAGS=--xla_force_host_platform_device_count=8 — see
 #  examples/train_data_parallel.py for the full 1/2/4-device drill.)
 from repro.distributed.lns_dp import run_device_count_invariance_check
-ok, _ = run_device_count_invariance_check((1,), steps=2, batch=8,
-                                          grad_segments=4)
+ok, _ = run_device_count_invariance_check(
+    (1,), steps=2, batch=8,
+    numerics="lns16-train-pallas,reduce.grad_segments=4")
 print(f"DP ⊞-allreduce schedule == single-device sequential baseline: {ok}")
+
+print("\n=== 5. Per-layer mixed-format plans (NumericsPlan) ===")
+# Arithmetic is a per-layer property: a NumericsPlan maps layer-path glob
+# patterns to spec overrides on top of a default spec.  Here the hidden
+# layer (the bulk of the MACs: 784×100 vs 100×10 weights) drops to lns12
+# — a 25% narrower datapath — while the softmax-critical output layer
+# keeps lns16.  parse/str round-trip losslessly, same as specs:
+from repro.core import NumericsPlan
+plan = NumericsPlan.parse("lns16-train-emulate;hidden=fmt:lns12")
+print(f"plan: {plan}")
+print(f"  hidden resolves to fmt={plan.resolve('hidden').fmt.name}, "
+      f"out to fmt={plan.resolve('out').fmt.name}")
+# Mixed-format training end-to-end, vs the uniform-lns16 run from §4
+# (exact integer barrel-shift conversions at the layer boundary; the
+# emulate and pallas backends stay bit-identical under mixed plans too):
+r16 = run_experiment("lns", "mnist", numerics="lns16-train-emulate",
+                     epochs=1, max_steps_per_epoch=80)
+r12 = run_experiment("lns", "mnist", numerics=plan,
+                     epochs=1, max_steps_per_epoch=80)
+print(f"uniform lns16          : val acc {r16.val_curve[-1]:.3f}")
+print(f"lns12 hidden / lns16 out: val acc {r12.val_curve[-1]:.3f} "
+      f"(Δ {r12.val_curve[-1] - r16.val_curve[-1]:+.3f} — the 12-bit "
+      f"hidden layer costs little; the paper's accuracy cliff lives in "
+      f"the softmax/output path, which stays 16-bit)")

@@ -5,9 +5,10 @@ Run:  PYTHONPATH=src python examples/train_data_parallel.py
 Emulates 8 host devices on CPU (the XLA flag below must precede the jax
 import), then trains the paper MLP on 1, 2, and 4 devices under
 ``shard_map`` and verifies the reduction-order contract of
-``repro/distributed/lns_dp.py``.  The reduce semantics are one axis of
-the unified ``NumericsSpec`` (``reduce.mode`` / ``reduce.grad_segments``
-/ ``reduce.schedule``):
+``repro/distributed/lns_dp.py`` — for the uniform lns16 spec and for a
+mixed lns12/lns16 per-layer ``NumericsPlan``.  The reduce semantics are
+one axis of the unified descriptor (``reduce.mode`` /
+``reduce.grad_segments`` / ``reduce.schedule``):
 
 * ``reduce.mode=boxplus``    — per-segment dW partial codes are
   all-gathered in canonical segment order and ⊞-combined with a fixed
@@ -31,22 +32,35 @@ from repro.paper import run_experiment
 print(f"=== 1. Device-count invariance (attached: {jax.device_count()} "
       f"emulated host devices) ===")
 ok, runs = run_device_count_invariance_check(
-    (1, 2, 4), steps=3, batch=8, grad_segments=4,
-    matmul_backend="pallas", reduce_mode="boxplus", verbose=True)
+    (1, 2, 4), steps=3, batch=8, verbose=True,
+    numerics="lns16-train-pallas,reduce.mode=boxplus,"
+             "reduce.grad_segments=4")
 print(f"boxplus reduce: 1/2/4-device weight codes bit-identical to the "
       f"sequential baseline: {ok}")
 
 print("\n=== 2. The float-psum escape hatch ===")
 _, runs_f = run_device_count_invariance_check(
-    (2,), steps=3, batch=8, grad_segments=4,
-    matmul_backend="pallas", reduce_mode="float-psum")
+    (2,), steps=3, batch=8,
+    numerics="lns16-train-pallas,reduce.mode=float-psum,"
+             "reduce.grad_segments=4")
 w_box = np.asarray(decode(runs[2]["params"]["w1"], LNS16))
 w_psm = np.asarray(decode(runs_f[2]["params"]["w1"], LNS16))
 dev = np.max(np.abs(w_box - w_psm) / (np.abs(w_box) + 1e-6))
 print(f"float-psum weights drift from the ⊞ schedule by ≤ {dev:.3%} "
       f"(reordering error, bounded by the Δ approximation — not bit-exact)")
 
-print("\n=== 3. The same switch through the paper harness ===")
+print("\n=== 3. Mixed per-layer formats keep the invariance ===")
+# A NumericsPlan trains the hidden layer in lns12 while the
+# softmax-critical output layer stays lns16; each parameter's gradient
+# partials ⊞-combine under its *own* layer's Δ engine, so the
+# device-count-invariance contract survives mixed formats unchanged.
+ok_m, _ = run_device_count_invariance_check(
+    (1, 2, 4), steps=3, batch=8, verbose=True,
+    numerics="lns16-train-pallas,reduce.grad_segments=4;hidden=fmt:lns12")
+print(f"mixed lns12/lns16 plan: 1/2/4-device weight codes bit-identical: "
+      f"{ok_m}")
+
+print("\n=== 4. The same switch through the paper harness ===")
 r = run_experiment("lns", "mnist", epochs=1, batch_size=8,
                    max_steps_per_epoch=10, data_parallel=2,
                    numerics="lns16-train-emulate,reduce.grad_segments=4")

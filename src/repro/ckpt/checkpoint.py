@@ -18,6 +18,12 @@ Properties needed at 1000-node scale, scaled to this container:
 * **Deterministic data resume** — the train state carries ``step``; the
   data pipeline (repro/data) is seeded per step, so a restart replays
   exactly the batches that were not yet consumed.
+* **Numerics-stamped manifests** — ``save_checkpoint(...,
+  numerics=<spec/plan>)`` persists the canonical
+  :class:`~repro.core.plan.NumericsPlan` string; restoring under a
+  different arithmetic raises (LNS weight codes are only meaningful under
+  the format/Δ they were trained with).  Pass
+  ``allow_numerics_mismatch=True`` for a deliberate format migration.
 
 On a real multi-host cluster the np.save writer is swapped for a
 per-process sharded writer (same manifest format, one shard-file per
@@ -41,8 +47,22 @@ def _tree_paths(tree):
     return leaves, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree) -> str:
-    """Atomic synchronous save of a pytree; returns the final path."""
+def _canonical_numerics(numerics) -> Optional[str]:
+    """Canonicalize a spec/plan (string or object) for manifest stamping."""
+    if numerics is None:
+        return None
+    from ..core.plan import NumericsPlan
+    return str(NumericsPlan.parse(numerics))
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    numerics=None) -> str:
+    """Atomic synchronous save of a pytree; returns the final path.
+
+    ``numerics`` (a spec/plan string or object) is canonicalized and
+    stamped into the manifest, so restore can verify the arithmetic the
+    codes were trained under.
+    """
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -58,6 +78,8 @@ def save_checkpoint(directory: str, step: int, tree) -> str:
                    for a in host],
         "time": time.time(),
     }
+    if numerics is not None:
+        manifest["numerics"] = _canonical_numerics(numerics)
     for i, a in enumerate(host):
         np.save(os.path.join(tmp, f"leaf_{i}.npy"), a)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -81,16 +103,36 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def load_checkpoint(directory: str, step: int, like, shardings=None):
+def load_checkpoint(directory: str, step: int, like, shardings=None, *,
+                    numerics=None, allow_numerics_mismatch: bool = False):
     """Restore a pytree saved by save_checkpoint.
 
     ``like`` supplies the tree structure; ``shardings`` (optional pytree of
     NamedSharding for the *current* mesh) re-shards each leaf on load —
     this is the elastic-restart path.
+
+    ``numerics`` is the arithmetic the restored state will run under; when
+    both it and the checkpoint's manifest stamp are present and their
+    canonical plan strings differ, the restore fails (LNS weight codes are
+    integer log-magnitudes on a specific format/Δ grid — silently reading
+    them under another arithmetic corrupts training).  Old unstamped
+    checkpoints restore without the check; pass
+    ``allow_numerics_mismatch=True`` for a deliberate format migration.
     """
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    want = _canonical_numerics(numerics)
+    have = manifest.get("numerics")
+    if want is not None and have is not None and want != have \
+            and not allow_numerics_mismatch:
+        raise ValueError(
+            f"checkpoint {path} was saved under numerics {have!r} but is "
+            f"being restored under {want!r}; LNS codes are not portable "
+            f"across arithmetics.  Re-run with the matching --numerics, "
+            f"or pass allow_numerics_mismatch=True (CheckpointManager("
+            f"allow_numerics_mismatch=True)) for a deliberate format "
+            f"migration")
     leaves, treedef = _tree_paths(like)
     assert manifest["n_leaves"] == len(leaves), \
         f"checkpoint has {manifest['n_leaves']} leaves, tree has {len(leaves)}"
@@ -105,11 +147,23 @@ def load_checkpoint(directory: str, step: int, like, shardings=None):
 
 
 class CheckpointManager:
-    """Keep-k async checkpointer with crash-safe GC."""
+    """Keep-k async checkpointer with crash-safe GC.
 
-    def __init__(self, directory: str, keep: int = 3):
+    ``numerics`` (optional spec/plan string or object) is stamped into
+    every manifest this manager writes and checked on every restore; see
+    :func:`load_checkpoint` for the mismatch contract.
+    """
+
+    def __init__(self, directory: str, keep: int = 3, *, numerics=None,
+                 allow_numerics_mismatch: bool = False):
         self.directory = directory
         self.keep = keep
+        # Canonicalize eagerly: a malformed numerics string must fail in
+        # the caller, not inside the async writer thread (where the
+        # ValueError would only hit stderr and every non-blocking save
+        # would silently produce no checkpoint).
+        self.numerics = _canonical_numerics(numerics)
+        self.allow_numerics_mismatch = allow_numerics_mismatch
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
 
@@ -122,7 +176,8 @@ class CheckpointManager:
         snapshot = jax.tree_util.tree_unflatten(treedef, host)
 
         def _write():
-            save_checkpoint(self.directory, step, snapshot)
+            save_checkpoint(self.directory, step, snapshot,
+                            numerics=self.numerics)
             self._gc()
 
         if blocking:
@@ -140,7 +195,9 @@ class CheckpointManager:
         step = latest_step(self.directory)
         if step is None:
             return None, None
-        return load_checkpoint(self.directory, step, like, shardings), step
+        return load_checkpoint(
+            self.directory, step, like, shardings, numerics=self.numerics,
+            allow_numerics_mismatch=self.allow_numerics_mismatch), step
 
     def _gc(self):
         steps = sorted(

@@ -14,6 +14,8 @@ Sub-modules:
   qat            straight-through LNS quantization / emulated-MAC dot
   spec           NumericsSpec / ReduceSpec / LNSRuntime — the unified
                  serializable numerics descriptor and its resolution
+  plan           NumericsPlan — per-layer glob patterns → spec overrides
+                 (mixed-format training across the model stack)
   numerics       alias registry over spec (fp32/bf16/lns*) + get_policy
 """
 from .arithmetic import (bias_add, boxabs_max, boxdiv, boxdot, boxminus,
@@ -28,9 +30,11 @@ from .formats import (FORMATS, FXP12, FXP16, LNS12, LNS16,
                       FixedPointFormat, LNSFormat, required_log_width)
 from .initializers import (encode_init, he_sigma, log_density_normal,
                            log_normal_init)
-from .lns import (MATMUL_BACKENDS, LNSArray, LNSMatmulBackend, decode,
-                  encode, from_parts, quantization_bound, scalar, zeros)
-from .numerics import POLICIES, NumericsPolicy, get_policy
+from .lns import (MATMUL_BACKENDS, LNSArray, LNSMatmulBackend,
+                  convert_format, decode, encode, from_parts,
+                  quantization_bound, scalar, zeros)
+from .numerics import POLICIES, NumericsPolicy, get_plan, get_policy
+from .plan import NumericsPlan, PlanRule
 from .qat import lns_dot_dispatch, lns_dot_exact, lns_quantize_ste
 from .spec import (ALIASES, INTERPRET_MODES, REDUCE_MODES, REDUCE_SCHEDULES,
                    LNSRuntime, NumericsSpec, ReduceSpec)

@@ -108,6 +108,34 @@ def scalar(v: float, fmt: LNSFormat) -> LNSArray:
     return LNSArray(jnp.int32(code), jnp.int8(1 if v < 0 else 0))
 
 
+def convert_format(a: LNSArray, src: LNSFormat, dst: LNSFormat) -> LNSArray:
+    """Re-encode LNS codes between formats by pure integer shifts.
+
+    The log-magnitude is format-independent; only the fixed-point grid
+    changes, so ``code_dst = round(code_src · 2^(qf_dst - qf_src))`` — a
+    left shift when widening (exact, e.g. lns12 → lns16), an add-half +
+    arithmetic right shift (round-half-up) when narrowing.  This is the
+    barrel-shifter a mixed-format accelerator puts between layers of
+    different bitwidths; no float round-trip, so widening is lossless.
+    Zero sentinels are preserved, out-of-range magnitudes saturate, and
+    magnitudes below the destination's resolution flush to zero.
+    """
+    if src == dst:
+        return a
+    shift = dst.qf - src.qf
+    if shift >= 0:
+        code = a.code << shift
+    else:
+        half = 1 << (-shift - 1)
+        code = (a.code + half) >> (-shift)
+    underflow = code < dst.min_nonzero_code
+    code = jnp.clip(code, dst.min_nonzero_code, dst.code_max)
+    zero = (a.code == src.zero_code) | underflow
+    code = jnp.where(zero, np.int32(dst.zero_code), code)
+    return LNSArray(code.astype(jnp.int32),
+                    jnp.where(zero, jnp.int8(0), a.sign))
+
+
 def quantization_bound(fmt: LNSFormat) -> float:
     """Max relative error of encode/decode for in-range values.
 

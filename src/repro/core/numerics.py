@@ -19,6 +19,7 @@ legacy attribute names (``param_lns`` / ``exact_spec`` / ``lns_grad`` /
 """
 from __future__ import annotations
 
+from .plan import NumericsPlan, get_plan
 from .spec import ALIASES, LNSRuntime, NumericsSpec, ReduceSpec
 
 #: Alias registry: name → NumericsSpec.  (Formerly name → NumericsPolicy;
@@ -29,16 +30,19 @@ POLICIES = ALIASES
 NumericsPolicy = LNSRuntime
 
 
-def get_policy(name: "str | NumericsSpec") -> LNSRuntime:
+def get_policy(name: "str | NumericsSpec | NumericsPlan") -> LNSRuntime:
     """Resolve a numerics alias / spec string / spec into its runtime.
 
     Accepts every registry alias (``sorted(POLICIES)``), ``key=value``
     spec strings, and alias + overrides
     (``"lns16-train-emulate,backend=pallas"``).  Unknown names raise with
-    the valid-values list.
+    the valid-values list.  A :class:`~repro.core.plan.NumericsPlan` (or
+    plan string with per-layer rules) resolves to its *default* runtime —
+    path-aware call sites use :func:`get_plan` + ``plan.runtime_for``.
     """
-    return NumericsSpec.parse(name).runtime()
+    return NumericsPlan.parse(name).default.runtime()
 
 
-__all__ = ["ALIASES", "LNSRuntime", "NumericsPolicy", "NumericsSpec",
-           "POLICIES", "ReduceSpec", "get_policy"]
+__all__ = ["ALIASES", "LNSRuntime", "NumericsPlan", "NumericsPolicy",
+           "NumericsSpec", "POLICIES", "ReduceSpec", "get_plan",
+           "get_policy"]

@@ -1,0 +1,315 @@
+"""Per-layer numerics: ``NumericsPlan`` — glob patterns → spec overrides.
+
+The paper trains every layer in one global format, but the win of
+log-domain training compounds when the format is a *per-layer* property
+(Hamad et al. 2025: lns12 forward layers with lns16 gradient-critical
+layers; Miyashita et al. 2016 for inference).  A :class:`NumericsPlan`
+is the serializable unit of that configuration: one **default**
+:class:`~repro.core.spec.NumericsSpec` plus an ordered list of **rules**
+mapping layer-path glob patterns to ``key:value`` overrides.
+
+Serialized form (``parse``/``str`` round-trip losslessly)::
+
+    lns16-train-pallas;hidden*=fmt:lns12,delta:lut20;out=delta:lut640
+    └─ default spec ──┘ └─ rule 1 ──────────────────┘└─ rule 2 ──────┘
+
+* segments are ``;``-separated; the first is any ``NumericsSpec`` string
+  (alias, ``key=value`` list, or alias + overrides);
+* each rule is ``<pattern>=<key>:<value>[,<key>:<value>...]`` — the keys
+  and values are the spec-string vocabulary (``fmt``, ``delta``,
+  ``quantize``, ``compute_dtype``, ``backend``, ``interpret``), with
+  ``:`` instead of ``=`` so the pattern separator stays unambiguous.
+  ``reduce.*`` keys are rejected in rules: the gradient-reduce semantics
+  are a global contract (one canonical segmentation of the global batch)
+  and live on the default spec only;
+* patterns are ``fnmatch`` globs over dotted layer paths (the paper MLP
+  exposes ``hidden`` / ``out``; the LM stack exposes ``emb``,
+  ``layers.attn``, ``layers.mlp``, ``layers.moe``, ``layers.mamba``,
+  ``layers.xattn``, ``dense_layers.*``, ``tail_layers.*``,
+  ``shared_attn.*``, ``enc_layers.*``, ``frontend``, ``head``).
+
+Resolution: :meth:`resolve` starts from the default spec and applies
+every matching rule **in declaration order** (later rules override
+earlier ones — the precedence contract), yielding one spec per layer
+path.  :meth:`runtime_for` resolves that spec through the shared
+:class:`~repro.core.spec.LNSRuntime` cache, so layers whose resolved
+specs are equal share one runtime — one Δ engine, one matmul backend —
+no matter how many patterns produced them.
+
+A bare spec string is a plan with no rules; such a plan delegates the
+common spec accessors (``fmt`` / ``backend`` / ``reduce`` / ...) to its
+default, so every surface that used to hold a ``NumericsSpec`` can hold
+a plan without changing shape, and ``str(plan) == str(spec)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import functools
+from typing import Tuple
+
+from .spec import LNSRuntime, NumericsSpec, apply_kv_overrides
+
+#: Characters that would collide with the plan/rule/override separators.
+_PATTERN_FORBIDDEN = set(";=,:")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRule:
+    """One ``pattern=key:value,...`` rule of a :class:`NumericsPlan`.
+
+    ``overrides`` holds the serialized ``(key, value)`` pairs, sorted by
+    key and canonicalized (values re-serialized from the resolved spec),
+    so two rules that mean the same thing compare and hash equal and the
+    plan's ``str`` round-trips losslessly.
+    """
+
+    pattern: str
+    overrides: Tuple[Tuple[str, str], ...]
+
+    def __post_init__(self):
+        if not self.pattern:
+            raise ValueError("empty layer pattern in numerics plan rule")
+        bad = _PATTERN_FORBIDDEN & set(self.pattern)
+        if bad:
+            raise ValueError(
+                f"layer pattern {self.pattern!r} contains reserved "
+                f"character(s) {''.join(sorted(bad))!r}; patterns are "
+                f"fnmatch globs over dotted layer paths (e.g. 'hidden', "
+                f"'layers.*', '*.mlp')")
+        if not self.overrides:
+            raise ValueError(
+                f"rule {self.pattern!r} has no overrides; expected "
+                f"'{self.pattern}=key:value[,key:value...]'")
+        keys = [k for k, _ in self.overrides]
+        if len(keys) != len(set(keys)):
+            dup = sorted(k for k in set(keys) if keys.count(k) > 1)
+            raise ValueError(
+                f"rule {self.pattern!r} sets {', '.join(dup)} more than "
+                f"once")
+        bad_reduce = sorted(k for k in keys if k.startswith("reduce."))
+        if bad_reduce:
+            raise ValueError(
+                f"rule {self.pattern!r} sets {', '.join(bad_reduce)}: the "
+                f"gradient-reduce semantics are a *global* contract (one "
+                f"canonical segmentation of the global batch), not a "
+                f"per-layer property — set reduce.* on the plan's default "
+                f"spec segment instead (e.g. "
+                f"'lns16-train-pallas,reduce.grad_segments=4;...')")
+
+    def matches(self, path: str) -> bool:
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+    def __str__(self) -> str:
+        return self.pattern + "=" + ",".join(
+            f"{k}:{v}" for k, v in self.overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPlan:
+    """A default :class:`NumericsSpec` plus per-layer glob overrides.
+
+    Frozen/hashable (jit-static); resolution is cached.  Rules apply in
+    declaration order on top of the default — a later matching rule
+    overrides an earlier one key-by-key.
+    """
+
+    default: NumericsSpec
+    rules: Tuple[PlanRule, ...] = ()
+
+    def __post_init__(self):
+        # Validate every rule's overrides eagerly: a bad key/value must
+        # fail at construction (with the valid-values list), not at the
+        # first matching resolve.
+        for rule in self.rules:
+            apply_kv_overrides(self.default, rule.overrides)
+
+    # -- parse / serialize --------------------------------------------------
+    @staticmethod
+    def parse(text: "str | NumericsSpec | NumericsPlan") -> "NumericsPlan":
+        """Parse a plan string, spec string, spec, or plan (pass-through).
+
+        A string without ``;`` is a plain spec → a plan with no rules.
+        """
+        if isinstance(text, NumericsPlan):
+            return text
+        if isinstance(text, NumericsSpec):
+            return NumericsPlan(default=text)
+        return _parse_plan_cached(str(text))
+
+    def __str__(self) -> str:
+        return ";".join([str(self.default)] + [str(r) for r in self.rules])
+
+    # -- resolution ---------------------------------------------------------
+    def resolve(self, path: str) -> NumericsSpec:
+        """The spec layer ``path`` runs under (default + matching rules)."""
+        return _resolve_cached(self, path)
+
+    def runtime_for(self, path: str, block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128) -> LNSRuntime:
+        """The resolved runtime for ``path``.
+
+        Layers whose resolved specs are equal share one cached runtime
+        (one Δ engine, one matmul backend) — sharing falls out of the
+        runtime cache being keyed by (spec, blocks), not by path.
+        """
+        return self.resolve(path).runtime(block_m=block_m, block_n=block_n,
+                                          block_k=block_k)
+
+    def resolve_layers(self, paths) -> dict:
+        """``{path: resolved spec}`` for every path, after validation."""
+        self.validate_paths(paths)
+        return {p: self.resolve(p) for p in paths}
+
+    def validate_paths(self, paths) -> "NumericsPlan":
+        """Raise if any rule pattern matches none of ``paths``.
+
+        The unknown-pattern guard: a typo'd pattern would otherwise be a
+        silent no-op and the layer would train under the wrong format.
+        """
+        paths = tuple(paths)
+        dead = [str(r) for r in self.rules
+                if not any(r.matches(p) for p in paths)]
+        if dead:
+            raise ValueError(
+                f"numerics plan rule(s) {dead} match no layer path; "
+                f"known layer paths: {', '.join(paths)}")
+        return self
+
+    # -- overrides ----------------------------------------------------------
+    def with_(self, **kw) -> "NumericsPlan":
+        """Typed overrides applied to the *default* spec (rules kept).
+
+        Per-layer rules re-apply on top of the new default, so e.g.
+        ``plan.with_(backend="pallas")`` switches every layer that does
+        not explicitly pin a backend.
+        """
+        return dataclasses.replace(self, default=self.default.with_(**kw))
+
+    def with_rule(self, pattern: str, **kv) -> "NumericsPlan":
+        """Append one rule from serialized ``key=value`` strings."""
+        rule = _canonical_rule(self.default, pattern,
+                               [(k, str(v)) for k, v in kv.items()])
+        return dataclasses.replace(self, rules=self.rules + (rule,))
+
+    # -- spec-shaped views (a plan with no rules is a drop-in spec) ---------
+    @property
+    def is_uniform(self) -> bool:
+        """True when every layer resolves to the default spec."""
+        return not self.rules
+
+    def runtime(self, block_m: int = 128, block_n: int = 128,
+                block_k: int = 128) -> LNSRuntime:
+        """The default spec's runtime (what un-planned call sites use)."""
+        return self.default.runtime(block_m=block_m, block_n=block_n,
+                                    block_k=block_k)
+
+    @property
+    def fmt(self):
+        return self.default.fmt
+
+    @property
+    def delta_spec(self):
+        return self.default.delta_spec
+
+    @property
+    def quantize(self) -> str:
+        return self.default.quantize
+
+    @property
+    def compute_dtype(self) -> str:
+        return self.default.compute_dtype
+
+    @property
+    def backend(self) -> str:
+        return self.default.backend
+
+    @property
+    def interpret(self) -> str:
+        return self.default.interpret
+
+    @property
+    def reduce(self):
+        return self.default.reduce
+
+    @property
+    def quantize_params(self) -> bool:
+        return self.default.quantize_params
+
+    @property
+    def quantize_acts(self) -> bool:
+        return self.default.quantize_acts
+
+    @property
+    def quantize_grads(self) -> bool:
+        return self.default.quantize_grads
+
+    @property
+    def lns_grad(self) -> bool:
+        return self.default.quantize_grads
+
+
+def _canonical_rule(default: NumericsSpec, pattern: str, kv) -> PlanRule:
+    """Build a rule with validated, canonicalized override values.
+
+    Values are decoded through the spec-string machinery (so bad
+    keys/values raise with the valid-values list) and re-serialized from
+    the resolved spec's flat view — ``reduce.grad_segments:04`` stores as
+    ``4``, ``quantize:grads+params`` as ``params+grads`` — which is what
+    makes the plan's ``parse``/``str`` round-trip lossless and rule
+    equality semantic.
+    """
+    keys = [k for k, _ in kv]
+    if len(keys) != len(set(keys)):
+        dup = sorted(k for k in set(keys) if keys.count(k) > 1)
+        raise ValueError(
+            f"rule {pattern!r} sets {', '.join(dup)} more than once")
+    flat = apply_kv_overrides(default, kv)._flat()
+    return PlanRule(pattern=pattern,
+                    overrides=tuple((k, flat[k]) for k in sorted(keys)))
+
+
+@functools.lru_cache(maxsize=None)
+def _parse_plan_cached(text: str) -> NumericsPlan:
+    segments = [s.strip() for s in text.split(";")]
+    if not segments or not segments[0]:
+        raise ValueError(
+            "empty numerics plan; expected '<default spec>"
+            "[;<pattern>=<key>:<value>,...]...'")
+    default = NumericsSpec.parse(segments[0])
+    rules = []
+    for seg in segments[1:]:
+        if not seg:
+            continue
+        if "=" not in seg:
+            raise ValueError(
+                f"plan rule {seg!r} has no '='; expected "
+                f"'<pattern>=<key>:<value>[,<key>:<value>...]'")
+        pattern, body = (p.strip() for p in seg.split("=", 1))
+        kv = []
+        for tok in body.split(","):
+            tok = tok.strip()
+            if not tok:
+                continue
+            if ":" not in tok:
+                raise ValueError(
+                    f"plan override {tok!r} in rule {pattern!r} has no "
+                    f"':'; expected '<key>:<value>' (the spec-string "
+                    f"key=value vocabulary with ':' as the separator)")
+            kv.append(tuple(p.strip() for p in tok.split(":", 1)))
+        rules.append(_canonical_rule(default, pattern, kv))
+    return NumericsPlan(default=default, rules=tuple(rules))
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_cached(plan: NumericsPlan, path: str) -> NumericsSpec:
+    spec = plan.default
+    for rule in plan.rules:
+        if rule.matches(path):
+            spec = apply_kv_overrides(spec, rule.overrides)
+    return spec
+
+
+def get_plan(name: "str | NumericsSpec | NumericsPlan") -> NumericsPlan:
+    """Resolve any numerics descriptor (alias / spec / plan) to a plan."""
+    return NumericsPlan.parse(name)

@@ -336,6 +336,37 @@ _PARSE_KEYS = ("fmt", "delta", "quantize", "compute_dtype", "backend",
                "reduce.schedule")
 
 
+def override_from_kv(key: str, value: str):
+    """Map one serialized ``key``/``value`` pair to a ``with_`` override.
+
+    The single decode point for every serialized-spec surface: the spec
+    parser and the :class:`~repro.core.plan.NumericsPlan` rule parser both
+    route through it, so plan overrides accept exactly the vocabulary spec
+    strings do.  Returns ``(field_name, typed_value)``; unknown keys and
+    values raise with the valid-values list.
+    """
+    if key not in _PARSE_KEYS:
+        raise _bad_value("spec key", key, _PARSE_KEYS)
+    if key == "fmt":
+        return "fmt", _fmt_from_str(value)
+    if key == "delta":
+        return "delta_spec", _delta_from_str(value)
+    if key == "quantize":
+        return "quantize", "" if value == "none" else value
+    if key == "reduce.grad_segments":
+        try:
+            return key, int(value)
+        except ValueError:
+            raise _bad_value(key, value, ("any integer >= 0",)) from None
+    return key, value
+
+
+def apply_kv_overrides(spec: NumericsSpec, items) -> NumericsSpec:
+    """Apply serialized ``(key, value)`` string pairs onto ``spec``."""
+    overrides = dict(override_from_kv(k, v) for k, v in items)
+    return spec.with_(**overrides) if overrides else spec
+
+
 @functools.lru_cache(maxsize=None)
 def _parse_cached(text: str) -> NumericsSpec:
     tokens = [t.strip() for t in text.split(",") if t.strip()]
@@ -353,29 +384,14 @@ def _parse_cached(text: str) -> NumericsSpec:
                 f"have {sorted(ALIASES)} (or key=value overrides: "
                 f"{', '.join(_PARSE_KEYS)})")
         spec = ALIASES[alias]
-    overrides: dict = {}
+    kv = []
     for tok in tokens:
         if "=" not in tok:
             raise ValueError(
                 f"expected key=value after the alias, got {tok!r}; "
                 f"valid keys: {', '.join(_PARSE_KEYS)}")
-        k, v = (p.strip() for p in tok.split("=", 1))
-        if k not in _PARSE_KEYS:
-            raise _bad_value("spec key", k, _PARSE_KEYS)
-        if k == "fmt":
-            overrides["fmt"] = _fmt_from_str(v)
-        elif k == "delta":
-            overrides["delta_spec"] = _delta_from_str(v)
-        elif k == "quantize":
-            overrides["quantize"] = "" if v == "none" else v
-        elif k == "reduce.grad_segments":
-            try:
-                overrides[k] = int(v)
-            except ValueError:
-                raise _bad_value(k, v, ("any integer >= 0",)) from None
-        else:
-            overrides[k] = v
-    return spec.with_(**overrides) if overrides else spec
+        kv.append(tuple(p.strip() for p in tok.split("=", 1)))
+    return apply_kv_overrides(spec, kv)
 
 
 # ------------------------------------------------------------------------
@@ -423,16 +439,24 @@ def _alias_reverse() -> dict:
 
 
 def resolve_kernel_args(numerics, *, fmt=None, spec=None, backend=None,
-                        interpret=None, op: str = "kernel"):
+                        interpret=None, op: str = "kernel",
+                        layer: "str | None" = None):
     """Fill a kernel entry point's config pieces from a NumericsSpec.
 
     Shared by both kernels packages' dispatch (``lns_matmul_trainable``,
     ``lns_boxsum_kernel``): explicit arguments win over the spec; missing
     fmt/Δ raise naming ``op``.  Returns ``(fmt, spec, backend,
     interpret)`` — callers that have no backend axis ignore that slot.
+
+    ``numerics`` may also be a :class:`~repro.core.plan.NumericsPlan` (or
+    plan string with per-layer rules); ``layer`` selects which layer
+    path's resolved spec configures this kernel call (default: the plan's
+    default spec).
     """
     if numerics is not None:
-        ns = NumericsSpec.parse(numerics)
+        from .plan import NumericsPlan  # local: plan.py imports this module
+        pl = NumericsPlan.parse(numerics)
+        ns = pl.resolve(layer) if layer is not None else pl.default
         fmt = fmt if fmt is not None else ns.fmt
         spec = spec if spec is not None else ns.delta_spec
         backend = backend if backend is not None else ns.backend

@@ -32,15 +32,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core import (LNSArray, apply_update, boxdot, boxsum, ce_grad_init,
-                    ce_loss_readout, encode, llrelu_grad, log_softmax_lns)
-from ..core.spec import NumericsSpec, ReduceSpec
+from ..core.plan import NumericsPlan
+from ..core.spec import ReduceSpec
 from .lns_reduce import (combine_partials, deterministic_boxplus_allreduce,
                          float_psum_allreduce)
 
@@ -89,11 +89,18 @@ class DPConfig:
                              f"{self.num_devices}")
 
     @classmethod
-    def from_spec(cls, spec: "NumericsSpec | str", num_devices: int = 1,
-                  **kw) -> "DPConfig":
-        """The DP plan a :class:`NumericsSpec` describes."""
+    def from_spec(cls, spec: "NumericsSpec | NumericsPlan | str",
+                  num_devices: int = 1, **kw) -> "DPConfig":
+        """The DP plan a :class:`NumericsSpec` (or plan) describes.
+
+        The reduce axis lives on the plan's *default* spec: the canonical
+        segmentation of the global batch is one global contract (the
+        schedule must be a pure function of the problem), while the ⊞
+        combine of each parameter's partials runs in that parameter's own
+        layer format — see ``LNSDataParallelMLP.train_step``.
+        """
         return cls(num_devices=num_devices,
-                   reduce=NumericsSpec.parse(spec).reduce, **kw)
+                   reduce=NumericsPlan.parse(spec).reduce, **kw)
 
     def segments(self, global_batch: int) -> int:
         s = self.reduce.grad_segments or self.num_devices
@@ -128,44 +135,6 @@ def make_data_mesh(num_devices: int, axis_name: str = "data") -> Mesh:
     return Mesh(np.array(devs[:num_devices]), (axis_name,))
 
 
-def _segmented_boxsum(d: LNSArray, num_segments: int, eng) -> LNSArray:
-    """Per-segment sequential ⊞-fold over the batch axis: (B, K) → (S, K)."""
-    b = d.shape[0]
-    seg = b // num_segments
-    tail = d.shape[1:]
-    parts = LNSArray(d.code.reshape((num_segments, seg) + tail),
-                     d.sign.reshape((num_segments, seg) + tail))
-    return boxsum(parts, 1, eng, order="sequential")
-
-
-def _per_segment_grads(inner, params, xb, yb, num_segments: int):
-    """LNSMLP backward pass emitting per-segment gradient partials.
-
-    Forward and the backward-activation product are row-independent, so
-    they run on the whole (local) batch at once; only the batch-contracted
-    products (dW, db) are segmented.  Returns (grads, loss) where every
-    grads leaf is an ``LNSArray`` with leading segment axis (S_local, ...).
-    """
-    f, eng = inner.fmt, inner.eng
-    x = encode(xb, f)
-    z1, a1, z2 = inner._forward(params, x)
-    p = log_softmax_lns(z2, inner.eng_sm)
-    d2 = ce_grad_init(p, yb, f, inner.eng_sm)
-    bp = inner.mm.matmul_dx(d2, params["w2"])
-    d1 = boxdot(bp, llrelu_grad(z1, inner.beta, f), f)
-    grads = dict(
-        w1=inner.mm.matmul_dw_partials(x, d1, num_segments),
-        b1=_segmented_boxsum(d1, num_segments, eng),
-        w2=inner.mm.matmul_dw_partials(a1, d2, num_segments),
-        b2=_segmented_boxsum(d2, num_segments, eng),
-    )
-    return grads, ce_loss_readout(p, yb, f)
-
-
-def _is_lns(v) -> bool:
-    return isinstance(v, LNSArray)
-
-
 class LNSDataParallelMLP:
     """Drop-in ``make_mlp``-style model running the DP LNS train step.
 
@@ -174,6 +143,19 @@ class LNSDataParallelMLP:
     drives it unchanged.  ``train_step`` shards the batch over the ``data``
     mesh axis and reduces weight-gradient partials with the deterministic
     ⊞ schedule (or float psum, per ``DPConfig.reduce_mode``).
+
+    Under a per-layer :class:`~repro.core.plan.NumericsPlan` the reduce
+    plan is *per parameter*: each parameter's per-segment partials are
+    LNS codes in that parameter's own layer format, so the all-gather +
+    fixed-schedule ⊞ fold runs under that layer's Δ engine (and its
+    backend's kernel/interpret mode).  The segmentation itself stays one
+    global contract, so the 1/2/4-device bit-identical invariance holds
+    under mixed formats too — device count still only changes *where* a
+    segment partial is computed, never which arithmetic combines it.
+
+    With ``cfg.momentum > 0`` the step threads a replicated ⊞-momentum
+    pytree: the momentum update runs *after* the deterministic reduce on
+    the already-replicated gradients, so it inherits the invariance.
     """
 
     def __init__(self, cfg, dp: DPConfig):
@@ -187,36 +169,43 @@ class LNSDataParallelMLP:
     def init(self, key):
         return self.inner.init(key)
 
+    def init_momentum(self, params):
+        return self.inner.init_momentum(params)
+
     def predict(self, params, xb):
         return self.inner.predict(params, xb)
 
-    def _use_kernel(self) -> bool:
+    def _use_kernel(self, param: str) -> bool:
         if self.dp.reduce_with_kernel is not None:
             return self.dp.reduce_with_kernel
-        return self.inner.cfg.spec.backend == "pallas"
+        return self.inner.param_runtimes[param].spec.backend == "pallas"
 
     # -- the DP step -----------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
-    def train_step(self, params, xb, yb):
+    def train_step(self, params, xb, yb, momentum=None):
         inner, dp = self.inner, self.dp
         segments = dp.segments(xb.shape[0])
         segs_local = segments // dp.num_devices
         axis = dp.axis_name
 
         def local_fn(params, xb_l, yb_l):
-            grads, loss = _per_segment_grads(inner, params, xb_l, yb_l,
-                                             segs_local)
-            if dp.reduce.mode == "boxplus":
-                red = functools.partial(
-                    deterministic_boxplus_allreduce, axis_name=axis,
-                    eng=inner.eng, schedule=dp.reduce.schedule,
-                    use_kernel=self._use_kernel(),
-                    interpret=inner.mm._interp())
-            else:
-                red = functools.partial(float_psum_allreduce,
-                                        axis_name=axis, eng=inner.eng)
-            grads = jax.tree.map(red, grads, is_leaf=_is_lns)
-            return grads, jax.lax.pmean(loss, axis)
+            grads, loss = inner.per_segment_grads(params, xb_l, yb_l,
+                                                  segs_local)
+            # Format-correct ⊞-allreduce per parameter: each leaf's
+            # partials combine under its own layer's Δ engine.
+            red = {}
+            for k, g in grads.items():
+                eng = inner.param_engines[k]
+                if dp.reduce.mode == "boxplus":
+                    red[k] = deterministic_boxplus_allreduce(
+                        g, axis_name=axis, eng=eng,
+                        schedule=dp.reduce.schedule,
+                        use_kernel=self._use_kernel(k),
+                        interpret=inner.param_runtimes[k].matmul._interp())
+                else:
+                    red[k] = float_psum_allreduce(g, axis_name=axis,
+                                                  eng=eng)
+            return red, jax.lax.pmean(loss, axis)
 
         mapped = shard_map(
             local_fn, mesh=self.mesh,
@@ -224,38 +213,54 @@ class LNSDataParallelMLP:
             out_specs=(P(), P()),
             check_rep=False)
         grads, loss = mapped(params, xb, yb)
-        new_params, _ = apply_update(params, grads, None, inner.sgd,
-                                     inner.eng)
-        return new_params, loss
+        new_params, momentum = inner.apply_updates(params, grads, momentum)
+        if momentum is None:
+            return new_params, loss
+        return new_params, momentum, loss
 
 
 def reference_train_step(inner, params, xb, yb, *, grad_segments: int,
-                         reduce_schedule: str = "sequential"):
+                         reduce_schedule: str = "sequential",
+                         momentum=None):
     """Single-device sequential baseline of the canonical DP schedule.
 
     Runs the identical segmented backward + fixed-schedule ⊞ combine on one
     device with no mesh, no shard_map, and no collectives.  The DP step
     must reproduce its weight codes bit-exactly at every device count
     dividing ``grad_segments`` — this is the anchor the invariance tests
-    compare against.
+    compare against.  Pass a momentum pytree (``inner.init_momentum``) to
+    run the ⊞-momentum update; the return then gains the new momentum:
+    ``(params, momentum, loss)``.
     """
-    grads, loss = _per_segment_grads(inner, params, xb, yb, grad_segments)
-    grads = jax.tree.map(
-        lambda g: combine_partials(g, inner.eng, schedule=reduce_schedule),
-        grads, is_leaf=_is_lns)
-    new_params, _ = apply_update(params, grads, None, inner.sgd, inner.eng)
-    return new_params, loss
+    grads, loss = inner.per_segment_grads(params, xb, yb, grad_segments)
+    grads = {k: combine_partials(g, inner.param_engines[k],
+                                 schedule=reduce_schedule)
+             for k, g in grads.items()}
+    new_params, momentum = inner.apply_updates(params, grads, momentum)
+    if momentum is None:
+        return new_params, loss
+    return new_params, momentum, loss
 
 
 def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
                                       steps: int = 3, batch: int = 8,
-                                      grad_segments: int = 4,
+                                      numerics=None,
+                                      momentum: float = 0.0,
                                       n_in: int = 12, n_hidden: int = 9,
                                       n_out: int = 4,
-                                      matmul_backend: str = "pallas",
-                                      reduce_mode: str = "boxplus",
+                                      grad_segments=None,
+                                      matmul_backend=None,
+                                      reduce_mode=None,
                                       seed: int = 0, verbose: bool = False):
     """Train the paper MLP at several device counts; compare weight codes.
+
+    ``numerics`` is the unified descriptor — a spec string, or a
+    :class:`~repro.core.plan.NumericsPlan` string with per-layer rules
+    (``"lns16-train-pallas,reduce.grad_segments=4;hidden=fmt:lns12"``);
+    its ``reduce.grad_segments`` fixes the canonical segmentation
+    (default 4).  The loose ``grad_segments=`` / ``matmul_backend=`` /
+    ``reduce_mode=`` keywords are the deprecated pre-spec spelling and
+    fold into the descriptor with a ``DeprecationWarning``.
 
     Returns ``(ok, runs)`` where ``ok`` is True iff every device count
     produced weight codes bit-identical to ``reference_train_step``.  Used
@@ -265,29 +270,58 @@ def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
     """
     from ..paper.mlp import LNSMLP, MLPConfig
 
+    legacy = {k: v for k, v in (("backend", matmul_backend),
+                                ("reduce.mode", reduce_mode),
+                                ("reduce.grad_segments", grad_segments))
+              if v is not None}
+    if numerics is None:
+        numerics = "lns16-train-pallas,reduce.grad_segments=4"
+    plan = NumericsPlan.parse(numerics)
+    if legacy:
+        plan = plan.with_(**legacy)
+        warnings.warn(
+            f"run_device_count_invariance_check(matmul_backend=/"
+            f"reduce_mode=/grad_segments=) are deprecated; pass the "
+            f"unified descriptor instead: numerics={str(plan)!r}",
+            DeprecationWarning, stacklevel=2)
+    segs = plan.reduce.grad_segments or 4
+    mode = plan.reduce.mode
+
     rng = np.random.default_rng(seed)
     xb = rng.uniform(0, 1, size=(batch, n_in)).astype(np.float32)
     yb = rng.integers(0, n_out, size=(batch,))
-    spec = NumericsSpec.parse(
-        f"lns16-train-{matmul_backend},reduce.mode={reduce_mode},"
-        f"reduce.grad_segments={grad_segments}")
+    # The model config carries grad_segments=0 so the single-device
+    # reference LNSMLP below stays the plain (unrouted) model; the DP
+    # plan re-derives the canonical segmentation from ``plan``.
     cfg = MLPConfig(n_in=n_in, n_hidden=n_hidden, n_out=n_out,
-                    spec=spec.with_(**{"reduce.grad_segments": 0}),
-                    matmul_block=8)
+                    spec=plan.with_(**{"reduce.grad_segments": 0}),
+                    momentum=momentum, matmul_block=8)
 
     inner = LNSMLP(cfg)
     ref_params = inner.init(jax.random.PRNGKey(seed))
+    ref_mom = inner.init_momentum(ref_params)
     for _ in range(steps):
-        ref_params, ref_loss = reference_train_step(
-            inner, ref_params, xb, yb, grad_segments=grad_segments)
+        out = reference_train_step(
+            inner, ref_params, xb, yb, grad_segments=segs,
+            momentum=ref_mom)
+        if ref_mom is None:
+            ref_params, _ = out
+        else:
+            ref_params, ref_mom, _ = out
 
     runs, ok = {}, True
     for d in device_counts:
-        dp = DPConfig.from_spec(spec, num_devices=d)
+        dp = DPConfig.from_spec(plan.with_(
+            **{"reduce.grad_segments": segs}), num_devices=d)
         model = LNSDataParallelMLP(cfg, dp)
         params = model.init(jax.random.PRNGKey(seed))
+        mom = model.init_momentum(params)
         for _ in range(steps):
-            params, loss = model.train_step(params, xb, yb)
+            out = model.train_step(params, xb, yb, mom)
+            if mom is None:
+                params, loss = out
+            else:
+                params, mom, loss = out
         same = all(
             bool(np.array_equal(np.asarray(params[k].code),
                                 np.asarray(ref_params[k].code))
@@ -296,7 +330,7 @@ def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
             for k in ref_params)
         runs[d] = dict(params=params, loss=float(loss),
                        matches_reference=same)
-        ok = ok and (same if reduce_mode == "boxplus" else True)
+        ok = ok and (same if mode == "boxplus" else True)
         if verbose:
             print(f"[lns_dp] devices={d} loss={float(loss):.4f} "
                   f"bit-identical-to-reference={same}")

@@ -23,18 +23,21 @@ def lns_boxsum_kernel(x: LNSArray, *, fmt: LNSFormat | None = None,
                       spec: DeltaSpec | None = None,
                       block_m: int = 128, block_k: int = 128,
                       interpret: bool | None = None,
-                      numerics=None) -> LNSArray:
+                      numerics=None, layer: str | None = None) -> LNSArray:
     """⊞-reduce an (M, K) LNSArray over axis 1 (the softmax Σ⊞).
 
     ``fmt`` / ``spec`` / ``interpret`` may instead come from one
-    ``numerics``: a :class:`~repro.core.spec.NumericsSpec` (or parseable
-    spec string); explicit pieces win.  ``interpret`` defaults to ``True``
-    (CPU validation) when neither supplies it.
+    ``numerics``: a :class:`~repro.core.spec.NumericsSpec` or per-layer
+    :class:`~repro.core.plan.NumericsPlan` (or a parseable spec/plan
+    string) — with a plan, ``layer`` picks which layer path's resolved
+    spec applies (default: the plan's default spec); explicit pieces win.
+    ``interpret`` defaults to ``True`` (CPU validation) when neither
+    supplies it.
     """
     from ...core.spec import resolve_kernel_args
     fmt, spec, _, interpret = resolve_kernel_args(
         numerics, fmt=fmt, spec=spec, interpret=interpret,
-        op="lns_boxsum_kernel")
+        op="lns_boxsum_kernel", layer=layer)
     code, sign = _call(x.code, x.sign, fmt, spec, block_m, block_k,
                        True if interpret is None else interpret)
     return LNSArray(code, sign.astype("int8"))

@@ -101,18 +101,20 @@ def lns_matmul_dw_partials_kernel(x: LNSArray, dy: LNSArray, *,
 # ------------------------------------------------------------------------
 # Differentiable op: LNS forward AND backward under jax.grad
 # ------------------------------------------------------------------------
-def _resolve_numerics(numerics, fmt, spec, backend, interpret):
+def _resolve_numerics(numerics, fmt, spec, backend, interpret, layer=None):
     """Fill the ⊞-MAC config pieces from a NumericsSpec, explicit args win.
 
-    ``backend`` defaults to ``"pallas"`` when neither an explicit value nor
-    a spec supplies one (this is the kernels package, after all);
-    ``interpret=None`` keeps the backend's call-time auto-resolution unless
-    the spec pins it on/off.
+    ``numerics`` may be a spec or a per-layer
+    :class:`~repro.core.plan.NumericsPlan`; ``layer`` selects the layer
+    path to resolve under a plan.  ``backend`` defaults to ``"pallas"``
+    when neither an explicit value nor a spec supplies one (this is the
+    kernels package, after all); ``interpret=None`` keeps the backend's
+    call-time auto-resolution unless the spec pins it on/off.
     """
     from ...core.spec import resolve_kernel_args
     fmt, spec, backend, interpret = resolve_kernel_args(
         numerics, fmt=fmt, spec=spec, backend=backend, interpret=interpret,
-        op="lns_matmul_trainable")
+        op="lns_matmul_trainable", layer=layer)
     return fmt, spec, (backend if backend is not None else "pallas"), \
         interpret
 
@@ -150,7 +152,7 @@ def lns_matmul_trainable(x, w, *, fmt: LNSFormat | None = None,
                          block_m: int = 128, block_n: int = 128,
                          block_k: int = 128,
                          interpret: bool | None = None,
-                         numerics=None):
+                         numerics=None, layer: str | None = None):
     """Differentiable float-view matmul on the log-domain MAC path.
 
     ``x``: (..., K) float, ``w``: (K, N) float.  Forward encodes both
@@ -162,11 +164,15 @@ def lns_matmul_trainable(x, w, *, fmt: LNSFormat | None = None,
 
     The arithmetic is configured either by the explicit ``fmt`` / ``spec``
     / ``backend`` / ``interpret`` pieces or, preferably, by one
-    ``numerics``: a :class:`~repro.core.spec.NumericsSpec` (or parseable
-    spec string) supplying all four; explicit pieces win over the spec.
+    ``numerics``: a :class:`~repro.core.spec.NumericsSpec` or per-layer
+    :class:`~repro.core.plan.NumericsPlan` (or a parseable spec/plan
+    string) supplying all four — with a plan, ``layer`` picks the layer
+    path whose resolved spec applies, e.g.
+    ``lns_matmul_trainable(x, w, numerics=plan, layer="hidden")``;
+    explicit pieces win over the spec.
     """
     fmt, spec, backend, interpret = _resolve_numerics(
-        numerics, fmt, spec, backend, interpret)
+        numerics, fmt, spec, backend, interpret, layer)
     be = LNSMatmulBackend(fmt=fmt, spec=spec, backend=backend,
                           block_m=block_m, block_n=block_n, block_k=block_k,
                           interpret=interpret)

@@ -20,7 +20,7 @@ import numpy as np
 
 from ..configs import get_config, reduced
 from ..ckpt import CheckpointManager
-from ..core.spec import NumericsSpec
+from ..core.plan import NumericsPlan
 from ..data import DataConfig, SyntheticLMDataset
 from ..nn import Runtime, init_params
 from ..nn.config import ShapeCell
@@ -40,8 +40,11 @@ def main(argv=None):
                     help="a NumericsSpec alias (bf16 | fp32 | lns16-qat | "
                     "lns12-qat | lns16-exact | lns16-train-{emulate,pallas} "
                     "| ...) optionally followed by key=value overrides, "
-                    "e.g. 'lns16-train-pallas,reduce.mode=boxplus' or "
-                    "'lns16-train-emulate,backend=pallas'")
+                    "e.g. 'lns16-train-pallas,reduce.mode=boxplus', or a "
+                    "per-layer NumericsPlan string with ';'-separated "
+                    "<pattern>=<key>:<value> rules, e.g. "
+                    "'bf16;layers.mlp=fmt:lns16,delta:lut20,"
+                    "quantize:params'")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--ckpt-dir", default=None)
@@ -61,25 +64,37 @@ def main(argv=None):
                     "float-psum")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--allow-numerics-mismatch", action="store_true",
+                    help="restore a checkpoint whose stamped numerics "
+                    "plan differs from --numerics (deliberate format "
+                    "migration; LNS codes are NOT re-encoded)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    # Fold an explicit CLI --reduce-mode into the numerics string (an
-    # explicit flag wins over a reduce.mode inside --numerics: later
-    # key=value tokens override earlier ones).  The string is validated
-    # here, so a bad alias/override fails before any compilation, and kept
-    # as written (not canonicalized) so an explicit reduce.mode=boxplus —
-    # which canonicalization would strip as an alias default — still
-    # reaches make_train_step's supported-modes guard.
-    numerics = args.numerics
+    # Fold an explicit CLI --reduce-mode into the numerics string's
+    # *default-spec* segment (an explicit flag wins over a reduce.mode
+    # inside --numerics: later key=value tokens override earlier ones;
+    # per-layer ';' rules are untouched).  The string is validated here,
+    # so a bad alias/override/pattern fails before any compilation, and
+    # kept as written (not canonicalized) so an explicit
+    # reduce.mode=boxplus — which canonicalization would strip as an
+    # alias default — still reaches make_train_step's supported-modes
+    # guard.
+    head, *rules = args.numerics.split(";")
     if args.reduce_mode is not None:
-        numerics += f",reduce.mode={args.reduce_mode}"
-    spec = NumericsSpec.parse(numerics)
+        head += f",reduce.mode={args.reduce_mode}"
+    numerics = ";".join([head] + rules)
+    plan = NumericsPlan.parse(numerics)
     cfg = cfg.with_(numerics=numerics,
                     remat="none" if args.reduced else "block")
-    print(f"[train] numerics spec: {spec}")
+    # Dead-pattern check up front too: parse only validates syntax and
+    # vocabulary; a pattern matching none of this arch's layer paths
+    # would otherwise surface mid-trace of the first step.
+    from ..nn.model import known_layer_paths
+    plan.validate_paths(known_layer_paths(cfg))
+    print(f"[train] numerics spec: {plan}")
     cell = ShapeCell("train_cli", args.seq, args.batch, "train")
 
     opt = (AdamWConfig(lr=args.lr) if args.optimizer == "adamw"
@@ -99,8 +114,9 @@ def main(argv=None):
         mesh = make_data_mesh(args.data_parallel)
         batch_sharding = NamedSharding(mesh, P("data"))
         state_sharding = NamedSharding(mesh, P())
-        eff_mode = (spec.reduce.mode
-                    if "reduce.mode" in NumericsSpec.explicit_keys(numerics)
+        from ..core.spec import NumericsSpec
+        eff_mode = (plan.reduce.mode
+                    if "reduce.mode" in NumericsSpec.explicit_keys(head)
                     else "float-psum")
         print(f"[train] data-parallel over {args.data_parallel} devices "
               f"(reduce.mode={eff_mode}; XLA inserts the gradient "
@@ -108,7 +124,12 @@ def main(argv=None):
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     state = init_train_state(params, opt, tc)
-    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    # Checkpoints are stamped with the canonical plan string; a restore
+    # under a different arithmetic fails unless explicitly allowed.
+    mgr = CheckpointManager(
+        args.ckpt_dir, numerics=plan,
+        allow_numerics_mismatch=args.allow_numerics_mismatch) \
+        if args.ckpt_dir else None
     start = 0
     if mgr is not None:
         restored, step0 = mgr.restore_latest(jax.eval_shape(lambda: state))

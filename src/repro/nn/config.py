@@ -85,12 +85,14 @@ class ModelConfig:
     frontend: Optional[str] = None   # audio_stub | vision_stub
     frontend_frac: float = 0.25      # fraction of sequence from the frontend
     # execution
-    numerics: str = "bf16"           # NumericsSpec alias or spec string,
-                                     # e.g. "lns16-train-emulate,
-                                     # backend=pallas" (kept as a string so
-                                     # the config stays trivially
-                                     # serializable; parse via
-                                     # .numerics_spec)
+    numerics: str = "bf16"           # NumericsSpec alias, spec string, or
+                                     # per-layer NumericsPlan string, e.g.
+                                     # "lns16-train-emulate,backend=pallas"
+                                     # or "bf16;layers.mlp=fmt:lns12,
+                                     # delta:lut20,quantize:params" (kept
+                                     # as a string so the config stays
+                                     # trivially serializable; parse via
+                                     # .numerics_plan / .numerics_spec)
     param_dtype: str = "float32"     # master weights
     q_chunk: int = 512               # query-chunked attention block
     attn_bands: int = 8              # banded-causal KV extents (see
@@ -131,12 +133,18 @@ class ModelConfig:
         return dataclasses.replace(self, **kw)
 
     @property
-    def numerics_spec(self):
-        """The parsed :class:`~repro.core.spec.NumericsSpec` of
+    def numerics_plan(self):
+        """The parsed :class:`~repro.core.plan.NumericsPlan` of
         ``numerics`` (cached by the parser; raises with the valid-values
-        list on an unknown alias/key)."""
-        from ..core.spec import NumericsSpec
-        return NumericsSpec.parse(self.numerics)
+        list on an unknown alias/key/pattern-override)."""
+        from ..core.plan import NumericsPlan
+        return NumericsPlan.parse(self.numerics)
+
+    @property
+    def numerics_spec(self):
+        """The *default* :class:`~repro.core.spec.NumericsSpec` of the
+        numerics plan (what layers no plan rule overrides run under)."""
+        return self.numerics_plan.default
 
     # ---- parameter counting (for 6·N·D roofline model flops) -------------
     def param_count(self) -> int:

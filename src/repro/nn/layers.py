@@ -4,10 +4,12 @@ All layers are pure functions over explicit param pytrees; ``init_*``
 functions are pure in the PRNG key so ``jax.eval_shape`` can derive
 ShapeDtypeStruct trees for the dry-run without allocating.
 
-Weight matmuls route through the model's resolved numerics runtime
-(``core.spec.LNSRuntime``, obtained via ``core.numerics.get_policy`` from
-the config's ``NumericsSpec`` string), which is how the paper's LNS
-arithmetic becomes a first-class mode for every architecture.
+Weight matmuls route through *per-layer* resolved numerics runtimes
+(``core.spec.LNSRuntime``): ``nn/model.py`` parses the config's
+``numerics`` string as a ``core.plan.NumericsPlan`` and hands every
+component (``layers.attn``, ``layers.mlp``, ``emb``, ``head``, ...) the
+runtime its layer path resolves to — which is how the paper's LNS
+arithmetic becomes a first-class, per-layer mode for every architecture.
 ``NumericsPolicy`` below is the legacy alias of that runtime type.
 """
 from __future__ import annotations

@@ -12,6 +12,14 @@ small at any depth; heterogeneous prefixes (MoE first-dense layer, hybrid
 tail) are unrolled in Python.  ``cfg.remat`` wraps each block in
 ``jax.remat``.  Residual activations are sequence-sharded (SP) between
 blocks when a Runtime with a mesh is provided.
+
+Numerics are a *per-layer* property: ``cfg.numerics`` parses as a
+:class:`~repro.core.plan.NumericsPlan` whose glob rules match the dotted
+layer paths in :func:`known_layer_paths` (``emb``, ``layers.attn``,
+``layers.mlp``, ..., ``head``); each component receives the runtime its
+resolved spec describes, and components whose specs are equal share one
+cached runtime (a plan with no rules is exactly the old single-policy
+behavior).
 """
 from __future__ import annotations
 
@@ -23,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.numerics import get_policy
+from ..core.numerics import get_plan
 from .attention import (KVCache, gqa_attention, gqa_decode, init_gqa,
                         init_mla, make_cache, mla_attention, mla_decode)
 from .config import ModelConfig
@@ -55,6 +63,66 @@ class Runtime:
     def sp_spec(self):
         return P(tuple(self.data_axes) or None,
                  self.model_axis if self.sequence_parallel else None, None)
+
+
+# ----------------------------------------------- per-layer numerics ------
+@dataclasses.dataclass(frozen=True)
+class BlockPols:
+    """The per-component numerics runtimes one block consumes.
+
+    Resolved from the model's :class:`~repro.core.plan.NumericsPlan` at a
+    layer-path prefix (``layers``, ``dense_layers``, ``enc_layers``,
+    ``shared_attn``, ``tail_layers``): e.g. ``layers.attn`` /
+    ``layers.mlp``.  Layers whose resolved specs are equal share one
+    cached runtime, so a plan with no rules costs exactly one runtime for
+    the whole stack.
+    """
+    attn: Any = None
+    mlp: Any = None
+    moe: Any = None
+    mamba: Any = None
+    xattn: Any = None
+
+
+def _block_pols(plan, prefix: str, *kinds: str) -> BlockPols:
+    return BlockPols(**{k: plan.runtime_for(f"{prefix}.{k}")
+                        for k in kinds})
+
+
+#: Layer paths the LM stack exposes to NumericsPlan glob patterns, per
+#: config (for documentation and plan validation).  Only paths this
+#: exact config actually instantiates are listed — e.g. a hybrid whose
+#: depth divides ``attn_every`` has no ``tail_layers``, and a rule
+#: matching only such a ghost path must fail validation, not silently
+#: apply to nothing.
+def known_layer_paths(cfg: ModelConfig) -> tuple:
+    paths = ["emb", "head"]
+    if cfg.frontend:
+        paths.append("frontend")
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        paths += ["layers.attn", "layers.mlp"]
+    elif fam == "moe":
+        if cfg.moe.first_dense_layers > 0:
+            paths += ["dense_layers.attn", "dense_layers.mlp"]
+        paths += ["layers.attn", "layers.moe"]
+    elif fam == "ssm":
+        paths += ["layers.mamba"]
+    elif fam == "hybrid":
+        paths += ["layers.mamba", "shared_attn.attn", "shared_attn.mlp"]
+        if cfg.layers % cfg.hybrid.attn_every:
+            paths.append("tail_layers.mamba")
+    elif fam in ("encdec", "audio"):
+        paths += ["enc_layers.attn", "enc_layers.mlp", "layers.attn",
+                  "layers.xattn", "layers.mlp"]
+    return tuple(paths)
+
+
+def _model_plan(cfg: ModelConfig):
+    """The config's numerics plan, with its patterns checked against the
+    family's layer paths (a typo'd pattern must fail loudly, not silently
+    leave a layer on the default arithmetic)."""
+    return get_plan(cfg.numerics).validate_paths(known_layer_paths(cfg))
 
 
 # ------------------------------------------------------------- init ------
@@ -168,50 +236,63 @@ def _norm_sp(prm, x, cfg, rt):
     return rt.constrain(apply_norm(prm, x, cfg), rt.sp_spec())
 
 
-def _dense_block(lp, x, cfg, pol, rt, positions):
+def _res(x, y):
+    """Return a branch output in the residual stream's dtype.
+
+    A no-op under a uniform plan; under mixed per-layer compute dtypes
+    the residual dtype is owned by the embedding output, and every block
+    branch casts back on re-entry (otherwise the scan carry dtype would
+    depend on which layer ran last).
+    """
+    return y.astype(x.dtype)
+
+
+def _dense_block(lp, x, cfg, bp: BlockPols, rt, positions):
     br = (lambda t: rt.constrain(t, rt.sp_spec())) if cfg.branch_sp \
         else (lambda t: t)
     if cfg.block_style == "parallel":      # command-r style
         h = _norm_sp(lp["norm1"], x, cfg, rt)
-        a, cache = _attn_fwd(lp["attn"], h, cfg, pol, positions, rt)
-        f = apply_mlp(lp["mlp"], h, cfg, pol)
-        x = x + br(a) + br(f)
+        a, cache = _attn_fwd(lp["attn"], h, cfg, bp.attn, positions, rt)
+        f = apply_mlp(lp["mlp"], h, cfg, bp.mlp)
+        x = x + br(_res(x, a)) + br(_res(x, f))
     else:
         a, cache = _attn_fwd(lp["attn"], _norm_sp(lp["norm1"], x, cfg, rt),
-                             cfg, pol, positions, rt)
-        x = x + br(a)
-        x = x + br(apply_mlp(lp["mlp"], _norm_sp(lp["norm2"], x, cfg, rt),
-                             cfg, pol))
+                             cfg, bp.attn, positions, rt)
+        x = x + br(_res(x, a))
+        x = x + br(_res(x, apply_mlp(lp["mlp"],
+                                     _norm_sp(lp["norm2"], x, cfg, rt),
+                                     cfg, bp.mlp)))
     return rt.constrain(x, rt.sp_spec()), cache
 
 
-def _dense_block_decode(lp, x, cfg, pol, rt, cache, pos):
+def _dense_block_decode(lp, x, cfg, bp: BlockPols, rt, cache, pos):
     if cfg.block_style == "parallel":
         h = apply_norm(lp["norm1"], x, cfg)
-        a, cache = _attn_dec(lp["attn"], h, cfg, pol, cache, pos)
-        x = x + a + apply_mlp(lp["mlp"], h, cfg, pol)
+        a, cache = _attn_dec(lp["attn"], h, cfg, bp.attn, cache, pos)
+        x = x + _res(x, a) + _res(x, apply_mlp(lp["mlp"], h, cfg, bp.mlp))
     else:
         a, cache = _attn_dec(lp["attn"], apply_norm(lp["norm1"], x, cfg),
-                             cfg, pol, cache, pos)
-        x = x + a
-        x = x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg),
-                          cfg, pol)
+                             cfg, bp.attn, cache, pos)
+        x = x + _res(x, a)
+        x = x + _res(x, apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg),
+                                  cfg, bp.mlp))
     return x, cache
 
 
-def _moe_layer_fwd(lp, x, cfg, pol, rt, positions):
+def _moe_layer_fwd(lp, x, cfg, bp: BlockPols, rt, positions):
     a, cache = _attn_fwd(lp["attn"], _norm_sp(lp["norm1"], x, cfg, rt),
-                         cfg, pol, positions, rt)
-    x = rt.constrain(x + a, rt.sp_spec())
-    y, aux = moe_block(lp["moe"], _norm_sp(lp["norm2"], x, cfg, rt), cfg, pol,
+                         cfg, bp.attn, positions, rt)
+    x = rt.constrain(x + _res(x, a), rt.sp_spec())
+    y, aux = moe_block(lp["moe"], _norm_sp(lp["norm2"], x, cfg, rt), cfg,
+                       bp.moe,
                        rt.moe_rt if rt.mesh is not None else None)
-    return rt.constrain(x + y, rt.sp_spec()), cache, aux
+    return rt.constrain(x + _res(x, y), rt.sp_spec()), cache, aux
 
 
-def _ssm_block(lp, x, cfg, pol, rt):
+def _ssm_block(lp, x, cfg, bp: BlockPols, rt):
     y, cache = mamba2_forward(lp["mamba"], _norm_sp(lp["norm1"], x, cfg, rt),
-                              cfg, pol)
-    return rt.constrain(x + y, rt.sp_spec()), cache
+                              cfg, bp.mamba)
+    return rt.constrain(x + _res(x, y), rt.sp_spec()), cache
 
 
 def _maybe_remat(fn, cfg):
@@ -237,14 +318,15 @@ def _scan(body, init, xs, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------- forward ------
-def _embed_inputs(params, batch, cfg, pol, rt=None):
+def _embed_inputs(params, batch, cfg, plan, rt=None):
     """tokens (+ optional stub frontend embeds) → (B, S, d), loss mask."""
     tokens = batch["tokens"]
-    x = embed_tokens(params["emb"], tokens, pol, rt)
+    x = embed_tokens(params["emb"], tokens, plan.runtime_for("emb"), rt)
     if cfg.frontend and "frontend_embeds" in batch:
-        fe = pol.linear(batch["frontend_embeds"].astype(x.dtype),
-                        params["frontend_proj"])
-        x = jnp.concatenate([fe, x], axis=1)
+        fpol = plan.runtime_for("frontend")
+        fe = fpol.linear(batch["frontend_embeds"].astype(fpol.dtype),
+                         params["frontend_proj"])
+        x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
     return x
 
 
@@ -257,14 +339,15 @@ def _backbone(params, x, cfg: ModelConfig, rt: Runtime, positions,
     survive through remat+grad and add O(L·B·S·kv·hd) HBM (+10-20 GiB per
     device on the 35B/76B train cells; EXPERIMENTS.md §Perf iteration 2).
     """
-    pol = get_policy(cfg.numerics)
+    plan = _model_plan(cfg)
     aux_total = jnp.float32(0.0)
     keep = (lambda c: c) if want_caches else (lambda c: None)
     caches = {}
     fam = cfg.family
     if fam in ("dense", "vlm"):
+        bp = _block_pols(plan, "layers", "attn", "mlp")
         blk = _maybe_remat(
-            lambda h, lp: _dense_block(lp, h, cfg, pol, rt, positions), cfg)
+            lambda h, lp: _dense_block(lp, h, cfg, bp, rt, positions), cfg)
 
         def body(h, lp):
             h, cache = blk(h, lp)
@@ -274,15 +357,17 @@ def _backbone(params, x, cfg: ModelConfig, rt: Runtime, positions,
         caches["layers"] = kv
     elif fam == "moe":
         fd = cfg.moe.first_dense_layers
+        bpd = _block_pols(plan, "dense_layers", "attn", "mlp")
         dense_caches = []
         for i in range(fd):
             lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
             x, c = _maybe_remat(
-                lambda h, q: _dense_block(q, h, cfg, pol, rt, positions),
+                lambda h, q: _dense_block(q, h, cfg, bpd, rt, positions),
                 cfg)(x, lp)
             dense_caches.append(c)
+        bp = _block_pols(plan, "layers", "attn", "moe")
         blk = _maybe_remat(
-            lambda h, lp: _moe_layer_fwd(lp, h, cfg, pol, rt, positions), cfg)
+            lambda h, lp: _moe_layer_fwd(lp, h, cfg, bp, rt, positions), cfg)
 
         def body(h, lp):
             h, cache, aux = blk(h, lp)
@@ -295,7 +380,8 @@ def _backbone(params, x, cfg: ModelConfig, rt: Runtime, positions,
                 lambda *xs: jnp.stack(xs), *dense_caches)
         aux_total = aux_total + jnp.sum(auxs)
     elif fam == "ssm":
-        blk = _maybe_remat(lambda h, lp: _ssm_block(lp, h, cfg, pol, rt), cfg)
+        bp = _block_pols(plan, "layers", "mamba")
+        blk = _maybe_remat(lambda h, lp: _ssm_block(lp, h, cfg, bp, rt), cfg)
 
         def body(h, lp):
             h, cache = blk(h, lp)
@@ -309,10 +395,13 @@ def _backbone(params, x, cfg: ModelConfig, rt: Runtime, positions,
         gp = jax.tree.map(
             lambda a: a[:groups * k].reshape((groups, k) + a.shape[1:]),
             params["layers"])
+        bp_ssm = _block_pols(plan, "layers", "mamba")
+        bp_attn = _block_pols(plan, "shared_attn", "attn", "mlp")
         ssm_blk = _maybe_remat(
-            lambda h, lp: _ssm_block(lp, h, cfg, pol, rt), cfg)
+            lambda h, lp: _ssm_block(lp, h, cfg, bp_ssm, rt), cfg)
         attn_blk = _maybe_remat(
-            lambda h, lp: _dense_block(lp, h, cfg, pol, rt, positions), cfg)
+            lambda h, lp: _dense_block(lp, h, cfg, bp_attn, rt, positions),
+            cfg)
 
         def group_body(h, glp):
             def inner(hh, lp):
@@ -326,8 +415,12 @@ def _backbone(params, x, cfg: ModelConfig, rt: Runtime, positions,
         caches["layers"] = ssm_c
         caches["shared_attn"] = attn_c
         if "tail_layers" in params:
+            bp_tail = _block_pols(plan, "tail_layers", "mamba")
+            tail_blk = _maybe_remat(
+                lambda h, lp: _ssm_block(lp, h, cfg, bp_tail, rt), cfg)
+
             def tail_body(h, lp):
-                h2, c = ssm_blk(h, lp)
+                h2, c = tail_blk(h, lp)
                 return h2, keep(c)
             x, tail_c = _scan(tail_body, x, params["tail_layers"], cfg)
             caches["tail_layers"] = tail_c
@@ -337,12 +430,12 @@ def _backbone(params, x, cfg: ModelConfig, rt: Runtime, positions,
 
 
 def _encoder(params, enc_in, cfg, rt):
-    pol = get_policy(cfg.numerics)
+    bp = _block_pols(_model_plan(cfg), "enc_layers", "attn", "mlp")
     enc_cfg = cfg.with_(causal=False)
     positions = jnp.broadcast_to(
         jnp.arange(enc_in.shape[1])[None], enc_in.shape[:2])
     blk = _maybe_remat(
-        lambda h, lp: _dense_block(lp, h, enc_cfg, pol, rt, positions)[0],
+        lambda h, lp: _dense_block(lp, h, enc_cfg, bp, rt, positions)[0],
         cfg)
 
     def body(h, lp):
@@ -355,18 +448,19 @@ def _encoder(params, enc_in, cfg, rt):
 def _decoder(params, x, enc_out, cfg, rt, positions,
              want_caches: bool = True):
     """Enc-dec decoder stack: self-attn + cross-attn + MLP per layer."""
-    pol = get_policy(cfg.numerics)
+    bp = _block_pols(_model_plan(cfg), "layers", "attn", "mlp", "xattn")
     keep = (lambda c: c) if want_caches else (lambda c: None)
 
     def block(h, lp):
         a, cache = _attn_fwd(lp["attn"], _norm_sp(lp["norm1"], h, cfg, rt),
-                             cfg, pol, positions, rt)
-        h = h + a
+                             cfg, bp.attn, positions, rt)
+        h = h + _res(h, a)
         q = _norm_sp(lp["norm2"], h, cfg, rt)
-        xa, xcache = _cross_attention(lp["xattn"], q, enc_out, cfg, pol, rt)
-        h = h + xa
-        h = h + apply_mlp(lp["mlp"], _norm_sp(lp["norm3"], h, cfg, rt),
-                          cfg, pol)
+        xa, xcache = _cross_attention(lp["xattn"], q, enc_out, cfg, bp.xattn,
+                                      rt)
+        h = h + _res(h, xa)
+        h = h + _res(h, apply_mlp(lp["mlp"], _norm_sp(lp["norm3"], h, cfg, rt),
+                                  cfg, bp.mlp))
         return rt.constrain(h, rt.sp_spec()), keep((cache, xcache))
 
     blk = _maybe_remat(block, cfg)
@@ -402,22 +496,27 @@ def _cross_attention(lp, q_in, enc_out, cfg, pol, rt=None):
 # ------------------------------------------------------------- API -------
 def loss_fn(params, batch, cfg: ModelConfig, rt: Runtime = Runtime()):
     """Mean next-token CE (+0.01·MoE aux).  batch: tokens, labels[, embeds]."""
-    pol = get_policy(cfg.numerics)
+    plan = _model_plan(cfg)
+    emb_pol = plan.runtime_for("emb")
     if cfg.family in ("encdec", "audio"):
-        enc_in = pol.linear(batch["frontend_embeds"].astype(pol.dtype),
-                            params["frontend_proj"]) \
-            if cfg.frontend else embed_tokens(params["emb"],
-                                              batch["enc_tokens"], pol, rt)
+        if cfg.frontend:
+            fpol = plan.runtime_for("frontend")
+            enc_in = fpol.linear(
+                batch["frontend_embeds"].astype(fpol.dtype),
+                params["frontend_proj"])
+        else:
+            enc_in = embed_tokens(params["emb"], batch["enc_tokens"],
+                                  emb_pol, rt)
         enc_out = _encoder(params, rt.constrain(enc_in, rt.sp_spec()),
                            cfg, rt)
-        x = embed_tokens(params["emb"], batch["tokens"], pol, rt)
+        x = embed_tokens(params["emb"], batch["tokens"], emb_pol, rt)
         positions = jnp.broadcast_to(
             jnp.arange(x.shape[1])[None], x.shape[:2])
         x, _ = _decoder(params, x, enc_out, cfg, rt, positions,
                         want_caches=False)
         aux = jnp.float32(0.0)
     else:
-        x = _embed_inputs(params, batch, cfg, pol, rt)
+        x = _embed_inputs(params, batch, cfg, plan, rt)
         positions = jnp.broadcast_to(
             jnp.arange(x.shape[1])[None], x.shape[:2])
         x, _, aux = _backbone(params, x, cfg, rt, positions,
@@ -426,32 +525,37 @@ def loss_fn(params, batch, cfg: ModelConfig, rt: Runtime = Runtime()):
     labels = batch["labels"]
     if x.shape[1] != labels.shape[1]:  # frontend prefix carries no loss
         x = x[:, x.shape[1] - labels.shape[1]:]
-    loss = chunked_ce_loss(x, params["emb"], labels, pol, cfg,
-                           rt=rt)
+    loss = chunked_ce_loss(x, params["emb"], labels,
+                           plan.runtime_for("head"), cfg, rt=rt)
     return loss + 0.01 * aux
 
 
 def prefill(params, batch, cfg: ModelConfig, rt: Runtime = Runtime()):
     """Run the full prompt; return last-position logits + caches."""
-    pol = get_policy(cfg.numerics)
+    plan = _model_plan(cfg)
+    emb_pol = plan.runtime_for("emb")
     if cfg.family in ("encdec", "audio"):
-        enc_in = pol.linear(batch["frontend_embeds"].astype(pol.dtype),
-                            params["frontend_proj"]) \
-            if cfg.frontend else embed_tokens(params["emb"],
-                                              batch["enc_tokens"], pol, rt)
+        if cfg.frontend:
+            fpol = plan.runtime_for("frontend")
+            enc_in = fpol.linear(
+                batch["frontend_embeds"].astype(fpol.dtype),
+                params["frontend_proj"])
+        else:
+            enc_in = embed_tokens(params["emb"], batch["enc_tokens"],
+                                  emb_pol, rt)
         enc_out = _encoder(params, enc_in, cfg, rt)
-        x = embed_tokens(params["emb"], batch["tokens"], pol, rt)
+        x = embed_tokens(params["emb"], batch["tokens"], emb_pol, rt)
         positions = jnp.broadcast_to(
             jnp.arange(x.shape[1])[None], x.shape[:2])
         x, caches = _decoder(params, x, enc_out, cfg, rt, positions)
         caches = {"layers": caches, "enc_out": enc_out}
     else:
-        x = _embed_inputs(params, batch, cfg, pol, rt)
+        x = _embed_inputs(params, batch, cfg, plan, rt)
         positions = jnp.broadcast_to(
             jnp.arange(x.shape[1])[None], x.shape[:2])
         x, caches, _ = _backbone(params, x, cfg, rt, positions)
     x = apply_norm(params["final_norm"], x[:, -1:], cfg)
-    return lm_logits(params["emb"], x, pol, cfg), caches
+    return lm_logits(params["emb"], x, plan.runtime_for("head"), cfg), caches
 
 
 def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
@@ -507,50 +611,56 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig,
     tok: (B, 1) int32; pos: (B,) int32 current positions.
     Returns (logits (B, 1, V), new caches).
     """
-    pol = get_policy(cfg.numerics)
-    x = embed_tokens(params["emb"], tok, pol, rt)
+    plan = _model_plan(cfg)
+    x = embed_tokens(params["emb"], tok, plan.runtime_for("emb"), rt)
     fam = cfg.family
     new_caches = dict(caches)
     if fam in ("dense", "vlm", "moe"):
         def scan_dense(x, stack, cache, prefix):
+            bp = _block_pols(plan, prefix, "attn", "mlp")
+
             def body(carry, inp):
                 h = carry
                 lp, c = inp
-                h, c2 = _dense_block_decode(lp, h, cfg, pol, rt, c, pos)
+                h, c2 = _dense_block_decode(lp, h, cfg, bp, rt, c, pos)
                 return h, c2
             x, kv = _scan(body, x, (stack, cache), cfg)
             return x, kv
 
         if fam == "moe":
             x, kv_d = scan_dense(x, params["dense_layers"],
-                                 caches["dense_layers"], "dense")
+                                 caches["dense_layers"], "dense_layers")
             new_caches["dense_layers"] = kv_d
+            bp = _block_pols(plan, "layers", "attn", "moe")
 
             def body(carry, inp):
                 h = carry
                 lp, c = inp
                 a, c2 = _attn_dec(lp["attn"],
-                                  apply_norm(lp["norm1"], h, cfg), cfg, pol,
-                                  c, pos)
-                h = h + a
+                                  apply_norm(lp["norm1"], h, cfg), cfg,
+                                  bp.attn, c, pos)
+                h = h + _res(h, a)
                 y, _ = moe_block(lp["moe"], apply_norm(lp["norm2"], h, cfg),
-                                 cfg, pol,
+                                 cfg, bp.moe,
                                  rt.moe_rt if rt.mesh is not None else None)
-                return h + y, c2
+                return h + _res(h, y), c2
 
             x, kv = _scan(body, x, (params["layers"],
                                            caches["layers"]), cfg)
             new_caches["layers"] = kv
         else:
-            x, kv = scan_dense(x, params["layers"], caches["layers"], "")
+            x, kv = scan_dense(x, params["layers"], caches["layers"],
+                               "layers")
             new_caches["layers"] = kv
     elif fam == "ssm":
+        bp = _block_pols(plan, "layers", "mamba")
+
         def body(h, inp):
             lp, c = inp
             y, c2 = mamba2_decode(lp["mamba"],
-                                  apply_norm(lp["norm1"], h, cfg), cfg, pol,
-                                  c)
-            return h + y, c2
+                                  apply_norm(lp["norm1"], h, cfg), cfg,
+                                  bp.mamba, c)
+            return h + _res(h, y), c2
 
         x, ssm = _scan(body, x, (params["layers"], caches["layers"]), cfg)
         new_caches["layers"] = ssm
@@ -563,6 +673,8 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig,
         gc = jax.tree.map(
             lambda a: a.reshape((groups, k) + a.shape[1:]),
             caches["layers"])
+        bp_ssm = _block_pols(plan, "layers", "mamba")
+        bp_attn = _block_pols(plan, "shared_attn", "attn", "mlp")
 
         def group_body(h, inp):
             glp, gcache, attn_c = inp
@@ -571,12 +683,12 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig,
                 lp, c = iinp
                 y, c2 = mamba2_decode(lp["mamba"],
                                       apply_norm(lp["norm1"], hh, cfg), cfg,
-                                      pol, c)
-                return hh + y, c2
+                                      bp_ssm.mamba, c)
+                return hh + _res(hh, y), c2
 
             h, ssm_c = _scan(inner, h, (glp, gcache), cfg)
             h, attn_c2 = _dense_block_decode(params["shared_attn"], h, cfg,
-                                             pol, rt, attn_c, pos)
+                                             bp_attn, rt, attn_c, pos)
             return h, (ssm_c, attn_c2)
 
         x, (ssm_c, attn_c) = _scan(
@@ -585,28 +697,32 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig,
             lambda a: a.reshape((groups * k,) + a.shape[2:]), ssm_c)
         new_caches["shared_attn"] = attn_c
         if "tail_layers" in params:
+            bp_tail = _block_pols(plan, "tail_layers", "mamba")
+
             def tail(h, inp):
                 lp, c = inp
                 y, c2 = mamba2_decode(lp["mamba"],
                                       apply_norm(lp["norm1"], h, cfg), cfg,
-                                      pol, c)
-                return h + y, c2
+                                      bp_tail.mamba, c)
+                return h + _res(h, y), c2
             x, tail_c = _scan(tail, x, (params["tail_layers"],
                                                caches["tail_layers"]), cfg)
             new_caches["tail_layers"] = tail_c
     elif fam in ("encdec", "audio"):
         enc_out = caches["enc_out"]
+        bp = _block_pols(plan, "layers", "attn", "mlp", "xattn")
 
         def body(h, inp):
             lp, (c_self, c_cross) = inp
             a, c2 = _attn_dec(lp["attn"], apply_norm(lp["norm1"], h, cfg),
-                              cfg, pol, c_self, pos)
-            h = h + a
+                              cfg, bp.attn, c_self, pos)
+            h = h + _res(h, a)
             q = apply_norm(lp["norm2"], h, cfg)
-            xa, _ = _cross_attention(lp["xattn"], q, enc_out, cfg, pol, rt)
-            h = h + xa
-            h = h + apply_mlp(lp["mlp"], apply_norm(lp["norm3"], h, cfg),
-                              cfg, pol)
+            xa, _ = _cross_attention(lp["xattn"], q, enc_out, cfg, bp.xattn,
+                                     rt)
+            h = h + _res(h, xa)
+            h = h + _res(h, apply_mlp(lp["mlp"], apply_norm(lp["norm3"], h, cfg),
+                                      cfg, bp.mlp))
             return h, (c2, c_cross)
 
         x, kv = _scan(body, x, (params["layers"], caches["layers"]), cfg)
@@ -614,4 +730,5 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig,
     else:
         raise ValueError(fam)
     x = apply_norm(params["final_norm"], x, cfg)
-    return lm_logits(params["emb"], x, pol, cfg), new_caches
+    return lm_logits(params["emb"], x, plan.runtime_for("head"), cfg), \
+        new_caches

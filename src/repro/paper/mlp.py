@@ -11,14 +11,20 @@ Backprop follows eq. (10)-(14): δ2 = P ⊟ Y, gW2 = a1ᵀ ⊡⊞ δ2, δ1 =
 (δ2 ⊡⊞ W2ᵀ) ⊡ llReLU'(z1), gW1 = xᵀ ⊡⊞ δ1, SGD per core/sgd.py.
 
 All LNS matmuls (forward *and* the three backward products) route through
-the :class:`~repro.core.spec.LNSRuntime` resolved from ``MLPConfig.spec``
-(a :class:`~repro.core.spec.NumericsSpec`): ``backend="emulate"`` runs the
-pure-jnp sequential MAC, ``"pallas"`` the blocked TPU kernels (interpret
-mode on CPU).  The two backends are bit-exact down to the last weight
-code, so experiments validated on one transfer to the other unchanged.
-The legacy loose knobs (``matmul_backend=`` / ``reduce_mode=`` /
-``grad_segments=``) still construct, with a ``DeprecationWarning``
-pointing at the spec field they fold into.
+per-layer :class:`~repro.core.spec.LNSRuntime`\\ s resolved from
+``MLPConfig.spec`` — a :class:`~repro.core.plan.NumericsPlan` mapping the
+MLP's layer paths (``"hidden"``: w1/b1, ``"out"``: w2/b2) to specs.  A
+bare spec string is a plan with no overrides (every layer shares one
+runtime — bit-identical to the pre-plan single-runtime path); a plan like
+``"lns16-train-pallas;hidden=fmt:lns12"`` trains the hidden layer in
+lns12 while the softmax-critical output layer stays lns16, with exact
+integer barrel-shift conversions (:func:`~repro.core.lns.convert_format`)
+at the layer boundaries.  ``backend="emulate"`` runs the pure-jnp
+sequential MAC, ``"pallas"`` the blocked TPU kernels (interpret mode on
+CPU); the two backends are bit-exact down to the last weight code — also
+under mixed-format plans.  The legacy loose knobs (``matmul_backend=`` /
+``reduce_mode=`` / ``grad_segments=``) still construct, with a
+``DeprecationWarning`` pointing at the spec field they fold into.
 """
 from __future__ import annotations
 
@@ -34,9 +40,10 @@ import numpy as np
 from ..core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
                     DELTA_SOFTMAX, FXP12, FXP16, LNS12, LNS16, DeltaEngine,
                     DeltaSpec, LNSArray, LNSMatmulBackend, LogSGDConfig,
-                    NumericsSpec, apply_update, beta_code, boxabs_max,
-                    boxdot, boxsum, ce_grad_init, ce_loss_readout, decode,
-                    encode, he_sigma, llrelu, llrelu_grad, log_normal_init,
+                    NumericsPlan, NumericsSpec, apply_update, beta_code,
+                    boxabs_max, boxdot, boxsum, ce_grad_init,
+                    ce_loss_readout, convert_format, decode, encode,
+                    he_sigma, llrelu, llrelu_grad, log_normal_init,
                     log_softmax_lns, scalar, zeros)
 from ..core.linear_fixed import (fxp_affine, fxp_decode, fxp_encode,
                                  fxp_leaky_relu, fxp_leaky_relu_grad,
@@ -45,6 +52,11 @@ from ..core.spec import LNSRuntime
 
 HIDDEN = 100
 ALPHA = 0.01  # leaky-ReLU slope [20]
+
+#: The paper MLP's layer paths: what NumericsPlan glob patterns match.
+LAYER_PATHS = ("hidden", "out")
+#: Parameter → owning layer path (the unit of per-layer arithmetic).
+PARAM_LAYER = {"w1": "hidden", "b1": "hidden", "w2": "out", "b2": "out"}
 
 _APPROX_DELTA = {"lut": DELTA_DEFAULT, "bitshift": DELTA_BITSHIFT,
                  "exact": DELTA_EXACT}
@@ -57,13 +69,16 @@ class MLPConfig:
     n_out: int = 10
     lr: float = 0.01
     weight_decay: float = 0.0
+    momentum: float = 0.0           # lns only: ⊞-momentum (LogSGDConfig)
     bits: int = 16                 # 12 or 16
     approx: str = "lut"            # 'lut' | 'bitshift' | 'exact' (lns only)
     stochastic_round: bool = False  # fxp only: SR on the weight update
                                     # (Gupta et al. 2015; beyond-paper)
-    spec: Any = None                # NumericsSpec | spec string | None;
-                                    # None → derived from bits/approx
-                                    # (end-to-end train spec, emulate)
+    spec: Any = None                # NumericsPlan | NumericsSpec | plan or
+                                    # spec string | None; None → derived
+                                    # from bits/approx (end-to-end train
+                                    # spec, emulate).  Normalized to a
+                                    # NumericsPlan in __post_init__.
     matmul_block: int = 32          # kernel tile edge; ≥128 on real TPUs
     data_parallel: int = 1          # lns only: devices on the 'data' axis
     # -- legacy loose knobs, deprecated: fold into ``spec`` ----------------
@@ -75,13 +90,13 @@ class MLPConfig:
     def __post_init__(self, matmul_backend, reduce_mode, grad_segments):
         spec = self.spec
         if spec is not None:
-            spec = NumericsSpec.parse(spec)
+            spec = NumericsPlan.parse(spec)
         else:
             # The paper's end-to-end log-domain training arithmetic at
             # this config's format / Δ approximation.
-            spec = NumericsSpec(
+            spec = NumericsPlan(NumericsSpec(
                 fmt=self.lns_fmt, delta_spec=_APPROX_DELTA[self.approx],
-                quantize="params+acts+grads", compute_dtype="float32")
+                quantize="params+acts+grads", compute_dtype="float32"))
         # A legacy value equal to what the spec already resolves to is a
         # no-op and stays silent — this also keeps dataclasses.replace()
         # warning-free (replace() re-passes the property-read values of
@@ -103,7 +118,8 @@ class MLPConfig:
 
     @property
     def lns_fmt(self):
-        if isinstance(self.spec, NumericsSpec) and self.spec.fmt is not None:
+        if isinstance(self.spec, (NumericsSpec, NumericsPlan)) \
+                and self.spec.fmt is not None:
             return self.spec.fmt
         return LNS16 if self.bits == 16 else LNS12
 
@@ -113,7 +129,7 @@ class MLPConfig:
 
     @property
     def delta_spec(self) -> DeltaSpec:
-        if (isinstance(self.spec, NumericsSpec)
+        if (isinstance(self.spec, (NumericsSpec, NumericsPlan))
                 and self.spec.delta_spec is not None):
             return self.spec.delta_spec
         return _APPROX_DELTA[self.approx]
@@ -125,19 +141,31 @@ class MLPConfig:
         return DELTA_EXACT if self.delta_spec.kind == "exact" \
             else DELTA_SOFTMAX
 
-    def runtime(self) -> LNSRuntime:
-        """The resolved LNS runtime (matmul backend at this tile size).
+    def plan(self) -> NumericsPlan:
+        """The completed per-layer :class:`NumericsPlan`.
 
-        The paper MLP always runs the end-to-end ⊞-MAC path, so a spec
-        without an explicit fmt/Δ (e.g. ``"fp32"`` passed through) is
-        completed from ``bits`` / ``approx`` before resolution.
+        The paper MLP always runs the end-to-end ⊞-MAC path, so a plan
+        whose default spec has no explicit fmt/Δ (e.g. ``"fp32"`` passed
+        through) is completed from ``bits`` / ``approx`` before
+        resolution; per-layer rules apply on top of the completed default.
         """
-        spec = self.spec
-        if spec.fmt is None or spec.delta_spec is None:
-            spec = spec.with_(fmt=self.lns_fmt, delta_spec=self.delta_spec)
-        return spec.runtime(block_m=self.matmul_block,
-                            block_n=self.matmul_block,
-                            block_k=self.matmul_block)
+        plan = self.spec
+        if plan.fmt is None or plan.delta_spec is None:
+            plan = plan.with_(fmt=self.lns_fmt, delta_spec=self.delta_spec)
+        return plan
+
+    def layer_runtime(self, path: str) -> LNSRuntime:
+        """The resolved runtime of layer ``path`` at this tile size."""
+        return self.plan().runtime_for(path, block_m=self.matmul_block,
+                                       block_n=self.matmul_block,
+                                       block_k=self.matmul_block)
+
+    def runtime(self) -> LNSRuntime:
+        """The *default* resolved runtime (shared by every layer no plan
+        rule overrides); per-layer consumers use :meth:`layer_runtime`."""
+        return self.plan().runtime(block_m=self.matmul_block,
+                                   block_n=self.matmul_block,
+                                   block_k=self.matmul_block)
 
 
 # Legacy read access (cfg.matmul_backend etc.): views over the spec.  The
@@ -285,63 +313,163 @@ class FxpMLP:
 
 
 # ------------------------------------------------------------------ lns --
+def segmented_boxsum(d: LNSArray, num_segments: int, eng) -> LNSArray:
+    """Per-segment sequential ⊞-fold over the batch axis: (B, K) → (S, K).
+
+    The bias-gradient side of the DP deterministic-reduce contract
+    (``distributed/lns_reduce.py``): slot ``s`` is the sequential fold of
+    segment ``s``'s rows only.
+    """
+    b = d.shape[0]
+    seg = b // num_segments
+    tail = d.shape[1:]
+    parts = LNSArray(d.code.reshape((num_segments, seg) + tail),
+                     d.sign.reshape((num_segments, seg) + tail))
+    return boxsum(parts, 1, eng, order="sequential")
+
+
 class LNSMLP:
-    """End-to-end log-domain training (the paper's contribution)."""
+    """End-to-end log-domain training (the paper's contribution).
+
+    Arithmetic is a *per-layer* property: the config's
+    :class:`~repro.core.plan.NumericsPlan` resolves one runtime per layer
+    path (``"hidden"``, ``"out"``).  Layers sharing a resolved spec share
+    one cached runtime — a bare spec (no plan rules) reproduces the
+    single-runtime semantics bit-for-bit.  Activations and
+    backpropagated errors crossing a format boundary go through
+    :func:`~repro.core.lns.convert_format` (exact integer shifts).
+    """
 
     def __init__(self, cfg: MLPConfig):
         self.cfg = cfg
-        self.fmt = cfg.lns_fmt
-        self.eng = DeltaEngine(cfg.delta_spec, self.fmt)
-        self.eng_sm = DeltaEngine(cfg.softmax_spec, self.fmt)
-        self.beta = beta_code(ALPHA, self.fmt)
-        self.sgd = LogSGDConfig(lr=cfg.lr, weight_decay=cfg.weight_decay)
-        # The spec resolved once: all four training matmuls (fwd ×2, dX,
-        # dW) go through runtime.matmul — the config-selected
-        # LNSMatmulBackend; emulate and pallas agree bit-exactly
-        # (sequential MAC).
-        self.runtime = cfg.runtime()
+        self.plan = cfg.plan().validate_paths(LAYER_PATHS)
+        self.runtimes = {p: cfg.layer_runtime(p) for p in LAYER_PATHS}
+        self.fmts = {p: self.runtimes[p].spec.fmt for p in LAYER_PATHS}
+        self.engs = {p: self.runtimes[p].delta_engine for p in LAYER_PATHS}
+        # Softmax sits in the output layer: its (approximation-sensitive,
+        # r = 1/64) Δ table lives in the *output* format.
+        out_delta = self.runtimes["out"].spec.delta_spec
+        sm_spec = DELTA_EXACT if out_delta.kind == "exact" else DELTA_SOFTMAX
+        self.eng_sm = DeltaEngine(sm_spec, self.fmts["out"])
+        self.beta = beta_code(ALPHA, self.fmts["hidden"])
+        self.sgd = LogSGDConfig(lr=cfg.lr, weight_decay=cfg.weight_decay,
+                                momentum=cfg.momentum)
+        # Per-parameter views (the unit the DP reduce plans key on).
+        self.param_runtimes = {k: self.runtimes[l]
+                               for k, l in PARAM_LAYER.items()}
+        self.param_engines = {k: self.engs[l]
+                              for k, l in PARAM_LAYER.items()}
+        self.param_fmts = {k: self.fmts[l] for k, l in PARAM_LAYER.items()}
+        # Legacy single-runtime aliases (input-side/hidden layer).
+        self.fmt = self.fmts["hidden"]
+        self.eng = self.engs["hidden"]
+        self.runtime = self.runtimes["hidden"]
         self.mm = self.runtime.matmul
 
     def init(self, key):
         k1, k2 = jax.random.split(key)
-        c, f = self.cfg, self.fmt
+        c = self.cfg
+        fh, fo = self.fmts["hidden"], self.fmts["out"]
         return dict(
-            w1=log_normal_init(k1, (c.n_in, c.n_hidden), he_sigma(c.n_in), f),
-            b1=zeros((c.n_hidden,), f),
+            w1=log_normal_init(k1, (c.n_in, c.n_hidden), he_sigma(c.n_in),
+                               fh),
+            b1=zeros((c.n_hidden,), fh),
             w2=log_normal_init(k2, (c.n_hidden, c.n_out),
-                               he_sigma(c.n_hidden), f),
-            b2=zeros((c.n_out,), f),
+                               he_sigma(c.n_hidden), fo),
+            b2=zeros((c.n_out,), fo),
         )
 
+    def init_momentum(self, params):
+        """Zero ⊞-momentum state, one slot per parameter in its layer's
+        format (``None`` when momentum is off)."""
+        if self.sgd.momentum == 0.0:
+            return None
+        return {k: zeros(params[k].shape, self.param_fmts[k])
+                for k in params}
+
     def _forward(self, params, x: LNSArray):
-        z1 = self.mm.affine(x, params["w1"], params["b1"])
-        a1 = llrelu(z1, self.beta, self.fmt)
-        z2 = self.mm.affine(a1, params["w2"], params["b2"])
+        """Forward pass; returns (z1 [hidden fmt], a1 [out fmt], z2).
+
+        ``a1`` is returned already converted to the output layer's format
+        — the form both its consumers (the z2 matmul and the dW2 backward
+        product) need.
+        """
+        mm_h = self.runtimes["hidden"].matmul
+        mm_o = self.runtimes["out"].matmul
+        z1 = mm_h.affine(x, params["w1"], params["b1"])
+        a1 = llrelu(z1, self.beta, self.fmts["hidden"])
+        a1 = convert_format(a1, self.fmts["hidden"], self.fmts["out"])
+        z2 = mm_o.affine(a1, params["w2"], params["b2"])
         return z1, a1, z2
 
-    @functools.partial(jax.jit, static_argnums=0)
-    def train_step(self, params, xb, yb):
-        f, eng = self.fmt, self.eng
-        x = encode(xb, f)                       # dataset conversion (Sec. 4)
+    def _backward(self, params, xb, yb, num_segments=None):
+        """Shared backward pass of the single-device and DP train steps.
+
+        ``num_segments=None`` emits fully ⊞-reduced gradients (the
+        paper's sequential MAC over the batch); an integer emits
+        per-segment partial codes with a leading segment axis — the
+        emission side of the deterministic DP all-reduce.  Every gradient
+        leaf is in its *own layer's* format (``PARAM_LAYER``).
+        """
+        fh, fo = self.fmts["hidden"], self.fmts["out"]
+        eng_h, eng_o = self.engs["hidden"], self.engs["out"]
+        mm_h = self.runtimes["hidden"].matmul
+        mm_o = self.runtimes["out"].matmul
+        x = encode(xb, fh)                      # dataset conversion (Sec. 4)
         z1, a1, z2 = self._forward(params, x)
         p = log_softmax_lns(z2, self.eng_sm)
-        d2 = ce_grad_init(p, yb, f, self.eng_sm)          # (B, K)
+        d2 = ce_grad_init(p, yb, fo, self.eng_sm)         # (B, K), out fmt
         # Sum-reduction over the minibatch, matching the fxp baseline.
-        # The transposed MACs run on the dispatcher's backward path
-        # (Pallas kernels when matmul_backend="pallas").
-        gw2 = self.mm.matmul_dw(a1, d2)
-        gb2 = boxsum(d2, 0, eng)
-        bp = self.mm.matmul_dx(d2, params["w2"])          # (B, H)
-        d1 = boxdot(bp, llrelu_grad(z1, self.beta, f), f)
-        gw1 = self.mm.matmul_dw(x, d1)
-        gb1 = boxsum(d1, 0, eng)
-        grads = dict(w1=gw1, b1=gb1, w2=gw2, b2=gb2)
-        params, _ = apply_update(params, grads, None, self.sgd, eng)
-        return params, ce_loss_readout(p, yb, f)
+        # The transposed MACs run on each layer's backward path (Pallas
+        # kernels when that layer's spec says backend=pallas).
+        bp = mm_o.matmul_dx(d2, params["w2"])             # (B, H), out fmt
+        bp = convert_format(bp, fo, fh)
+        d1 = boxdot(bp, llrelu_grad(z1, self.beta, fh), fh)
+        if num_segments is None:
+            grads = dict(w1=mm_h.matmul_dw(x, d1),
+                         b1=boxsum(d1, 0, eng_h),
+                         w2=mm_o.matmul_dw(a1, d2),
+                         b2=boxsum(d2, 0, eng_o))
+        else:
+            grads = dict(
+                w1=mm_h.matmul_dw_partials(x, d1, num_segments),
+                b1=segmented_boxsum(d1, num_segments, eng_h),
+                w2=mm_o.matmul_dw_partials(a1, d2, num_segments),
+                b2=segmented_boxsum(d2, num_segments, eng_o))
+        return grads, ce_loss_readout(p, yb, fo)
+
+    def per_segment_grads(self, params, xb, yb, num_segments: int):
+        """Per-segment gradient partials (leading segment axis) + loss."""
+        return self._backward(params, xb, yb, num_segments)
+
+    def apply_updates(self, params, grads, momentum=None):
+        """Pure-LNS SGD, each layer under its own Δ engine/format."""
+        new_p, new_m = {}, ({} if momentum is not None else None)
+        for layer in LAYER_PATHS:
+            keys = [k for k, l in PARAM_LAYER.items() if l == layer]
+            sub_m = None if momentum is None \
+                else {k: momentum[k] for k in keys}
+            p2, m2 = apply_update({k: params[k] for k in keys},
+                                  {k: grads[k] for k in keys},
+                                  sub_m, self.sgd, self.engs[layer])
+            new_p.update(p2)
+            if momentum is not None:
+                new_m.update(m2)
+        return new_p, new_m
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step(self, params, xb, yb, momentum=None):
+        """One step; returns (params, loss), or (params, momentum, loss)
+        when a momentum pytree is passed (``cfg.momentum > 0``)."""
+        grads, loss = self._backward(params, xb, yb)
+        params, momentum = self.apply_updates(params, grads, momentum)
+        if momentum is None:
+            return params, loss
+        return params, momentum, loss
 
     @functools.partial(jax.jit, static_argnums=0)
     def predict(self, params, xb):
-        x = encode(xb, self.fmt)
+        x = encode(xb, self.fmts["hidden"])
         _, _, z2 = self._forward(params, x)
         # signed argmax on LNS codes (no decode needed)
         key = jnp.where(z2.sign == 0, z2.code, -z2.code)

@@ -45,7 +45,8 @@ def evaluate(model, params, x, y, batch: int = 500) -> float:
 def run_experiment(backend: str, dataset: str, *, bits: int = 16,
                    approx: str = "lut", epochs: int = 5,
                    batch_size: int = 5, lr: float = 0.01,
-                   weight_decay: float | None = None, seed: int = 0,
+                   weight_decay: float | None = None,
+                   momentum: float = 0.0, seed: int = 0,
                    data_dir: str = "data", stochastic_round: bool = False,
                    numerics=None,
                    matmul_backend: str | None = None,
@@ -61,19 +62,26 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
     integer ops); pass epochs=20 and real IDX data for the full protocol.
 
     ``numerics`` (lns backend only) is the unified arithmetic descriptor —
-    a :class:`~repro.core.spec.NumericsSpec` or spec string such as
-    ``"lns16-train-pallas"`` or
-    ``"lns16-train-emulate,reduce.mode=float-psum,reduce.grad_segments=4"``
-    — selecting the ⊞-MAC execution backend (``backend=emulate|pallas``,
-    bit-identical weight trajectories) and, with ``data_parallel > 1``,
-    the gradient-reduce semantics: ``reduce.mode=boxplus`` is the
+    a :class:`~repro.core.spec.NumericsSpec`, a per-layer
+    :class:`~repro.core.plan.NumericsPlan`, or their string forms:
+    ``"lns16-train-pallas"``,
+    ``"lns16-train-emulate,reduce.mode=float-psum,reduce.grad_segments=4"``,
+    or a mixed-format plan such as
+    ``"lns16-train-pallas;hidden=fmt:lns12"`` (hidden layer in lns12,
+    softmax-critical output layer in lns16).  It selects the ⊞-MAC
+    execution backend per layer (``backend=emulate|pallas``, bit-identical
+    weight trajectories) and, with ``data_parallel > 1``, the
+    gradient-reduce semantics: ``reduce.mode=boxplus`` is the
     deterministic ⊞ all-reduce (bit-stable across device counts sharing
-    ``reduce.grad_segments``), ``float-psum`` the fast escape hatch.
-    ``batch_size`` must divide into the canonical segment count
-    (``grad_segments`` or ``data_parallel``).  The loose
-    ``matmul_backend=`` / ``reduce_mode=`` / ``grad_segments=`` keywords
-    are the deprecated pre-spec spelling (forwarded to ``MLPConfig``,
-    which warns).
+    ``reduce.grad_segments`` — also under mixed formats, where each
+    parameter reduces in its own layer's arithmetic), ``float-psum`` the
+    fast escape hatch.  ``batch_size`` must divide into the canonical
+    segment count (``grad_segments`` or ``data_parallel``).
+    ``momentum`` (lns backend only) enables the pure-LNS ⊞-momentum
+    update; the harness threads the replicated momentum state through the
+    step.  The loose ``matmul_backend=`` / ``reduce_mode=`` /
+    ``grad_segments=`` keywords are the deprecated pre-spec spelling
+    (forwarded to ``MLPConfig``, which warns).
     """
     x, yl, x_te, y_te, spec = datasets.load(dataset, data_dir, seed)
     x_tr, y_tr, x_val, y_val = datasets.train_val_split(x, yl, 5, seed)
@@ -82,12 +90,18 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
                                 ("reduce_mode", reduce_mode),
                                 ("grad_segments", grad_segments))
               if v is not None}
+    if momentum and backend != "lns":
+        raise ValueError(
+            f"momentum={momentum} is the pure-LNS ⊞-momentum update "
+            f"(core/sgd.py); the {backend!r} backend does not implement it")
     cfg = MLPConfig(n_out=spec.n_classes, lr=lr, weight_decay=wd,
-                    bits=bits, approx=approx,
+                    momentum=momentum, bits=bits, approx=approx,
                     stochastic_round=stochastic_round,
                     spec=numerics, data_parallel=data_parallel, **legacy)
     model = make_mlp(backend, cfg)
     params = model.init(jax.random.PRNGKey(seed))
+    mom = model.init_momentum(params) \
+        if momentum and hasattr(model, "init_momentum") else None
 
     rng = np.random.default_rng(seed)
     t0 = time.time()
@@ -104,6 +118,9 @@ def run_experiment(backend: str, dataset: str, *, bits: int = 16,
                 params, _ = model.train_step(
                     params, x_tr[sl], y_tr[sl],
                     jax.random.PRNGKey(seed * 1_000_003 + gstep))
+            elif mom is not None:
+                params, mom, _ = model.train_step(params, x_tr[sl],
+                                                  y_tr[sl], mom)
             else:
                 params, _ = model.train_step(params, x_tr[sl], y_tr[sl])
             gstep += 1

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.numerics import get_policy
+from ..core.numerics import get_plan
 from ..nn import Runtime, decode_step, init_decode_caches, prefill
 from ..nn.config import ModelConfig
 
@@ -37,10 +37,16 @@ class ServingEngine:
         self.params = params
         self.sc = sc
         self.rt = rt
-        # Resolve the model's numerics spec once: every decode-step matmul
-        # routes through this runtime (fails fast on a bad spec string,
-        # before any compilation).
-        self.numerics = get_policy(cfg.numerics)
+        # Resolve the model's numerics plan once: every decode-step matmul
+        # routes through its per-layer runtimes.  Validating the rule
+        # patterns against this arch's layer paths here makes a bad
+        # spec/plan string (unknown key/value OR dead pattern) fail fast,
+        # before any compilation.  ``numerics`` stays the *default*
+        # runtime for pre-plan call sites.
+        from ..nn.model import known_layer_paths
+        self.plan = get_plan(cfg.numerics).validate_paths(
+            known_layer_paths(cfg))
+        self.numerics = self.plan.runtime()
         self.caches = init_decode_caches(
             cfg, sc.max_batch, sc.max_len,
             jnp.dtype(cfg.param_dtype), enc_len=sc.max_len)
@@ -56,8 +62,13 @@ class ServingEngine:
     def matmul_path(self) -> str:
         """The matmul path serving runs on, straight from the runtime
         (lives next to ``LNSRuntime.linear`` so it cannot drift from the
-        actual dispatch)."""
-        return self.numerics.matmul_path
+        actual dispatch).  Under a per-layer plan the default path is
+        reported with the number of per-layer overrides appended."""
+        path = self.numerics.matmul_path
+        if not self.plan.is_uniform:
+            path += (f" (+{len(self.plan.rules)} per-layer override"
+                     f"{'s' if len(self.plan.rules) != 1 else ''})")
+        return path
 
     # -- slot management ---------------------------------------------------
     def add_request(self, prompt: np.ndarray) -> Optional[int]:

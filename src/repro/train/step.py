@@ -15,6 +15,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from ..core.plan import NumericsPlan
 from ..core.spec import NumericsSpec
 from ..nn import Runtime, loss_fn
 from ..nn.config import ModelConfig
@@ -68,29 +69,30 @@ class TrainConfig:
 
 def resolve_numerics(cfg: ModelConfig,
                      tc: "TrainConfig" = None) -> tuple[ModelConfig,
-                                                        NumericsSpec]:
-    """Fold TrainConfig's legacy numerics overrides into one resolved spec.
+                                                        NumericsPlan]:
+    """Fold TrainConfig's legacy numerics overrides into one resolved plan.
 
-    Parses ``cfg.numerics`` (alias, spec string, or alias + ``key=value``
-    overrides), applies ``tc.matmul_backend`` / ``tc.reduce_mode`` as typed
-    ``spec.with_(...)`` overrides (invalid values raise with the
-    valid-values list), and returns ``(cfg with canonical numerics string,
-    spec)``.  This replaces the old policy-name string surgery
-    (``cfg.numerics.rsplit("-", 1)[0] + "-" + tc.matmul_backend``): the
-    override is a dataclass-field update, so it works for *any* spec — no
-    naming convention required.
+    Parses ``cfg.numerics`` (alias, spec string, alias + ``key=value``
+    overrides, or a per-layer :class:`~repro.core.plan.NumericsPlan`
+    string), applies ``tc.matmul_backend`` / ``tc.reduce_mode`` as typed
+    overrides of the plan's *default* spec (invalid values raise with the
+    valid-values list; per-layer rules re-apply on top), and returns
+    ``(cfg with canonical numerics string, plan)``.  This replaces the old
+    policy-name string surgery (``cfg.numerics.rsplit("-", 1)[0] + "-" +
+    tc.matmul_backend``): the override is a dataclass-field update, so it
+    works for *any* spec — no naming convention required.
     """
-    spec = NumericsSpec.parse(cfg.numerics)
+    plan = NumericsPlan.parse(cfg.numerics)
     if tc is not None and tc.matmul_backend is not None:
-        if not spec.lns_grad:
+        if not plan.lns_grad:
             raise ValueError(
                 f"the matmul-backend override requires an LNS end-to-end "
                 f"training spec (quantize includes 'grads'), got "
                 f"{cfg.numerics!r}")
-        spec = spec.with_(backend=tc.matmul_backend)
+        plan = plan.with_(backend=tc.matmul_backend)
     if tc is not None and tc.reduce_mode is not None:
-        spec = spec.with_(**{"reduce.mode": tc.reduce_mode})
-    return cfg.with_(numerics=str(spec)), spec
+        plan = plan.with_(**{"reduce.mode": tc.reduce_mode})
+    return cfg.with_(numerics=str(plan)), plan
 
 
 def init_train_state(params, opt_cfg: OptimizerConfig,
@@ -128,11 +130,12 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
     # drops an explicit boxplus marker and skips this diagnostic — the
     # executed semantics are float-psum either way (the guard gates an
     # error message, never the arithmetic).
+    default_seg = str(cfg.numerics).split(";", 1)[0]  # plan's default spec
     requested_boxplus = (
         tc.reduce_mode == "boxplus"
-        or ("reduce.mode" in NumericsSpec.explicit_keys(cfg.numerics)
-            and NumericsSpec.parse(cfg.numerics).reduce.mode == "boxplus"))
-    cfg, spec = resolve_numerics(cfg, tc)
+        or ("reduce.mode" in NumericsSpec.explicit_keys(default_seg)
+            and NumericsPlan.parse(cfg.numerics).reduce.mode == "boxplus"))
+    cfg, plan = resolve_numerics(cfg, tc)
     if requested_boxplus and tc.data_parallel > 1:
         # The LM step's gradients are float-view (custom_vjp boundary), so
         # only the linear psum semantics apply here; the deterministic

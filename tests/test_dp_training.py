@@ -132,8 +132,14 @@ def test_dw_partials_indivisible_batch_raises(rng):
 
 
 # ---------------------------------------------------------------- layer 3
-def _tiny_cfg(backend="pallas", **kw):
-    return MLPConfig(n_in=10, n_hidden=7, n_out=4, matmul_backend=backend,
+def _tiny_cfg(backend="pallas", *, plan_rules="", grad_segments=None,
+              reduce_mode=None, **kw):
+    spec = f"lns16-train-{backend}"
+    if reduce_mode is not None:
+        spec += f",reduce.mode={reduce_mode}"
+    if grad_segments is not None:
+        spec += f",reduce.grad_segments={grad_segments}"
+    return MLPConfig(n_in=10, n_hidden=7, n_out=4, spec=spec + plan_rules,
                      matmul_block=8, **kw)
 
 
@@ -214,27 +220,44 @@ def test_make_mlp_routes_data_parallel(rng):
 
 
 # ---------------------------------------------------------------- layer 4
+#: (id, numerics, momentum) — the device-count-invariance grid: the
+#: uniform plan (the PR-2 acceptance criterion), a mixed lns12/lns16
+#: per-layer plan (formats reduce per-parameter), and ⊞-momentum
+#: (replicated state updated after the deterministic reduce).
+INVARIANCE_CASES = [
+    ("uniform", "lns16-train-pallas,reduce.grad_segments=4", 0.0),
+    ("mixed-plan",
+     "lns16-train-pallas,reduce.grad_segments=4;hidden=fmt:lns12", 0.0),
+    ("momentum", "lns16-train-pallas,reduce.grad_segments=4", 0.9),
+]
+
+
 def test_device_count_invariance_1_2_4():
     """The acceptance criterion: bit-identical weight codes on 1/2/4
-    devices under reduce_mode='boxplus', matching the sequential
-    baseline."""
+    devices under reduce.mode=boxplus, matching the sequential baseline —
+    for the uniform spec, a mixed-format per-layer plan, and ⊞-momentum."""
     if jax.device_count() >= 4:
-        ok, runs = run_device_count_invariance_check(
-            (1, 2, 4), steps=2, batch=8, grad_segments=4,
-            matmul_backend="pallas")
-        assert ok, {d: r["matches_reference"] for d, r in runs.items()}
-        _params_equal(runs[1]["params"], runs[2]["params"])
-        _params_equal(runs[1]["params"], runs[4]["params"])
+        for name, numerics, momentum in INVARIANCE_CASES:
+            ok, runs = run_device_count_invariance_check(
+                (1, 2, 4), steps=2, batch=8, numerics=numerics,
+                momentum=momentum)
+            assert ok, (name,
+                        {d: r["matches_reference"] for d, r in runs.items()})
+            _params_equal(runs[1]["params"], runs[2]["params"])
+            _params_equal(runs[1]["params"], runs[4]["params"])
         return
     # Single-device environment: force 8 emulated host devices in a
-    # fresh interpreter (the flag must precede jax init).
+    # fresh interpreter (the flag must precede jax init); one subprocess
+    # covers the whole case grid.
     code = (
         "import sys\n"
         "from repro.distributed.lns_dp import "
         "run_device_count_invariance_check\n"
-        "ok, _ = run_device_count_invariance_check((1, 2, 4), steps=2, "
-        "batch=8, grad_segments=4, matmul_backend='pallas', verbose=True)\n"
-        "sys.exit(0 if ok else 1)\n")
+        f"for name, numerics, momentum in {INVARIANCE_CASES!r}:\n"
+        "    ok, _ = run_device_count_invariance_check((1, 2, 4), steps=2, "
+        "batch=8, numerics=numerics, momentum=momentum, verbose=True)\n"
+        "    print(name, 'ok' if ok else 'MISMATCH')\n"
+        "    assert ok, name\n")
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",

@@ -137,7 +137,7 @@ def test_mlp_training_emulate_vs_pallas_identical_weights(rng):
     runs = {}
     for be in ("emulate", "pallas"):
         cfg = MLPConfig(n_in=12, n_hidden=9, n_out=4,
-                        matmul_backend=be, matmul_block=8)
+                        spec=f"lns16-train-{be}", matmul_block=8)
         model = make_mlp("lns", cfg)
         params = model.init(jax.random.PRNGKey(0))
         losses = []

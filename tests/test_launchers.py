@@ -25,6 +25,22 @@ def test_train_resume_drill(tmp_path):
     assert max(losses2) < 2.0 * max(losses1), "resumed loss diverged"
 
 
+def test_train_cli_numerics_stamped_checkpoints(tmp_path):
+    """Checkpoints are stamped with the canonical plan string: resuming
+    under a different arithmetic fails with a pointer to the opt-out
+    flag, which then allows the deliberate migration."""
+    import pytest
+    common = ["--arch", "olmo-1b", "--batch", "2", "--seq", "16",
+              "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+              "--log-every", "100"]
+    train_cli.main(["--steps", "2", "--numerics", "fp32"] + common)
+    with pytest.raises(ValueError, match="allow_numerics_mismatch"):
+        train_cli.main(["--steps", "4", "--numerics", "bf16"] + common)
+    losses = train_cli.main(["--steps", "4", "--numerics", "bf16",
+                             "--allow-numerics-mismatch"] + common)
+    assert len(losses) == 2  # resumed from step 2 despite the mismatch
+
+
 def test_train_cli_numerics_alias_and_override(capsys):
     """--numerics accepts a registry alias plus key=value overrides; the
     resolved canonical spec string is echoed and drives the step."""

@@ -127,16 +127,20 @@ def test_with_typed_override_matches_string_surgery():
 
 def test_trainconfig_override_paths_agree():
     from repro.configs import get_config, reduced
+    from repro.core.plan import NumericsPlan
     from repro.train.step import TrainConfig, resolve_numerics
     cfg = reduced(get_config("olmo-1b")).with_(
         numerics="lns16-train-emulate", remat="none")
     with pytest.warns(DeprecationWarning, match="backend=pallas"):
         tc = TrainConfig(matmul_backend="pallas")
-    legacy_cfg, legacy_spec = resolve_numerics(cfg, tc)
-    new_cfg, new_spec = resolve_numerics(
+    legacy_cfg, legacy_plan = resolve_numerics(cfg, tc)
+    new_cfg, new_plan = resolve_numerics(
         cfg.with_(numerics="lns16-train-emulate,backend=pallas"),
         TrainConfig())
-    assert legacy_spec == new_spec == NumericsSpec.parse("lns16-train-pallas")
+    # resolve_numerics returns the (trivial) per-layer plan; its default
+    # spec is the resolved arithmetic.
+    assert legacy_plan == new_plan == NumericsPlan.parse("lns16-train-pallas")
+    assert legacy_plan.default == NumericsSpec.parse("lns16-train-pallas")
     assert legacy_cfg.numerics == new_cfg.numerics == "lns16-train-pallas"
     # invalid override value / non-training spec raise with pointers
     with pytest.warns(DeprecationWarning):
