@@ -1,0 +1,173 @@
+"""Diff freshly-generated BENCH_*.json files against committed baselines.
+
+The perf gate of the kernel subsystem: every bench row is attributable to
+an exact configuration — ``(op, shape, spec)`` plus the backend — so a
+regression is a *matched-row* comparison, never a fleet average.  The
+committed baselines live under ``benchmarks/baselines/`` (the generated
+``BENCH_*.json`` files themselves are gitignored CI artifacts); refresh
+one deliberately by copying a fresh JSON over it.  CI runs the benches,
+then::
+
+    python benchmarks/compare_bench.py BENCH_kernels.json \
+        --baseline benchmarks/baselines/kernels.json --threshold 0.2
+
+and fails (exit 1) when any matched row's ``ms_per_step`` regressed by
+more than the threshold (default 20%).  Rows present on only one side are
+reported but never fail the gate (new ops appear, old ones retire);
+``--require-rows`` upgrades *missing current rows* (baseline rows that
+vanished) to failures.  Improvements are printed so wins land in the CI
+log next to the numbers that prove them.
+
+Interpret-mode wall times are noisy; a 20% per-row threshold plus the
+matched-pair discipline is deliberately coarse — this gate catches "the
+fused path silently fell off a cliff", not single-digit drift.  When the
+two JSONs come from *different machines* (CI runner vs the laptop that
+committed the baseline), pass ``--normalize``: every row is divided by
+its file's interpret-mode reference row first (the fixed-block
+pallas-lut20 ``matmul_fwd`` row — same cost regime as the gated rows, so
+machine speed cancels for the quantity that matters; the compute-bound
+calibration row and the float row are fallbacks for older JSONs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a bench row: configuration, not measurement."""
+    return (row.get("op"), row.get("shape"), row.get("spec"),
+            row.get("backend"), row.get("devices", 1))
+
+
+def load_rows(path: str, normalize: bool = False) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    rows = {}
+    for row in data.get("rows", []):
+        rows[row_key(row)] = dict(row)
+    if normalize:
+        # The gated rows are Pallas interpret-mode (interpreter-bound),
+        # so the denominator must be too — a BLAS-bound float matmul
+        # scales with core count/BLAS throughput, not with what the
+        # gated rows cost, and would shift every ratio on a different
+        # machine.  Preference: the fixed-block pallas-lut20 forward
+        # micro row (same cost regime as the gated rows; a *uniform*
+        # interpret-path shift cancels — the gate targets relative
+        # cliffs, not fleet-wide drift), then the compute-bound
+        # calibration row, then the float row (legacy JSONs).
+        refs = ([r for r in rows.values()
+                 if r.get("op") == "matmul_fwd"
+                 and r.get("backend") == "pallas-lut20"]
+                or [r for r in rows.values()
+                    if r.get("op") == "calibration"]
+                or [r for r in rows.values()
+                    if r.get("op") == "matmul_fwd"
+                    and r.get("backend") == "float"])
+        if not refs or float(refs[0]["ms_per_step"]) <= 0:
+            raise SystemExit(
+                f"{path}: --normalize needs a reference row "
+                f"(pallas-lut20 matmul_fwd, calibration, or float "
+                f"matmul_fwd)")
+        ref_ms = float(refs[0]["ms_per_step"])
+        for r in rows.values():
+            r["ms_per_step"] = float(r["ms_per_step"]) / ref_ms
+    return rows
+
+
+def compare(current: dict, baseline: dict, threshold: float):
+    """Return (regressions, improvements, only_current, only_baseline).
+
+    A regression is a matched key whose current ms_per_step exceeds
+    baseline * (1 + threshold); an improvement is the mirror image.
+    """
+    regressions, improvements = [], []
+    for key in sorted(set(current) & set(baseline), key=str):
+        cur = float(current[key]["ms_per_step"])
+        base = float(baseline[key]["ms_per_step"])
+        if base <= 0:
+            continue
+        ratio = cur / base
+        entry = (key, base, cur, ratio)
+        if ratio > 1.0 + threshold:
+            regressions.append(entry)
+        elif ratio < 1.0 - threshold:
+            improvements.append(entry)
+    only_current = sorted(set(current) - set(baseline), key=str)
+    only_baseline = sorted(set(baseline) - set(current), key=str)
+    return regressions, improvements, only_current, only_baseline
+
+
+def _fmt_key(key: tuple) -> str:
+    op, shape, spec, backend, devices = key
+    return f"{op}/{backend}/{shape} [{spec}] x{devices}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", nargs="+",
+                    help="freshly generated BENCH_*.json file(s)")
+    ap.add_argument("--baseline", action="append", required=True,
+                    help="committed baseline JSON (repeat to pair with "
+                         "each current file, or pass one shared baseline)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="allowed ms_per_step regression fraction "
+                         "(default 0.2 = 20%%)")
+    ap.add_argument("--require-rows", action="store_true",
+                    help="fail when a baseline row is missing from the "
+                         "current run")
+    ap.add_argument("--normalize", action="store_true",
+                    help="divide every row by its file's interpret-mode "
+                         "reference row (the fixed-block pallas-lut20 "
+                         "matmul_fwd row; calibration/float rows are "
+                         "fallbacks) — cross-machine comparison")
+    ap.add_argument("--gate-ops", default=None,
+                    help="comma-separated ops whose regressions fail the "
+                         "gate (default: all); other ops' drift is "
+                         "reported but not gating — micro-rows on shared "
+                         "runners are far noisier than end-to-end rows")
+    args = ap.parse_args(argv)
+    gate_ops = (None if args.gate_ops is None
+                else {o.strip() for o in args.gate_ops.split(",") if
+                      o.strip()})
+    baselines = args.baseline
+    if len(baselines) == 1:
+        baselines = baselines * len(args.current)
+    if len(baselines) != len(args.current):
+        ap.error("pass one --baseline total or one per current file")
+
+    failed = False
+    for cur_path, base_path in zip(args.current, baselines):
+        current = load_rows(cur_path, normalize=args.normalize)
+        baseline = load_rows(base_path, normalize=args.normalize)
+        regs, imps, only_cur, only_base = compare(current, baseline,
+                                                  args.threshold)
+        unit = "xref" if args.normalize else "ms"
+        print(f"== {cur_path} vs {base_path} "
+              f"(threshold {args.threshold:.0%}, unit {unit}) ==")
+        gating = [e for e in regs
+                  if gate_ops is None or e[0][0] in gate_ops]
+        for key, base, cur, ratio in regs:
+            tag = ("REGRESSION" if gate_ops is None or key[0] in gate_ops
+                   else "drift (not gated)")
+            print(f"  {tag} {_fmt_key(key)}: "
+                  f"{base:.2f} → {cur:.2f} {unit} ({ratio:.2f}x)")
+        for key, base, cur, ratio in imps:
+            print(f"  improved   {_fmt_key(key)}: "
+                  f"{base:.2f} → {cur:.2f} {unit} ({ratio:.2f}x)")
+        for key in only_cur:
+            print(f"  new row    {_fmt_key(key)}")
+        for key in only_base:
+            print(f"  missing    {_fmt_key(key)}")
+        matched = len(set(current) & set(baseline))
+        print(f"  {matched} matched rows, {len(gating)} gating "
+              f"regressions ({len(regs) - len(gating)} non-gated), "
+              f"{len(imps)} improvements")
+        if gating or (args.require_rows and only_base):
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

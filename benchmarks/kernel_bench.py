@@ -1,5 +1,6 @@
 """LNS ⊞-MAC microbenchmarks: Pallas kernels (interpret), jnp emulation,
-and the float matmul reference — forward AND backward passes.
+and the float matmul reference — forward, backward, fused-epilogue, and
+end-to-end train-step rows.
 
 CPU wall times characterize the *emulation*, not TPU performance (the
 container has no TPU); the structural TPU cost model lives in
@@ -8,13 +9,23 @@ backward rows time the transposed ⊞-MACs dX = dY ⊞ Wᵀ (contraction over
 N) and dW = Xᵀ ⊞ dY (contraction over the batch M) that training on the
 kernel path adds (see kernels/lns_matmul/lns_matmul.py).
 
-Run as a script to also emit machine-readable ``BENCH_kernels.json``
-(one row per op × backend: op, shape, backend, devices, ms_per_step,
-tok_per_s, and ``spec``/``plan`` — the resolved ``NumericsSpec`` and
-canonical ``NumericsPlan`` strings the row ran under, so every number is
-attributable to an exact configuration — including the lns12 rows of the
-mixed-format path, whose narrower Δ tables are the point of per-layer
-plans); ``run()`` keeps the legacy (name, us, note) tuples for
+Fused rows time the flush-time epilogues against their unfused
+compositions (same arithmetic, bit-exact — asserted here): forward
+bias ⊞ + llrelu folded into the kernel flush vs kernel + separate XLA
+passes, and the dW kernel with the ⊞-SGD (momentum + weight-decay) update
+in its flush vs dW + separate update.  The ``train_step`` rows run the
+whole paper-MLP step end-to-end: the unfused fixed-block configuration
+(the pre-fusion state of the repo) vs the fused step with
+``blocks=auto`` — block sizes chosen by the autotuner
+(``kernels/autotune.py``; its persistent cache keeps CI re-runs cheap).
+
+Every row records ``blocks`` (the tile sizes it ran with — ``auto:``-
+prefixed per-op choices for autotuned rows) plus ``spec``/``plan`` — the
+resolved ``NumericsSpec`` and canonical ``NumericsPlan`` strings — so
+every number is attributable to an exact configuration.  The emulate and
+pallas forward rows are asserted bit-identical before timing (both run
+the sequential MAC order; PR 1 moved the training emulation off the
+pairwise tree).  ``run()`` keeps the legacy (name, us, note) tuples for
 benchmarks/run.py.
 """
 from __future__ import annotations
@@ -26,81 +37,127 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, LNS12,
-                        LNS16, DeltaEngine, LNSMatmulBackend, NumericsPlan,
-                        NumericsSpec, encode)
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, LNS12, LNS16,
+                        DeltaEngine, LNSMatmulBackend, LogSGDConfig,
+                        NumericsPlan, NumericsSpec, UpdateEpilogue,
+                        apply_update, beta_code, encode, zeros)
 from repro.core.arithmetic import lns_matmul
-from repro.kernels.lns_matmul import (lns_matmul_dw_kernel,
+from repro.kernels import autotune
+from repro.kernels.lns_matmul import (FwdEpilogue, lns_matmul_dw_kernel,
+                                      lns_matmul_dw_update_kernel,
                                       lns_matmul_dx_kernel,
+                                      lns_matmul_fused_kernel,
                                       lns_matmul_kernel)
+from repro.paper.mlp import MLPConfig, make_mlp
+
+M, K, N = 64, 784, 100          # the paper MLP's hot matmul (batch 64)
+N_OUT = 10
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
+    """Best-of-``reps`` wall time in µs.
+
+    Min, not mean: one background hiccup on a shared runner inflates a
+    mean and poisons the committed baseline the CI regression gate
+    compares against; the minimum is the stable estimate of what the
+    computation actually costs.
+    """
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _codes(x):
+    return np.asarray(x.code if hasattr(x, "code") else x)
+
+
+def _row(op, shape, backend, us, note, numerics, blocks="-", tokens=M):
+    """One bench row: configuration + measurement.
+
+    ``plan`` is the canonical per-layer NumericsPlan string (equal to
+    ``spec`` for single-spec rows; mixed-plan rows in the DP bench carry
+    their rules here).  ``blocks`` records the tile sizes the row ran
+    with — the autotuner's per-op choices for ``auto`` rows.
+    """
+    return dict(op=op, shape=shape, backend=backend, devices=1,
+                ms_per_step=us / 1e3, tok_per_s=tokens / (us / 1e6),
+                note=note, blocks=blocks, spec=str(numerics),
+                plan=str(NumericsPlan.parse(numerics)))
 
 
 def records():
     """One dict per op × backend; ``tok_per_s`` = batch rows per second."""
     rng = np.random.default_rng(0)
-    m, k, n = 64, 784, 100
+    m, k, n = M, K, N
     X = rng.normal(size=(m, k)).astype(np.float32)
     W = rng.normal(size=(k, n)).astype(np.float32)
+    B = rng.normal(size=(n,)).astype(np.float32)
     DY = rng.normal(size=(m, n)).astype(np.float32)
-    x, w, dy = encode(X, LNS16), encode(W, LNS16), encode(DY, LNS16)
+    x, w, b, dy = (encode(X, LNS16), encode(W, LNS16), encode(B, LNS16),
+                   encode(DY, LNS16))
     shape = f"{m}x{k}x{n}"
 
-    rows = []
+    # End-to-end rows first: a fresh process gives the train-step
+    # comparison its cleanest timings (the micro rows below leave ~15
+    # compiled programs and their buffers behind, which measurably skews
+    # later interpret-mode wall times).
+    rows = _train_step_records(rng)
 
-    def add(op, backend, us, note, numerics):
-        # ``plan`` is the canonical per-layer NumericsPlan string (equal
-        # to ``spec`` for these single-spec rows; mixed-plan rows in the
-        # DP bench carry their rules here).
-        rows.append(dict(op=op, shape=shape, backend=backend, devices=1,
-                         ms_per_step=us / 1e3,
-                         tok_per_s=m / (us / 1e6), note=note,
-                         spec=str(numerics),
-                         plan=str(NumericsPlan.parse(numerics))))
+    def add(op, backend, us, note, numerics, blocks="-"):
+        rows.append(_row(op, shape, backend, us, note, numerics, blocks))
 
-    add("matmul_fwd", "float", _time(jax.jit(jnp.matmul), X, W), "ref",
-        NumericsSpec.parse("fp32"))
+    add("matmul_fwd", "float", _time(jax.jit(jnp.matmul), X, W, reps=50),
+        "ref", NumericsSpec.parse("fp32"))
+    # Machine-speed calibration row: compare_bench --normalize prefers
+    # the interpret-mode pallas-lut20 fwd row below and falls back to
+    # this compute-bound float matmul for JSONs that lack it (the
+    # paper-shape float row above is µs-scale dispatch noise, useless as
+    # a denominator).
+    C1 = rng.normal(size=(1024, 1024)).astype(np.float32)
+    rows.append(_row("calibration", "1024x1024x1024", "float",
+                     _time(jax.jit(jnp.matmul), C1, C1, reps=5),
+                     "machine-speed reference (compare_bench --normalize "
+                     "fallback denominator)",
+                     NumericsSpec.parse("fp32"), tokens=1024))
     for name, spec in [("lut20", DELTA_DEFAULT), ("bitshift", DELTA_BITSHIFT)]:
         eng = DeltaEngine(spec, LNS16)
-        # The resolved spec each row actually runs under: the forward
-        # emulate row times the pairwise-tree lns_matmul (the lns16-exact
-        # serving path), the sequential-MAC emulate rows are the training
-        # path, and the pallas rows pin interpret=on (this bench always
-        # runs the interpreter).
-        ns_fwd_emu = NumericsSpec(fmt=LNS16, delta_spec=spec,
-                                  quantize="params+acts",
-                                  compute_dtype="float32")
+        # The resolved spec each row actually runs under; both the
+        # emulate and pallas rows time the *sequential* MAC order — the
+        # training path — and are asserted bit-identical below.  The
+        # pallas rows pin interpret=on (this bench always runs the
+        # interpreter).
         ns_emu = NumericsSpec(fmt=LNS16, delta_spec=spec,
                               quantize="params+acts+grads",
                               compute_dtype="float32", backend="emulate")
         ns_pal = ns_emu.with_(backend="pallas", interpret="on")
         # -- forward: Z = X ⊞-MAC W ------------------------------------
-        emu = jax.jit(lambda a, b, e=eng: lns_matmul(a, b, e).code)
-        add("matmul_fwd", f"emulate-{name}", _time(emu, x, w),
-            "pairwise tree", ns_fwd_emu)
-        pal = lambda a, b, s=spec: lns_matmul_kernel(
-            a, b, fmt=LNS16, spec=s, block_m=32, block_n=32, block_k=98,
+        emu = jax.jit(
+            lambda a, c, e=eng: lns_matmul(a, c, e,
+                                           order="sequential").code)
+        pal = lambda a, c, s=spec: lns_matmul_kernel(
+            a, c, fmt=LNS16, spec=s, block_m=32, block_n=32, block_k=98,
             interpret=True).code
+        # emulate/pallas parity: same sequential-MAC codes, or the row
+        # timings are not comparing the same computation.
+        np.testing.assert_array_equal(_codes(emu(x, w)), _codes(pal(x, w)))
+        add("matmul_fwd", f"emulate-{name}", _time(emu, x, w),
+            "sequential MAC", ns_emu)
         add("matmul_fwd", f"pallas-{name}", _time(pal, x, w, reps=2),
-            "sequential MAC (interpret)", ns_pal)
+            "sequential MAC (interpret)", ns_pal, blocks="32x32x98")
         # -- backward: dX = dY ⊞ Wᵀ and dW = Xᵀ ⊞ dY --------------------
         be = LNSMatmulBackend(fmt=LNS16, spec=spec, backend="emulate")
-        emu_dx = jax.jit(lambda g, b, e=be: e.matmul_dx(g, b).code)
+        emu_dx = jax.jit(lambda g, c, e=be: e.matmul_dx(g, c).code)
         add("matmul_dx", f"emulate-{name}", _time(emu_dx, dy, w),
             "sequential MAC", ns_emu)
-        pal_dx = lambda g, b, s=spec: lns_matmul_dx_kernel(
-            g, b, fmt=LNS16, spec=s, block_m=32, block_k=98, block_n=50,
+        pal_dx = lambda g, c, s=spec: lns_matmul_dx_kernel(
+            g, c, fmt=LNS16, spec=s, block_m=32, block_k=98, block_n=50,
             interpret=True).code
         add("matmul_dx", f"pallas-{name}", _time(pal_dx, dy, w, reps=2),
-            "sequential MAC (interpret)", ns_pal)
+            "sequential MAC (interpret)", ns_pal, blocks="32x98x50")
         emu_dw = jax.jit(lambda a, g, e=be: e.matmul_dw(a, g).code)
         add("matmul_dw", f"emulate-{name}", _time(emu_dw, x, dy),
             "sequential MAC", ns_emu)
@@ -108,7 +165,7 @@ def records():
             a, g, fmt=LNS16, spec=s, block_k=98, block_n=50, block_m=32,
             interpret=True).code
         add("matmul_dw", f"pallas-{name}", _time(pal_dw, x, dy, reps=2),
-            "sequential MAC (interpret)", ns_pal)
+            "sequential MAC (interpret)", ns_pal, blocks="98x50x32")
 
     # -- mixed-format row: the lns12 hidden-layer path of a per-layer
     # NumericsPlan (narrower 6-fraction-bit Δ table, same kernels) -------
@@ -119,15 +176,161 @@ def records():
     ns12_pal = ns12_emu.with_(backend="pallas", interpret="on")
     be12 = LNSMatmulBackend(fmt=LNS12, spec=DELTA_DEFAULT,
                             backend="emulate")
-    emu12 = jax.jit(lambda a, b, e=be12: e.matmul(a, b).code)
+    emu12 = jax.jit(lambda a, c, e=be12: e.matmul(a, c).code)
     add("matmul_fwd", "emulate-lut20-lns12", _time(emu12, x12, w12),
         "sequential MAC, lns12 (mixed-plan hidden layer)", ns12_emu)
-    pal12 = lambda a, b: lns_matmul_kernel(
-        a, b, fmt=LNS12, spec=DELTA_DEFAULT, block_m=32, block_n=32,
+    pal12 = lambda a, c: lns_matmul_kernel(
+        a, c, fmt=LNS12, spec=DELTA_DEFAULT, block_m=32, block_n=32,
         block_k=98, interpret=True).code
     add("matmul_fwd", "pallas-lut20-lns12", _time(pal12, x12, w12, reps=2),
         "sequential MAC (interpret), lns12 (mixed-plan hidden layer)",
-        ns12_pal)
+        ns12_pal, blocks="32x32x98")
+    rows += _fused_records(rng, x, w, b, dy, shape)
+    return rows
+
+
+def _fused_records(rng, x, w, b, dy, shape):
+    """Fused-epilogue rows: flush-time fusion vs the separate-pass chain."""
+    from repro.core.activations import llrelu
+    from repro.core.arithmetic import bias_add
+    from repro.core.lns import _cached_engine
+
+    m = x.shape[0]
+    rows = []
+    ns_pal = NumericsSpec(
+        fmt=LNS16, delta_spec=DELTA_DEFAULT, quantize="params+acts+grads",
+        compute_dtype="float32", backend="pallas", interpret="on")
+
+    def add(op, backend, us, note, blocks):
+        rows.append(_row(op, shape, backend, us, note, ns_pal, blocks,
+                         tokens=m))
+
+    beta = beta_code(0.01, LNS16)
+    eng = _cached_engine(DELTA_DEFAULT, LNS16)
+    blocks = "32x32x98"
+    ep = FwdEpilogue(bias=True, llrelu_beta=beta)
+
+    # Both sides jitted whole, as the train step runs them: the unfused
+    # chain is one XLA program (kernel + fused-by-XLA elementwise passes),
+    # so the comparison isolates the flush fusion itself.
+    @jax.jit
+    def fwd_unfused(a, c, bb):
+        z = lns_matmul_kernel(a, c, fmt=LNS16, spec=DELTA_DEFAULT,
+                              block_m=32, block_n=32, block_k=98,
+                              interpret=True)
+        return llrelu(bias_add(z, bb, eng), beta, LNS16).code
+
+    @jax.jit
+    def fwd_fused(a, c, bb):
+        return lns_matmul_fused_kernel(
+            a, c, epilogue=ep, bias=bb, fmt=LNS16, spec=DELTA_DEFAULT,
+            block_m=32, block_n=32, block_k=98, interpret=True).code
+
+    np.testing.assert_array_equal(_codes(fwd_unfused(x, w, b)),
+                                  _codes(fwd_fused(x, w, b)))
+    add("matmul_fwd_epilogue", "pallas-unfused",
+        _time(fwd_unfused, x, w, b, reps=2),
+        "kernel + separate bias/llrelu passes", blocks)
+    add("matmul_fwd_epilogue", "pallas-fused",
+        _time(fwd_fused, x, w, b, reps=2),
+        "bias ⊞ + llrelu at accumulator flush", blocks)
+
+    # dW + momentum/weight-decay update, fused into the flush
+    sgd = LogSGDConfig(lr=0.01, weight_decay=0.001, momentum=0.9)
+    uep = UpdateEpilogue.from_sgd(sgd, LNS16)
+    w0 = encode(rng.normal(size=(x.shape[1], dy.shape[1]))
+                .astype(np.float32), LNS16)
+    m0 = zeros(w0.shape, LNS16)
+    dw_blocks = "98x50x32"
+
+    @jax.jit
+    def dw_unfused(a, g, ww, mm):
+        grad = lns_matmul_dw_kernel(a, g, fmt=LNS16, spec=DELTA_DEFAULT,
+                                    block_k=98, block_n=50, block_m=32,
+                                    interpret=True)
+        p, _ = apply_update({"w": ww}, {"w": grad}, {"w": mm}, sgd, eng)
+        return p["w"].code
+
+    @jax.jit
+    def dw_fused(a, g, ww, mm):
+        w_new, _ = lns_matmul_dw_update_kernel(
+            a, g, w=ww, m=mm, epilogue=uep, fmt=LNS16, spec=DELTA_DEFAULT,
+            block_k=98, block_n=50, block_m=32, interpret=True)
+        return w_new.code
+
+    np.testing.assert_array_equal(_codes(dw_unfused(x, dy, w0, m0)),
+                                  _codes(dw_fused(x, dy, w0, m0)))
+    add("matmul_dw_update", "pallas-unfused",
+        _time(dw_unfused, x, dy, w0, m0, reps=2),
+        "dW kernel + separate ⊞-momentum/decay update", dw_blocks)
+    add("matmul_dw_update", "pallas-fused",
+        _time(dw_fused, x, dy, w0, m0, reps=2),
+        "⊞-SGD update in the dW flush", dw_blocks)
+    return rows
+
+
+def _autotuned_blocks_note(interpret=True):
+    """Prime the autotuner for the paper-MLP layers; return its choices."""
+    picks = {}
+    picks["hidden"] = autotune.prime_matmul(M, K, N, fmt=LNS16,
+                                            spec=DELTA_DEFAULT,
+                                            interpret=interpret)
+    picks["out"] = autotune.prime_matmul(M, N, N_OUT, fmt=LNS16,
+                                         spec=DELTA_DEFAULT,
+                                         interpret=interpret)
+    return "auto:" + ";".join(
+        f"{layer}[" + ",".join(
+            f"{op}={r}x{c}x{ct}" for op, (r, c, ct) in ops.items()) + "]"
+        for layer, ops in picks.items())
+
+
+def _train_step_records(rng):
+    """End-to-end paper-MLP train-step rows (batch 64, 784-100-10).
+
+    ``unfused`` is the pre-fusion configuration: separate bias/llrelu/
+    update passes at the fixed default 32³ blocks.  ``fused`` is the
+    one-pass step with autotuner-chosen blocks (``blocks=auto``).
+    """
+    xb = rng.uniform(0, 1, size=(M, K)).astype(np.float32)
+    yb = rng.integers(0, N_OUT, size=(M,))
+    shape = f"{M}x{K}x{N}x{N_OUT}"
+    rows = []
+
+    def add(backend, us, note, numerics, blocks):
+        rows.append(_row("train_step", shape, backend, us, note, numerics,
+                         blocks))
+
+    unfused = "lns16-train-pallas,interpret=on"
+    auto_blocks = _autotuned_blocks_note()
+    fused = "lns16-train-pallas,interpret=on,blocks=auto"
+
+    # Interleaved best-of-reps: machine speed drifts on shared runners
+    # over the minutes a bench takes, so timing the two variants
+    # back-to-back *per rep* (instead of one whole row after the other)
+    # makes the fused-vs-unfused comparison drift-immune — each variant's
+    # min lands in the same fast epoch.
+    steps = {}
+    for name, cfg in (("pallas-unfused", MLPConfig(spec=unfused,
+                                                   fused=False)),
+                      ("pallas-fused", MLPConfig(spec=fused, fused=True))):
+        model = make_mlp("lns", cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        fn = (lambda mo, p: lambda: jax.block_until_ready(
+            mo.train_step(p, xb, yb)[0]["w1"].code))(model, params)
+        fn()  # compile + warm
+        steps[name] = [fn, float("inf")]
+    for _ in range(5):
+        for name, slot in steps.items():
+            t0 = time.perf_counter()
+            slot[0]()
+            slot[1] = min(slot[1], time.perf_counter() - t0)
+
+    add("pallas-unfused", steps["pallas-unfused"][1] * 1e6,
+        "pre-fusion step: separate epilogue passes, fixed blocks",
+        unfused, blocks="32x32x32")
+    add("pallas-fused", steps["pallas-fused"][1] * 1e6,
+        "fused epilogues + autotuned blocks (one pass per matmul)",
+        fused, blocks=auto_blocks)
     return rows
 
 
@@ -144,8 +347,18 @@ def main(out_path: str = "BENCH_kernels.json"):
     for r in rows:
         print(f"kernel/{r['op']}_{r['backend']}_{r['shape']},"
               f"{r['ms_per_step'] * 1e3:.1f},{r['note']}")
+    fused = {r["backend"]: r["ms_per_step"] for r in rows
+             if r["op"] == "train_step"}
+    if len(fused) == 2:
+        speedup = fused["pallas-unfused"] / fused["pallas-fused"]
+        print(f"[kernel_bench] train_step fused speedup: {speedup:.2f}x")
     print(f"[kernel_bench] wrote {len(rows)} rows to {out_path}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="output JSON path (default: BENCH_kernels.json)")
+    main(ap.parse_args().out)

@@ -21,12 +21,13 @@ Sub-modules:
 from .arithmetic import (bias_add, boxabs_max, boxdiv, boxdot, boxminus,
                          boxneg, boxplus, boxsum, boxsum_partials,
                          lns_affine, lns_matmul)
-from .activations import beta_code, llrelu, llrelu_grad
+from .activations import (beta_code, llrelu, llrelu_grad,
+                          llrelu_grad_from_sign)
 from .conversions import code_to_lns, lns_value_to_code
 from .delta import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, DELTA_SOFTMAX,
                     DeltaEngine, DeltaSpec, delta_minus_float,
                     delta_plus_float)
-from .formats import (FORMATS, FXP12, FXP16, LNS12, LNS16,
+from .formats import (FORMATS, FXP12, FXP16, LNS12, LNS16, LNS21,
                       FixedPointFormat, LNSFormat, required_log_width)
 from .initializers import (encode_init, he_sigma, log_density_normal,
                            log_normal_init)
@@ -36,9 +37,11 @@ from .lns import (MATMUL_BACKENDS, LNSArray, LNSMatmulBackend,
 from .numerics import POLICIES, NumericsPolicy, get_plan, get_policy
 from .plan import NumericsPlan, PlanRule
 from .qat import lns_dot_dispatch, lns_dot_exact, lns_quantize_ste
-from .spec import (ALIASES, INTERPRET_MODES, REDUCE_MODES, REDUCE_SCHEDULES,
-                   LNSRuntime, NumericsSpec, ReduceSpec)
-from .sgd import LogSGDConfig, apply_update, init_momentum
+from .spec import (ALIASES, BLOCK_MODES, INTERPRET_MODES, REDUCE_MODES,
+                   REDUCE_SCHEDULES, LNSRuntime, NumericsSpec, ReduceSpec,
+                   parse_blocks, resolve_blocks_arg)
+from .sgd import (LogSGDConfig, UpdateEpilogue, apply_update,
+                  apply_update_codes, init_momentum)
 from .softmax import ce_grad_init, ce_loss_readout, log_softmax_lns
 
 __all__ = [n for n in dir() if not n.startswith("_")]

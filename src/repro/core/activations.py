@@ -34,6 +34,15 @@ def llrelu_grad(a: LNSArray, beta: int, fmt: LNSFormat) -> LNSArray:
 
     Both are positive constants → sign = 0; code 0 (=log2 1) or β.
     """
-    code = jnp.where(a.sign == 1, np.int32(beta), np.int32(0))
-    code = jnp.broadcast_to(code, a.code.shape)
-    return LNSArray(code, jnp.zeros_like(a.sign))
+    return llrelu_grad_from_sign(a.sign, beta)
+
+
+def llrelu_grad_from_sign(sign, beta: int) -> LNSArray:
+    """:func:`llrelu_grad` from the pre-activation *sign plane* alone.
+
+    d llReLU/dz depends only on sign(z), so the fused forward kernel
+    (``kernels/lns_matmul``) emits just this plane (``emit_z_sign``) and
+    the backward pass never needs the pre-activation codes.
+    """
+    code = jnp.where(sign == 1, np.int32(beta), np.int32(0))
+    return LNSArray(code, jnp.zeros_like(sign, dtype=jnp.int8))

@@ -208,26 +208,53 @@ class LNSMatmulBackend:
     block_n: int = 128
     block_k: int = 128
     interpret: bool | None = None
+    blocks: str = "default"           # 'default' (fixed block_m/n/k) or
+                                      # 'auto' (autotuned per op + shape)
 
     def __post_init__(self):
         if self.backend not in MATMUL_BACKENDS:
             raise ValueError(
                 f"unknown matmul backend {self.backend!r}; "
                 f"expected one of {MATMUL_BACKENDS}")
+        if self.blocks not in ("default", "auto"):
+            raise ValueError(
+                f"unknown blocks mode {self.blocks!r}; expected 'default' "
+                f"or 'auto' (explicit MxNxK strings are resolved by "
+                f"core.spec.resolve_blocks_arg before construction)")
 
     def _interp(self) -> bool:
         if self.interpret is not None:
             return self.interpret
         return jax.default_backend() != "tpu"
 
+    def _op_blocks(self, op: str, r: int, c: int, ct: int):
+        """Effective (block_r, block_c, block_ct) for one kernel launch.
+
+        ``blocks='auto'`` consults the autotuner cache per (op, shape) —
+        measured entries when a prior eager tune/prime filled them, the
+        deterministic heuristic otherwise (block sizes never change
+        results, only speed).  ``'default'`` keeps the fixed per-op
+        mapping of this backend's block_m/n/k.
+        """
+        if self.blocks == "auto":
+            from ..kernels import autotune
+            return autotune.lookup(op, (r, c, ct), fmt=self.fmt,
+                                   spec=self.spec,
+                                   interpret=self._interp())
+        return {"fwd": (self.block_m, self.block_n, self.block_k),
+                "dx": (self.block_m, self.block_k, self.block_n),
+                "dw": (self.block_k, self.block_n, self.block_m),
+                "dw_partials": (self.block_k, self.block_n, 0)}[op]
+
     def matmul(self, x: "LNSArray", w: "LNSArray") -> "LNSArray":
         """Forward (M, K) ⊞-MAC (K, N) → (M, N), sequential over K."""
         if self.backend == "pallas":
             from ..kernels.lns_matmul import lns_matmul_kernel
+            bm, bn, bk = self._op_blocks("fwd", x.shape[0], w.shape[1],
+                                         x.shape[1])
             return lns_matmul_kernel(
-                x, w, fmt=self.fmt, spec=self.spec, block_m=self.block_m,
-                block_n=self.block_n, block_k=self.block_k,
-                interpret=self._interp())
+                x, w, fmt=self.fmt, spec=self.spec, block_m=bm,
+                block_n=bn, block_k=bk, interpret=self._interp())
         from .arithmetic import lns_matmul
         return lns_matmul(x, w, _cached_engine(self.spec, self.fmt),
                           order="sequential")
@@ -236,10 +263,11 @@ class LNSMatmulBackend:
         """Backward dX = dY (M, N) ⊞-MAC Wᵀ (N, K), sequential over N."""
         if self.backend == "pallas":
             from ..kernels.lns_matmul import lns_matmul_dx_kernel
+            bm, bk, bn = self._op_blocks("dx", dy.shape[0], w.shape[0],
+                                         dy.shape[1])
             return lns_matmul_dx_kernel(
-                dy, w, fmt=self.fmt, spec=self.spec, block_m=self.block_m,
-                block_k=self.block_k, block_n=self.block_n,
-                interpret=self._interp())
+                dy, w, fmt=self.fmt, spec=self.spec, block_m=bm,
+                block_k=bk, block_n=bn, interpret=self._interp())
         from .arithmetic import lns_matmul
         return lns_matmul(dy, w.T, _cached_engine(self.spec, self.fmt),
                           order="sequential")
@@ -248,10 +276,11 @@ class LNSMatmulBackend:
         """Backward dW = Xᵀ (K, M) ⊞-MAC dY (M, N), sequential over M."""
         if self.backend == "pallas":
             from ..kernels.lns_matmul import lns_matmul_dw_kernel
+            bk, bn, bm = self._op_blocks("dw", x.shape[1], dy.shape[1],
+                                         x.shape[0])
             return lns_matmul_dw_kernel(
-                x, dy, fmt=self.fmt, spec=self.spec, block_k=self.block_k,
-                block_n=self.block_n, block_m=self.block_m,
-                interpret=self._interp())
+                x, dy, fmt=self.fmt, spec=self.spec, block_k=bk,
+                block_n=bn, block_m=bm, interpret=self._interp())
         from .arithmetic import lns_matmul
         return lns_matmul(x.T, dy, _cached_engine(self.spec, self.fmt),
                           order="sequential")
@@ -268,9 +297,12 @@ class LNSMatmulBackend:
         """
         if self.backend == "pallas":
             from ..kernels.lns_matmul import lns_matmul_dw_partials_kernel
+            bk, bn, _ = self._op_blocks(
+                "dw_partials", x.shape[1], dy.shape[1],
+                x.shape[0] // max(1, num_segments))
             return lns_matmul_dw_partials_kernel(
                 x, dy, num_segments=num_segments, fmt=self.fmt,
-                spec=self.spec, block_k=self.block_k, block_n=self.block_n,
+                spec=self.spec, block_k=bk, block_n=bn,
                 interpret=self._interp())
         from .arithmetic import lns_matmul
         m = x.shape[0]
@@ -292,3 +324,97 @@ class LNSMatmulBackend:
         from .arithmetic import bias_add
         return bias_add(self.matmul(x, w), b,
                         _cached_engine(self.spec, self.fmt))
+
+    # -- fused epilogues ---------------------------------------------------
+    # Contract (ROADMAP §Fused epilogues): the epilogue runs at the
+    # kernel's accumulator flush and, under data parallelism, strictly
+    # *after* the canonical ⊞-combine of segment partials — so every
+    # fused path below is bit-identical to its unfused composition, on
+    # both backends.
+
+    def matmul_fused(self, x: "LNSArray", w: "LNSArray", *,
+                     bias: "LNSArray | None" = None,
+                     llrelu_beta: "int | None" = None,
+                     out_fmt: "LNSFormat | None" = None,
+                     emit_z_sign: bool = False):
+        """Forward ⊞-MAC with the flush-time epilogue, one pass.
+
+        Optional pieces, applied in order at accumulator flush: bias ⊞,
+        log-leaky-ReLU (``llrelu_beta``), and a requantize onto
+        ``out_fmt``'s code grid (a layer crossing a NumericsPlan format
+        boundary emits codes already in the target format).  Returns the
+        epilogued product, or ``(z, z_sign)`` with the post-bias
+        pre-activation sign plane when ``emit_z_sign`` (what
+        ``llrelu_grad`` consumes in backward).  On ``backend="emulate"``
+        this *is* the unfused composition; the Pallas kernel is
+        bit-exact against it.
+        """
+        if out_fmt is not None and out_fmt == self.fmt:
+            out_fmt = None
+        if self.backend == "pallas":
+            from ..kernels.lns_matmul import (FwdEpilogue,
+                                              lns_matmul_fused_kernel)
+            ep = FwdEpilogue(bias=bias is not None, llrelu_beta=llrelu_beta,
+                             dst_fmt=out_fmt, emit_z_sign=emit_z_sign)
+            bm, bn, bk = self._op_blocks("fwd", x.shape[0], w.shape[1],
+                                         x.shape[1])
+            return lns_matmul_fused_kernel(
+                x, w, epilogue=ep, bias=bias, fmt=self.fmt, spec=self.spec,
+                block_m=bm, block_n=bn, block_k=bk,
+                interpret=self._interp())
+        from .activations import llrelu
+        from .arithmetic import bias_add
+        eng = _cached_engine(self.spec, self.fmt)
+        z = self.matmul(x, w)
+        if bias is not None:
+            z = bias_add(z, bias, eng)
+        z_sign = z.sign
+        if llrelu_beta is not None:
+            z = llrelu(z, llrelu_beta, self.fmt)
+        if out_fmt is not None:
+            z = convert_format(z, self.fmt, out_fmt)
+        return (z, z_sign) if emit_z_sign else z
+
+    def matmul_dw_update(self, x: "LNSArray", dy: "LNSArray",
+                         w: "LNSArray", m: "LNSArray | None", epilogue):
+        """Backward-weight ⊞-MAC with the ⊞-SGD update fused at flush.
+
+        ``dW = Xᵀ ⊞-MAC dY`` is consumed by the update (``epilogue``: a
+        :class:`~repro.core.sgd.UpdateEpilogue`) against the resident
+        ``w``/``m`` planes in a single pass — the gradient never
+        round-trips through memory.  Returns ``(w_new, m_new)``
+        (``m_new is None`` without momentum).  Bit-identical to
+        ``matmul_dw`` + ``core.sgd.apply_update_codes``.
+        """
+        if self.backend == "pallas":
+            from ..kernels.lns_matmul import lns_matmul_dw_update_kernel
+            bk, bn, bm = self._op_blocks("dw", x.shape[1], dy.shape[1],
+                                         x.shape[0])
+            return lns_matmul_dw_update_kernel(
+                x, dy, w=w, m=m, epilogue=epilogue, fmt=self.fmt,
+                spec=self.spec, block_k=bk, block_n=bn, block_m=bm,
+                interpret=self._interp())
+        from .sgd import apply_update_codes
+        g = self.matmul_dw(x, dy)
+        return apply_update_codes(w, g, m, epilogue,
+                                  _cached_engine(self.spec, self.fmt))
+
+    def fused_update(self, w: "LNSArray", g: "LNSArray",
+                     m: "LNSArray | None", epilogue):
+        """One-pass elementwise fused ⊞-SGD update: ``(w, m, g) → (w', m')``.
+
+        The epilogue of gradients that are *not* a dW flush: bias ⊞-fold
+        gradients, and — under data parallelism — the already-⊞-combined
+        replicated gradients of the deterministic reduce
+        (``distributed/lns_dp.py`` applies it after the combine, keeping
+        the reduction-order contract untouched).  Bit-identical to
+        ``core.sgd.apply_update_codes``.
+        """
+        if self.backend == "pallas":
+            from ..kernels.lns_matmul import lns_fused_update_kernel
+            return lns_fused_update_kernel(
+                w, g, m=m, epilogue=epilogue, fmt=self.fmt, spec=self.spec,
+                interpret=self._interp())
+        from .sgd import apply_update_codes
+        return apply_update_codes(w, g, m, epilogue,
+                                  _cached_engine(self.spec, self.fmt))

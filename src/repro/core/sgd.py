@@ -5,12 +5,22 @@ Log domain:                   W ← W ⊟ (LR ⊡ G) ⊟ (LRλ ⊡ W)
 
 With momentum μ:              M ← (μ ⊡ M) ⊞ G ;  W ← W ⊟ (LR ⊡ M)
 All quantities stay in LNS fixed point end-to-end.
+
+:class:`UpdateEpilogue` is the same update pinned down to *integer scalar
+codes* on a format's grid — the static descriptor the fused Pallas kernels
+(``kernels/lns_matmul``) apply at accumulator flush, and what
+:func:`apply_update_codes` evaluates in pure jnp.  Because the codes are
+produced by the same :func:`~repro.core.lns.scalar` quantization
+:func:`apply_update` uses, the fused and unfused updates are bit-identical
+by construction.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from .arithmetic import boxdot, boxminus, boxplus
 from .delta import DeltaEngine
@@ -22,6 +32,81 @@ class LogSGDConfig:
     lr: float = 0.01
     weight_decay: float = 0.0
     momentum: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateEpilogue:
+    """The ⊞-SGD update as static integer scalar codes (one format's grid).
+
+    ``lr_code`` is the LNS code of the learning rate; ``momentum_code`` /
+    ``weight_decay_code`` are the codes of μ and lr·λ, or ``None`` when
+    the corresponding term is off.  All three scalars are positive (their
+    sign plane is 0), so the whole update is expressible as code adds +
+    ⊞ with flipped signs — exactly what a hardware MAC array applies when
+    draining its accumulator.  Frozen/hashable: usable as a static kernel
+    parameter.
+    """
+
+    lr_code: int
+    momentum_code: Optional[int] = None
+    weight_decay_code: Optional[int] = None
+
+    @classmethod
+    def from_sgd(cls, cfg: LogSGDConfig, fmt) -> "UpdateEpilogue":
+        """Quantize a :class:`LogSGDConfig` onto ``fmt``'s code grid.
+
+        Uses the same :func:`~repro.core.lns.scalar` quantization as
+        :func:`apply_update`, so the fused epilogue and the unfused
+        update see identical scalar codes.
+        """
+        if cfg.lr <= 0:
+            raise ValueError(f"fused ⊞-SGD needs lr > 0, got {cfg.lr}")
+        if cfg.momentum < 0 or cfg.weight_decay < 0:
+            raise ValueError(
+                f"momentum/weight_decay must be >= 0, got "
+                f"{cfg.momentum}/{cfg.weight_decay}")
+        return cls(
+            lr_code=int(scalar(cfg.lr, fmt).code),
+            momentum_code=(int(scalar(cfg.momentum, fmt).code)
+                           if cfg.momentum != 0.0 else None),
+            weight_decay_code=(
+                int(scalar(cfg.lr * cfg.weight_decay, fmt).code)
+                if cfg.weight_decay != 0.0 else None))
+
+    @property
+    def has_momentum(self) -> bool:
+        return self.momentum_code is not None
+
+
+def apply_update_codes(w: LNSArray, g: LNSArray, m: Optional[LNSArray],
+                       ep: UpdateEpilogue, eng: DeltaEngine):
+    """One-leaf ⊞-SGD update from an :class:`UpdateEpilogue`'s codes.
+
+    Pure-jnp evaluation of the fused kernels' flush epilogue — the oracle
+    the Pallas implementations are tested bit-exact against, and the
+    emulate-backend implementation of the fused update.  Bit-identical to
+    :func:`apply_update` when ``ep`` came from :meth:`UpdateEpilogue.from_sgd`
+    with the same config and format.  Returns ``(w_new, m_new)``
+    (``m_new is None`` when momentum is off).
+    """
+    fmt = eng.fmt
+
+    def sdot(code: int, t: LNSArray) -> LNSArray:
+        return boxdot(LNSArray(jnp.int32(code), jnp.int8(0)), t, fmt)
+
+    if ep.momentum_code is not None:
+        if m is None:
+            raise ValueError("UpdateEpilogue has momentum but no momentum "
+                             "state was passed")
+        m = boxplus(sdot(ep.momentum_code, m), g, eng)
+        g_eff = m
+    else:
+        m = None
+        g_eff = g
+    w = boxminus(w, sdot(ep.lr_code, g_eff), eng)
+    if ep.weight_decay_code is not None:
+        w = boxminus(w, sdot(ep.weight_decay_code, w), eng)
+    return w, m
 
 
 def init_momentum(params, cfg: LogSGDConfig, fmt):

@@ -2,7 +2,8 @@
 
 The paper's scheme is *one* arithmetic with several orthogonal axes —
 format (lns16/lns12), Δ-approximation spec, which tensors are quantized,
-matmul execution backend, interpret mode, and the data-parallel gradient
+matmul execution backend, interpret mode, kernel block sizes (fixed,
+explicit, or autotuned per op+shape), and the data-parallel gradient
 reduction semantics.  Historically each axis grew its own stringly-typed
 policy name (``lns16-train-pallas``, …) and its own loose config knob
 (``matmul_backend=``, ``reduce_mode=``, ``grad_segments=``) threaded
@@ -46,6 +47,42 @@ REDUCE_SCHEDULES = ("sequential", "tree")
 INTERPRET_MODES = ("auto", "on", "off")
 QUANTIZE_AXES = ("params", "acts", "grads")
 COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
+#: The ``blocks`` axis: "default" (caller-/runtime-chosen tile sizes),
+#: "auto" (per-(spec, op, shape) autotuner — kernels/autotune.py), or an
+#: explicit "MxNxK" (block_m × block_n × block_k).
+BLOCK_MODES = ("default", "auto", "<M>x<N>x<K>")
+
+
+def parse_blocks(text: str):
+    """Decode an explicit ``MxNxK`` blocks value → (block_m, block_n,
+    block_k); raises with the valid forms for anything else."""
+    parts = text.split("x")
+    if len(parts) == 3:
+        try:
+            bm, bn, bk = (int(p) for p in parts)
+            if bm > 0 and bn > 0 and bk > 0:
+                return bm, bn, bk
+        except ValueError:
+            pass
+    raise _bad_value("blocks", text, BLOCK_MODES)
+
+
+def resolve_blocks_arg(blocks: str, block_m: int, block_n: int,
+                       block_k: int):
+    """Fold a spec's ``blocks`` axis onto caller-supplied tile sizes.
+
+    Returns ``(block_m, block_n, block_k, mode)`` where ``mode`` is what
+    the :class:`~repro.core.lns.LNSMatmulBackend` stores: ``"auto"``
+    defers to the autotuner per op+shape at launch; an explicit ``MxNxK``
+    overrides the caller's sizes and ``"default"`` keeps them.  The one
+    decode point shared by ``LNSRuntime`` and the kernels' entry points.
+    """
+    if blocks == "auto":
+        return block_m, block_n, block_k, "auto"
+    if blocks != "default":
+        bm, bn, bk = parse_blocks(blocks)
+        return bm, bn, bk, "default"
+    return block_m, block_n, block_k, "default"
 
 #: Named Δ specs (the serializable vocabulary; arbitrary LUTs round-trip
 #: through the generic ``lut:<d_max>:<r>`` form).
@@ -112,6 +149,7 @@ class NumericsSpec:
     ``compute_dtype``       ``compute_dtype``        float32 | bfloat16 | float16
     ``backend``             ``backend``              emulate | pallas
     ``interpret``           ``interpret``            auto | on | off
+    ``blocks``              ``blocks``               default | auto | ``<M>x<N>x<K>``
     ``reduce.mode``         ``reduce.mode``          boxplus | float-psum
     ``reduce.grad_segments``  ``reduce.grad_segments``  int >= 0
     ``reduce.schedule``     ``reduce.schedule``      sequential | tree
@@ -127,6 +165,7 @@ class NumericsSpec:
     compute_dtype: str = "bfloat16"
     backend: str = "emulate"         # one of core.lns.MATMUL_BACKENDS
     interpret: str = "auto"          # one of INTERPRET_MODES
+    blocks: str = "default"          # one of BLOCK_MODES (kernel tiling)
     reduce: ReduceSpec = ReduceSpec()
 
     def __post_init__(self):
@@ -134,6 +173,8 @@ class NumericsSpec:
             raise _bad_value("backend", self.backend, MATMUL_BACKENDS)
         if self.interpret not in INTERPRET_MODES:
             raise _bad_value("interpret", self.interpret, INTERPRET_MODES)
+        if self.blocks not in ("default", "auto"):
+            parse_blocks(self.blocks)  # raises with the valid forms
         if self.compute_dtype not in COMPUTE_DTYPES:
             raise _bad_value("compute_dtype", self.compute_dtype,
                              COMPUTE_DTYPES)
@@ -241,6 +282,7 @@ class NumericsSpec:
             "compute_dtype": self.compute_dtype,
             "backend": self.backend,
             "interpret": self.interpret,
+            "blocks": self.blocks,
             "reduce.mode": self.reduce.mode,
             "reduce.grad_segments": str(self.reduce.grad_segments),
             "reduce.schedule": self.reduce.schedule,
@@ -332,8 +374,8 @@ def _fmt_from_str(s: str) -> Optional[LNSFormat]:
 
 
 _PARSE_KEYS = ("fmt", "delta", "quantize", "compute_dtype", "backend",
-               "interpret", "reduce.mode", "reduce.grad_segments",
-               "reduce.schedule")
+               "interpret", "blocks", "reduce.mode",
+               "reduce.grad_segments", "reduce.schedule")
 
 
 def override_from_kv(key: str, value: str):
@@ -439,14 +481,16 @@ def _alias_reverse() -> dict:
 
 
 def resolve_kernel_args(numerics, *, fmt=None, spec=None, backend=None,
-                        interpret=None, op: str = "kernel",
+                        interpret=None, blocks=None, op: str = "kernel",
                         layer: "str | None" = None):
     """Fill a kernel entry point's config pieces from a NumericsSpec.
 
     Shared by both kernels packages' dispatch (``lns_matmul_trainable``,
     ``lns_boxsum_kernel``): explicit arguments win over the spec; missing
-    fmt/Δ raise naming ``op``.  Returns ``(fmt, spec, backend,
-    interpret)`` — callers that have no backend axis ignore that slot.
+    fmt/Δ raise naming ``op``.  Returns ``(fmt, spec, backend, interpret,
+    blocks)`` — callers that have no backend/blocks axis ignore those
+    slots (``blocks`` is the spec's tiling axis string: "default",
+    "auto", or explicit "MxNxK"; see :func:`resolve_blocks_arg`).
 
     ``numerics`` may also be a :class:`~repro.core.plan.NumericsPlan` (or
     plan string with per-layer rules); ``layer`` selects which layer
@@ -461,11 +505,13 @@ def resolve_kernel_args(numerics, *, fmt=None, spec=None, backend=None,
         spec = spec if spec is not None else ns.delta_spec
         backend = backend if backend is not None else ns.backend
         interpret = interpret if interpret is not None else ns.interpret_flag
+        blocks = blocks if blocks is not None else ns.blocks
     if fmt is None or spec is None:
         raise ValueError(
             f"{op} needs fmt + spec (pass them explicitly or via "
             f"numerics=<NumericsSpec/spec string> with fmt and delta set)")
-    return fmt, spec, backend, interpret
+    return fmt, spec, backend, interpret, \
+        (blocks if blocks is not None else "default")
 
 
 # ------------------------------------------------------------------------
@@ -508,10 +554,15 @@ class LNSRuntime:
             raise ValueError(
                 f"spec {str(s)!r} has no ⊞-MAC path (needs fmt + delta); "
                 f"set e.g. fmt=lns16,delta=lut20")
+        # The spec's blocks axis wins over this runtime's tile sizes: an
+        # explicit "MxNxK" pins them, "auto" defers to the autotuner per
+        # op+shape at launch (kernels/autotune.py).
+        bm, bn, bk, mode = resolve_blocks_arg(
+            s.blocks, self.block_m, self.block_n, self.block_k)
         return LNSMatmulBackend(
             fmt=s.fmt, spec=s.delta_spec, backend=s.backend,
-            block_m=self.block_m, block_n=self.block_n,
-            block_k=self.block_k, interpret=s.interpret_flag)
+            block_m=bm, block_n=bn, block_k=bk, blocks=mode,
+            interpret=s.interpret_flag)
 
     @functools.cached_property
     def delta_engine(self):

@@ -156,6 +156,14 @@ class LNSDataParallelMLP:
     With ``cfg.momentum > 0`` the step threads a replicated ⊞-momentum
     pytree: the momentum update runs *after* the deterministic reduce on
     the already-replicated gradients, so it inherits the invariance.
+
+    With ``cfg.fused`` (default) the parameter update runs through the
+    one-pass fused-update kernel (``LNSMatmulBackend.fused_update`` via
+    ``LNSMLP.apply_updates``) — the fused epilogue applies strictly
+    *after* the canonical ⊞-combine, on the replicated gradients, so the
+    reduction-order contract (and the 1/2/4-device bit-identical weight
+    codes) is untouched; the kernel itself is bit-identical to the
+    unfused ``apply_update`` composition.
     """
 
     def __init__(self, cfg, dp: DPConfig):
@@ -246,6 +254,7 @@ def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
                                       steps: int = 3, batch: int = 8,
                                       numerics=None,
                                       momentum: float = 0.0,
+                                      fused: bool = True,
                                       n_in: int = 12, n_hidden: int = 9,
                                       n_out: int = 4,
                                       grad_segments=None,
@@ -258,7 +267,9 @@ def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
     :class:`~repro.core.plan.NumericsPlan` string with per-layer rules
     (``"lns16-train-pallas,reduce.grad_segments=4;hidden=fmt:lns12"``);
     its ``reduce.grad_segments`` fixes the canonical segmentation
-    (default 4).  The loose ``grad_segments=`` / ``matmul_backend=`` /
+    (default 4).  ``fused`` toggles the fused post-combine update kernel
+    (default on, matching ``MLPConfig.fused``); invariance must hold
+    either way.  The loose ``grad_segments=`` / ``matmul_backend=`` /
     ``reduce_mode=`` keywords are the deprecated pre-spec spelling and
     fold into the descriptor with a ``DeprecationWarning``.
 
@@ -295,7 +306,7 @@ def run_device_count_invariance_check(device_counts=(1, 2, 4), *,
     # plan re-derives the canonical segmentation from ``plan``.
     cfg = MLPConfig(n_in=n_in, n_hidden=n_hidden, n_out=n_out,
                     spec=plan.with_(**{"reduce.grad_segments": 0}),
-                    momentum=momentum, matmul_block=8)
+                    momentum=momentum, fused=fused, matmul_block=8)
 
     inner = LNSMLP(cfg)
     ref_params = inner.init(jax.random.PRNGKey(seed))

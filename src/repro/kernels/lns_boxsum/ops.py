@@ -22,7 +22,7 @@ def _call(codes, signs, fmt, spec, block_m, block_k, interpret):
 def lns_boxsum_kernel(x: LNSArray, *, fmt: LNSFormat | None = None,
                       spec: DeltaSpec | None = None,
                       block_m: int = 128, block_k: int = 128,
-                      interpret: bool | None = None,
+                      interpret: bool | None = None, blocks: str = "default",
                       numerics=None, layer: str | None = None) -> LNSArray:
     """⊞-reduce an (M, K) LNSArray over axis 1 (the softmax Σ⊞).
 
@@ -33,11 +33,28 @@ def lns_boxsum_kernel(x: LNSArray, *, fmt: LNSFormat | None = None,
     spec applies (default: the plan's default spec); explicit pieces win.
     ``interpret`` defaults to ``True`` (CPU validation) when neither
     supplies it.
+
+    ``blocks`` is the spec's tiling axis: ``"auto"`` resolves
+    (block_m, block_k) through the autotuner cache per shape
+    (``kernels/autotune.py``, op ``"boxsum"``); an explicit ``"MxNxK"``
+    pins block_m×block_k from its M/K slots; ``"default"`` keeps the
+    keyword tile sizes.  A ``numerics`` spec's own ``blocks`` axis is
+    honored the same way.
     """
-    from ...core.spec import resolve_kernel_args
-    fmt, spec, _, interpret = resolve_kernel_args(
+    from ...core.spec import resolve_blocks_arg, resolve_kernel_args
+    fmt, spec, _, interpret, spec_blocks = resolve_kernel_args(
         numerics, fmt=fmt, spec=spec, interpret=interpret,
+        blocks=(None if blocks == "default" else blocks),
         op="lns_boxsum_kernel", layer=layer)
+    interpret = True if interpret is None else interpret
+    if spec_blocks == "auto":
+        from .. import autotune
+        block_m, _, block_k = autotune.lookup(
+            "boxsum", (x.shape[0], 1, x.shape[1]), fmt=fmt, spec=spec,
+            interpret=interpret)
+    else:
+        block_m, _, block_k, _ = resolve_blocks_arg(
+            spec_blocks, block_m, 1, block_k)
     code, sign = _call(x.code, x.sign, fmt, spec, block_m, block_k,
-                       True if interpret is None else interpret)
+                       interpret)
     return LNSArray(code, sign.astype("int8"))

@@ -8,12 +8,19 @@ contraction dimension is walked *sequentially* — the innermost grid axis
 revisits the output tile, carrying the accumulator in VMEM scratch — which
 reproduces the paper's sequential MAC ordering bit-exactly (see ref.py).
 
-Three entry points share one kernel body (``_mac_kernel``), parameterized
-only by which axis of each operand is contracted:
+The entry points share one kernel body (``_mac_kernel``), parameterized
+by which axis of each operand is contracted and by an optional
+*flush-time epilogue*:
 
 * ``lns_matmul_pallas``     Z[m,n]  = ⊞_k X[m,k] ⊡ W[k,n]   (forward, eq. 10)
 * ``lns_matmul_dx_pallas``  dX[m,k] = ⊞_n dY[m,n] ⊡ W[k,n]  (= dY ⊞ Wᵀ)
 * ``lns_matmul_dw_pallas``  dW[k,n] = ⊞_m X[m,k] ⊡ dY[m,n]  (= Xᵀ ⊞ dY)
+* ``lns_matmul_fused_pallas``      forward with bias ⊞ / llrelu /
+  requantize applied at accumulator flush (:class:`FwdEpilogue`)
+* ``lns_matmul_dw_update_pallas``  dW with the ⊞-SGD update
+  (momentum + weight decay) at flush — outputs are the updated weights
+  (:class:`~repro.core.sgd.UpdateEpilogue`; see also ``update.py`` for
+  the standalone elementwise variant the DP reduce applies post-combine)
 
 The backward kernels realize the transposed MACs of eqs. (10)-(14) without
 materializing a transpose: the BlockSpec index maps read W / X blocks in
@@ -35,7 +42,9 @@ lanes buy nothing on the VPU and complicate tiling.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +54,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ...core.delta import DeltaEngine, DeltaSpec
 from ...core.formats import LNSFormat
+from ...core.sgd import UpdateEpilogue
 
 
 def _delta_from_tables(d, tab_plus, tab_minus, same_sign, *, r_code, n_tab,
@@ -113,12 +123,122 @@ def _make_delta_fn(tabp_ref, tabm_ref, *, fmt: LNSFormat, spec: DeltaSpec,
         n_tab=spec.table_size, underflow=np.int32(underflow))
 
 
-def _mac_kernel(tabp_ref, tabm_ref, ac_ref, as_ref, bc_ref, bs_ref,
-                zc_ref, zs_ref, accc_ref, accs_ref, *,
-                fmt: LNSFormat, spec: DeltaSpec, n_ct: int, b_ct: int,
+# ------------------------------------------------------------------------
+# Flush-time epilogues
+# ------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FwdEpilogue:
+    """Flush-time epilogue of the forward ⊞-MAC kernel.
+
+    Applied to the final accumulator tile in the order the unfused train
+    step applies the same ops as separate XLA passes:
+
+    1. ``bias=True``           — ⊞-add a broadcast (N,) bias row;
+    2. ``llrelu_beta=β``       — log-leaky-ReLU (code += β on negatives,
+                                 underflow flush; ``core.activations.llrelu``);
+    3. ``dst_fmt=<LNSFormat>`` — requantize onto another format's code grid
+                                 (the barrel shift of
+                                 ``core.lns.convert_format``), so a layer
+                                 whose output crosses a NumericsPlan format
+                                 boundary emits codes already in the target
+                                 format — no separate conversion pass.
+
+    ``emit_z_sign=True`` adds one extra output plane carrying the
+    *post-bias, pre-activation* sign — the only piece of z the backward
+    pass needs (``llrelu_grad`` depends on sign(z) alone).
+
+    Frozen/hashable: usable as a static kernel parameter.
+    """
+
+    bias: bool = False
+    llrelu_beta: Optional[int] = None
+    dst_fmt: Optional[LNSFormat] = None
+    emit_z_sign: bool = False
+
+    @property
+    def is_noop(self) -> bool:
+        return (not self.bias and self.llrelu_beta is None
+                and self.dst_fmt is None and not self.emit_z_sign)
+
+
+def _apply_fwd_epilogue(code, sign, ep: FwdEpilogue, bias_c, bias_s,
+                        delta_fn, fmt: LNSFormat):
+    """bias ⊞ → llrelu → requantize on raw code/sign planes.
+
+    Each step mirrors its unfused counterpart (``core.arithmetic.bias_add``,
+    ``core.activations.llrelu``, ``core.lns.convert_format``) op-for-op, so
+    the fused flush is bit-identical to the separate-pass composition.
+    Returns ``(code, sign, z_sign)`` with ``z_sign`` the post-bias sign.
+    """
+    zero = np.int32(fmt.zero_code)
+    if ep.bias:
+        code, sign = _boxplus_codes(code, sign, bias_c, bias_s, delta_fn,
+                                    fmt)
+    z_sign = sign
+    if ep.llrelu_beta is not None:
+        shifted = code + np.int32(ep.llrelu_beta)
+        shifted = jnp.where(shifted < fmt.min_nonzero_code, zero, shifted)
+        act = jnp.where(sign == 1, shifted, code)
+        code = jnp.where(code == zero, zero, act)
+    if ep.dst_fmt is not None and ep.dst_fmt != fmt:
+        dst = ep.dst_fmt
+        shift = dst.qf - fmt.qf
+        if shift >= 0:
+            conv = code << shift
+        else:
+            conv = (code + (1 << (-shift - 1))) >> (-shift)
+        under = conv < dst.min_nonzero_code
+        conv = jnp.clip(conv, dst.min_nonzero_code, dst.code_max)
+        is_zero = (code == zero) | under
+        code = jnp.where(is_zero, np.int32(dst.zero_code), conv)
+        sign = jnp.where(is_zero, 0, sign)
+    return code, sign, z_sign
+
+
+def _scalar_boxdot_codes(scode: int, t_c, t_s, fmt: LNSFormat):
+    """⊡ by a positive scalar code — mirrors ``core.arithmetic.boxdot``.
+
+    The scalar is a nonzero positive constant (``scalar()`` never yields
+    the zero sentinel), so only the tensor operand's zeros propagate.
+    """
+    zero = np.int32(fmt.zero_code)
+    zt = t_c == zero
+    code = jnp.minimum(t_c + np.int32(scode), fmt.code_max)
+    code = jnp.where(code < fmt.min_nonzero_code, zero, code)
+    code = jnp.where(zt, zero, code)
+    sign = jnp.where(zt, 0, t_s)
+    return code, sign
+
+
+def _apply_update_epilogue(w_c, w_s, m_c, m_s, g_c, g_s,
+                           ep: UpdateEpilogue, delta_fn, fmt: LNSFormat):
+    """⊞-SGD at flush — mirrors ``core.sgd.apply_update_codes`` op-for-op.
+
+    ``g`` is the just-flushed gradient accumulator; ``w``/``m`` are the
+    resident weight/momentum tiles.  Returns the updated
+    ``(w_c, w_s, m_c, m_s)`` planes (momentum planes pass through
+    untouched when the epilogue has no momentum term).
+    """
+    if ep.momentum_code is not None:
+        mm_c, mm_s = _scalar_boxdot_codes(ep.momentum_code, m_c, m_s, fmt)
+        m_c, m_s = _boxplus_codes(mm_c, mm_s, g_c, g_s, delta_fn, fmt)
+        g_c, g_s = m_c, m_s
+    lg_c, lg_s = _scalar_boxdot_codes(ep.lr_code, g_c, g_s, fmt)
+    w_c, w_s = _boxplus_codes(w_c, w_s, lg_c, lg_s ^ 1, delta_fn, fmt)
+    if ep.weight_decay_code is not None:
+        wd_c, wd_s = _scalar_boxdot_codes(ep.weight_decay_code, w_c, w_s,
+                                          fmt)
+        w_c, w_s = _boxplus_codes(w_c, w_s, wd_c, wd_s ^ 1, delta_fn, fmt)
+    return w_c, w_s, m_c, m_s
+
+
+def _mac_kernel(*refs, fmt: LNSFormat, spec: DeltaSpec, n_ct: int, b_ct: int,
                 r_code: int, underflow: int,
                 a_contract_axis: int, b_contract_axis: int,
-                partial_flush: bool = False):
+                partial_flush: bool = False,
+                fwd_epilogue: Optional[FwdEpilogue] = None,
+                update_epilogue: Optional[UpdateEpilogue] = None):
     """Generic sequential ⊞-MAC over one contraction tile.
 
     The output tile is the outer product of A's non-contracted axis (rows)
@@ -131,7 +251,50 @@ def _mac_kernel(tabp_ref, tabm_ref, ac_ref, as_ref, bc_ref, bs_ref,
     carrying across blocks — the per-segment partial codes that the
     data-parallel deterministic ⊞-allreduce combines across devices
     (``distributed/lns_reduce.py``).
+
+    The epilogues run **at accumulator flush only** (the contract of the
+    fused subsystem, see ROADMAP §Fused epilogues): ``fwd_epilogue``
+    applies bias ⊞ / llrelu / requantize to the final forward accumulator;
+    ``update_epilogue`` turns the dW flush into the ⊞-SGD update — the
+    outputs become the *updated* weight (+ momentum) codes and the raw dW
+    never round-trips through memory.  Both are mutually exclusive with
+    ``partial_flush`` (segment partials feed the DP ⊞-combine first; their
+    epilogue is the standalone fused-update kernel).
+
+    The ref layout (built by ``_launch_mac``) is:
+    ``tab+, tab-, A, B, [bias], [w], [m], out, [z_sign], [m_out], acc``
+    with each logical operand a (code, sign) pair of refs.
     """
+    refs = list(refs)
+    tabp_ref, tabm_ref, ac_ref, as_ref, bc_ref, bs_ref = refs[:6]
+    pos = 6
+    has_bias = fwd_epilogue is not None and fwd_epilogue.bias
+    emit_z_sign = fwd_epilogue is not None and fwd_epilogue.emit_z_sign
+    has_update = update_epilogue is not None
+    has_mom = has_update and update_epilogue.momentum_code is not None
+    biasc_ref = biass_ref = None
+    if has_bias:
+        biasc_ref, biass_ref = refs[pos:pos + 2]
+        pos += 2
+    wc_ref = ws_ref = mc_ref = ms_ref = None
+    if has_update:
+        wc_ref, ws_ref = refs[pos:pos + 2]
+        pos += 2
+        if has_mom:
+            mc_ref, ms_ref = refs[pos:pos + 2]
+            pos += 2
+    zc_ref, zs_ref = refs[pos:pos + 2]
+    pos += 2
+    zsign_ref = None
+    if emit_z_sign:
+        zsign_ref = refs[pos]
+        pos += 1
+    omc_ref = oms_ref = None
+    if has_mom:
+        omc_ref, oms_ref = refs[pos:pos + 2]
+        pos += 2
+    accc_ref, accs_ref = refs[pos:pos + 2]
+
     ct_step = pl.program_id(2)
 
     if partial_flush:
@@ -184,8 +347,25 @@ def _mac_kernel(tabp_ref, tabm_ref, ac_ref, as_ref, bc_ref, bs_ref,
     else:
         @pl.when(ct_step == n_ct - 1)
         def _flush():
-            zc_ref[...] = acc_c
-            zs_ref[...] = acc_s
+            out_c, out_s = acc_c, acc_s
+            if fwd_epilogue is not None:
+                out_c, out_s, z_sign = _apply_fwd_epilogue(
+                    out_c, out_s, fwd_epilogue,
+                    biasc_ref[...] if has_bias else None,
+                    biass_ref[...] if has_bias else None, delta, fmt)
+                if emit_z_sign:
+                    zsign_ref[...] = z_sign
+            if has_update:
+                out_c, out_s, m_c, m_s = _apply_update_epilogue(
+                    wc_ref[...], ws_ref[...],
+                    mc_ref[...] if has_mom else None,
+                    ms_ref[...] if has_mom else None,
+                    out_c, out_s, update_epilogue, delta, fmt)
+                if has_mom:
+                    omc_ref[...] = m_c
+                    oms_ref[...] = m_s
+            zc_ref[...] = out_c
+            zs_ref[...] = out_s
 
 
 def _pad2(code, sign, pad_r, pad_c, zero):
@@ -198,7 +378,11 @@ def _pad2(code, sign, pad_r, pad_c, zero):
 def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
                 spec: DeltaSpec, a_contract_axis: int, b_contract_axis: int,
                 block_r: int, block_c: int, block_ct: int, interpret: bool,
-                partial_flush: bool = False):
+                partial_flush: bool = False,
+                fwd_epilogue: Optional[FwdEpilogue] = None,
+                bias_code=None, bias_sign=None,
+                update_epilogue: Optional[UpdateEpilogue] = None,
+                w_code=None, w_sign=None, m_code=None, m_sign=None):
     """Shared pallas_call launcher for the three ⊞-MAC kernels.
 
     ``a``'s non-contracted axis produces output rows (R), ``b``'s produces
@@ -209,7 +393,21 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
     With ``partial_flush=True`` the contraction is *not* carried across CT
     blocks: the call returns ``(n_ct, R, C)`` per-segment partials, one slot
     per contraction block of ``block_ct`` rows (see ``_mac_kernel``).
+
+    ``fwd_epilogue`` (with an optional (C,) ``bias_code``/``bias_sign``)
+    and ``update_epilogue`` (with (R, C) ``w_*`` and optional ``m_*``
+    planes) select the flush-time epilogue; outputs grow accordingly
+    (z_sign plane / updated-momentum planes) and the return is a tuple of
+    all cropped output planes in kernel order.
     """
+    if partial_flush and (fwd_epilogue is not None
+                          or update_epilogue is not None):
+        raise ValueError(
+            "flush epilogues do not compose with partial_flush: segment "
+            "partials feed the DP ⊞-combine first; apply the fused update "
+            "after the combine (kernels/lns_matmul/update.py)")
+    if fwd_epilogue is not None and update_epilogue is not None:
+        raise ValueError("at most one flush epilogue per kernel launch")
     a_r_axis = 1 - a_contract_axis
     b_c_axis = 1 - b_contract_axis
     r, ct = a_code.shape[a_r_axis], a_code.shape[a_contract_axis]
@@ -254,9 +452,38 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
         _mac_kernel, fmt=fmt, spec=spec, n_ct=grid[2], b_ct=block_ct,
         r_code=r_code, underflow=underflow,
         a_contract_axis=a_contract_axis, b_contract_axis=b_contract_axis,
-        partial_flush=partial_flush)
+        partial_flush=partial_flush, fwd_epilogue=fwd_epilogue,
+        update_epilogue=update_epilogue)
 
     tab_spec = pl.BlockSpec(tabp.shape, lambda i, j, s: (0,))
+    out_block = pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j))
+
+    extra_in, extra_in_specs = [], []
+    if fwd_epilogue is not None and fwd_epilogue.bias:
+        if bias_code is None or bias_sign is None:
+            raise ValueError("FwdEpilogue(bias=True) needs bias_code/"
+                             "bias_sign")
+        bias_code = jnp.pad(bias_code.reshape(1, -1), ((0, 0), (0, pad_c)),
+                            constant_values=zc)
+        bias_sign = jnp.pad(bias_sign.reshape(1, -1), ((0, 0), (0, pad_c)))
+        bias_spec = pl.BlockSpec((1, block_c), lambda i, j, s: (0, j))
+        extra_in += [bias_code, bias_sign]
+        extra_in_specs += [bias_spec, bias_spec]
+    if update_epilogue is not None:
+        if w_code is None or w_sign is None:
+            raise ValueError("an UpdateEpilogue needs the resident weight "
+                             "planes (w_code/w_sign)")
+        w_code, w_sign = _pad2(w_code, w_sign, pad_r, pad_c, zc)
+        extra_in += [w_code, w_sign]
+        extra_in_specs += [out_block, out_block]
+        if update_epilogue.momentum_code is not None:
+            if m_code is None or m_sign is None:
+                raise ValueError("UpdateEpilogue has momentum but no "
+                                 "momentum planes (m_code/m_sign)")
+            m_code, m_sign = _pad2(m_code, m_sign, pad_r, pad_c, zc)
+            extra_in += [m_code, m_sign]
+            extra_in_specs += [out_block, out_block]
+
     if partial_flush:
         out_shape = [
             jax.ShapeDtypeStruct((grid[2], rp, cp), jnp.int32),
@@ -267,15 +494,15 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
             pl.BlockSpec((1, block_r, block_c), lambda i, j, s: (s, i, j)),
         ]
     else:
-        out_shape = [
-            jax.ShapeDtypeStruct((rp, cp), jnp.int32),
-            jax.ShapeDtypeStruct((rp, cp), jnp.int32),
-        ]
-        out_specs = [
-            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
-            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
-        ]
-    zcodes, zsigns = pl.pallas_call(
+        n_extra_out = (
+            (1 if fwd_epilogue is not None and fwd_epilogue.emit_z_sign
+             else 0)
+            + (2 if update_epilogue is not None
+               and update_epilogue.momentum_code is not None else 0))
+        out_shape = [jax.ShapeDtypeStruct((rp, cp), jnp.int32)
+                     for _ in range(2 + n_extra_out)]
+        out_specs = [out_block for _ in range(2 + n_extra_out)]
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -284,7 +511,7 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
             pl.BlockSpec(a_block, a_index),
             pl.BlockSpec(b_block, b_index),
             pl.BlockSpec(b_block, b_index),
-        ],
+        ] + extra_in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
@@ -292,10 +519,10 @@ def _launch_mac(a_code, a_sign, b_code, b_sign, *, fmt: LNSFormat,
             pltpu.VMEM((block_r, block_c), jnp.int32),
         ],
         interpret=interpret,
-    )(tabp, tabm, a_code, a_sign, b_code, b_sign)
+    )(tabp, tabm, a_code, a_sign, b_code, b_sign, *extra_in)
     if partial_flush:
-        return zcodes[:, :r, :c], zsigns[:, :r, :c]
-    return zcodes[:r, :c], zsigns[:r, :c]
+        return tuple(o[:, :r, :c] for o in outs)
+    return tuple(o[:r, :c] for o in outs)
 
 
 def lns_matmul_pallas(x_code, x_sign, w_code, w_sign, *,
@@ -367,3 +594,49 @@ def lns_matmul_dw_partials_pallas(x_code, x_sign, dy_code, dy_sign, *,
                        block_r=block_k, block_c=block_n,
                        block_ct=m // num_segments, interpret=interpret,
                        partial_flush=True)
+
+
+def lns_matmul_fused_pallas(x_code, x_sign, w_code, w_sign, *,
+                            fmt: LNSFormat, spec: DeltaSpec,
+                            epilogue: FwdEpilogue,
+                            bias_code=None, bias_sign=None,
+                            block_m: int = 128, block_n: int = 128,
+                            block_k: int = 128, interpret: bool = True):
+    """Forward ⊞-MAC with the flush-time epilogue (bias ⊞ / llrelu /
+    requantize) applied to the final accumulator — one pass instead of
+    matmul + three separate elementwise passes.
+
+    Returns ``(z_code, z_sign)``, plus a trailing ``z_sign`` plane (the
+    post-bias pre-activation sign) when ``epilogue.emit_z_sign``.  With
+    ``epilogue.dst_fmt`` set the output codes are already on the target
+    format's grid.  Bit-exact against ``ref.lns_matmul_fused_ref``, the
+    unfused composition.
+    """
+    return _launch_mac(x_code, x_sign, w_code, w_sign, fmt=fmt, spec=spec,
+                       a_contract_axis=1, b_contract_axis=0,
+                       block_r=block_m, block_c=block_n, block_ct=block_k,
+                       interpret=interpret, fwd_epilogue=epilogue,
+                       bias_code=bias_code, bias_sign=bias_sign)
+
+
+def lns_matmul_dw_update_pallas(x_code, x_sign, dy_code, dy_sign, *,
+                                w_code, w_sign, epilogue: UpdateEpilogue,
+                                fmt: LNSFormat, spec: DeltaSpec,
+                                m_code=None, m_sign=None,
+                                block_k: int = 128, block_n: int = 128,
+                                block_m: int = 128, interpret: bool = True):
+    """Backward-weight ⊞-MAC with the fused ⊞-SGD update at flush.
+
+    Computes ``dW = Xᵀ ⊞-MAC dY`` and, at the final accumulator flush,
+    applies the paper's log-domain SGD (⊞-momentum + weight decay, per
+    ``epilogue``) against the resident ``w``/``m`` tiles: the outputs are
+    the *updated* weight codes (+ updated momentum planes when the
+    epilogue has momentum) — the gradient never round-trips through
+    memory.  Bit-exact against ``matmul_dw`` + ``apply_update_codes``.
+    """
+    return _launch_mac(x_code, x_sign, dy_code, dy_sign, fmt=fmt, spec=spec,
+                       a_contract_axis=0, b_contract_axis=0,
+                       block_r=block_k, block_c=block_n, block_ct=block_m,
+                       interpret=interpret, update_epilogue=epilogue,
+                       w_code=w_code, w_sign=w_sign,
+                       m_code=m_code, m_sign=m_sign)

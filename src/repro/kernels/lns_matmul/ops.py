@@ -16,8 +16,12 @@ import jax
 from ...core.delta import DeltaSpec
 from ...core.formats import LNSFormat
 from ...core.lns import LNSArray, LNSMatmulBackend, decode, encode
-from .lns_matmul import (lns_matmul_dw_pallas, lns_matmul_dw_partials_pallas,
-                         lns_matmul_dx_pallas, lns_matmul_pallas)
+from ...core.sgd import UpdateEpilogue
+from .lns_matmul import (FwdEpilogue, lns_matmul_dw_pallas,
+                         lns_matmul_dw_partials_pallas,
+                         lns_matmul_dw_update_pallas, lns_matmul_dx_pallas,
+                         lns_matmul_fused_pallas, lns_matmul_pallas)
+from .update import lns_fused_update_pallas
 
 
 @partial(jax.jit, static_argnames=("kind", "fmt", "spec", "block_r",
@@ -99,6 +103,128 @@ def lns_matmul_dw_partials_kernel(x: LNSArray, dy: LNSArray, *,
 
 
 # ------------------------------------------------------------------------
+# Fused-epilogue entry points (flush-time bias/llrelu/requantize + ⊞-SGD)
+# ------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("fmt", "spec", "epilogue", "block_m",
+                                   "block_n", "block_k", "interpret"))
+def _call_fused_fwd(x_code, x_sign, w_code, w_sign, bias_code, bias_sign,
+                    fmt, spec, epilogue, block_m, block_n, block_k,
+                    interpret):
+    return lns_matmul_fused_pallas(
+        x_code, x_sign.astype("int32"), w_code, w_sign.astype("int32"),
+        fmt=fmt, spec=spec, epilogue=epilogue, bias_code=bias_code,
+        bias_sign=(None if bias_sign is None else bias_sign.astype("int32")),
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+
+
+def lns_matmul_fused_kernel(x: LNSArray, w: LNSArray, *,
+                            epilogue: FwdEpilogue,
+                            bias: "LNSArray | None" = None,
+                            fmt: LNSFormat, spec: DeltaSpec,
+                            block_m: int = 128, block_n: int = 128,
+                            block_k: int = 128, interpret: bool = True):
+    """Forward ⊞-MAC with the flush-time epilogue — one kernel pass.
+
+    Returns the epilogued product (in ``epilogue.dst_fmt`` when set), or
+    ``(z, z_sign)`` with the post-bias pre-activation sign plane when
+    ``epilogue.emit_z_sign`` (what ``llrelu_grad`` needs in backward).
+    """
+    if epilogue.bias != (bias is not None):
+        raise ValueError(
+            f"epilogue.bias={epilogue.bias} but bias "
+            f"{'was' if bias is not None else 'was not'} passed")
+    outs = _call_fused_fwd(
+        x.code, x.sign, w.code, w.sign,
+        None if bias is None else bias.code,
+        None if bias is None else bias.sign,
+        fmt, spec, epilogue, block_m, block_n, block_k, interpret)
+    z = LNSArray(outs[0], outs[1].astype("int8"))
+    if epilogue.emit_z_sign:
+        return z, outs[2].astype("int8")
+    return z
+
+
+@partial(jax.jit, static_argnames=("fmt", "spec", "epilogue", "block_k",
+                                   "block_n", "block_m", "interpret"))
+def _call_dw_update(x_code, x_sign, dy_code, dy_sign, w_code, w_sign,
+                    m_code, m_sign, fmt, spec, epilogue, block_k, block_n,
+                    block_m, interpret):
+    return lns_matmul_dw_update_pallas(
+        x_code, x_sign.astype("int32"), dy_code, dy_sign.astype("int32"),
+        w_code=w_code, w_sign=w_sign.astype("int32"),
+        m_code=m_code,
+        m_sign=(None if m_sign is None else m_sign.astype("int32")),
+        epilogue=epilogue, fmt=fmt, spec=spec, block_k=block_k,
+        block_n=block_n, block_m=block_m, interpret=interpret)
+
+
+def lns_matmul_dw_update_kernel(x: LNSArray, dy: LNSArray, *, w: LNSArray,
+                                epilogue: UpdateEpilogue,
+                                fmt: LNSFormat, spec: DeltaSpec,
+                                m: "LNSArray | None" = None,
+                                block_k: int = 128, block_n: int = 128,
+                                block_m: int = 128, interpret: bool = True):
+    """Backward-weight ⊞-MAC with the ⊞-SGD update fused into the flush.
+
+    ``dW = Xᵀ ⊞-MAC dY`` never leaves VMEM: the final accumulator is
+    consumed by the update against the resident ``w``/``m`` tiles.
+    Returns ``(w_new, m_new)`` (``m_new is None`` when the epilogue has no
+    momentum).  Bit-exact against ``lns_matmul_dw_kernel`` +
+    ``core.sgd.apply_update_codes``.
+    """
+    if epilogue.has_momentum != (m is not None):
+        raise ValueError(
+            f"epilogue momentum={epilogue.momentum_code} but momentum "
+            f"state {'was' if m is not None else 'was not'} passed")
+    outs = _call_dw_update(
+        x.code, x.sign, dy.code, dy.sign, w.code, w.sign,
+        None if m is None else m.code, None if m is None else m.sign,
+        fmt, spec, epilogue, block_k, block_n, block_m, interpret)
+    w_new = LNSArray(outs[0], outs[1].astype("int8"))
+    if epilogue.has_momentum:
+        return w_new, LNSArray(outs[2], outs[3].astype("int8"))
+    return w_new, None
+
+
+@partial(jax.jit, static_argnames=("fmt", "spec", "epilogue", "block",
+                                   "interpret"))
+def _call_fused_update(w_code, w_sign, g_code, g_sign, m_code, m_sign,
+                       fmt, spec, epilogue, block, interpret):
+    return lns_fused_update_pallas(
+        w_code, w_sign.astype("int32"), g_code, g_sign.astype("int32"),
+        m_code=m_code,
+        m_sign=(None if m_sign is None else m_sign.astype("int32")),
+        epilogue=epilogue, fmt=fmt, spec=spec, block=block,
+        interpret=interpret)
+
+
+def lns_fused_update_kernel(w: LNSArray, g: LNSArray, *,
+                            epilogue: UpdateEpilogue, fmt: LNSFormat,
+                            spec: DeltaSpec, m: "LNSArray | None" = None,
+                            block: int = 8192, interpret: bool = True):
+    """One-pass fused ⊞-SGD update: ``(w, m, g) → (w', m')``.
+
+    The post-⊞-combine epilogue of the DP deterministic reduce (reused by
+    ``distributed/lns_dp.py``) and the bias-update path of the fused
+    train step.  Returns ``(w_new, m_new)`` (``m_new is None`` without
+    momentum).
+    """
+    if epilogue.has_momentum != (m is not None):
+        raise ValueError(
+            f"epilogue momentum={epilogue.momentum_code} but momentum "
+            f"state {'was' if m is not None else 'was not'} passed")
+    outs = _call_fused_update(
+        w.code, w.sign, g.code, g.sign,
+        None if m is None else m.code, None if m is None else m.sign,
+        fmt, spec, epilogue, block, interpret)
+    w_new = LNSArray(outs[0], outs[1].astype("int8"))
+    if epilogue.has_momentum:
+        return w_new, LNSArray(outs[2], outs[3].astype("int8"))
+    return w_new, None
+
+
+# ------------------------------------------------------------------------
 # Differentiable op: LNS forward AND backward under jax.grad
 # ------------------------------------------------------------------------
 def _resolve_numerics(numerics, fmt, spec, backend, interpret, layer=None):
@@ -109,14 +235,15 @@ def _resolve_numerics(numerics, fmt, spec, backend, interpret, layer=None):
     path to resolve under a plan.  ``backend`` defaults to ``"pallas"``
     when neither an explicit value nor a spec supplies one (this is the
     kernels package, after all); ``interpret=None`` keeps the backend's
-    call-time auto-resolution unless the spec pins it on/off.
+    call-time auto-resolution unless the spec pins it on/off.  The fifth
+    return is the spec's ``blocks`` axis ("default"/"auto"/"MxNxK").
     """
     from ...core.spec import resolve_kernel_args
-    fmt, spec, backend, interpret = resolve_kernel_args(
+    fmt, spec, backend, interpret, blocks = resolve_kernel_args(
         numerics, fmt=fmt, spec=spec, backend=backend, interpret=interpret,
         op="lns_matmul_trainable", layer=layer)
     return fmt, spec, (backend if backend is not None else "pallas"), \
-        interpret
+        interpret, blocks
 
 
 
@@ -171,11 +298,14 @@ def lns_matmul_trainable(x, w, *, fmt: LNSFormat | None = None,
     ``lns_matmul_trainable(x, w, numerics=plan, layer="hidden")``;
     explicit pieces win over the spec.
     """
-    fmt, spec, backend, interpret = _resolve_numerics(
+    fmt, spec, backend, interpret, blocks = _resolve_numerics(
         numerics, fmt, spec, backend, interpret, layer)
+    from ...core.spec import resolve_blocks_arg
+    block_m, block_n, block_k, blocks_mode = resolve_blocks_arg(
+        blocks, block_m, block_n, block_k)
     be = LNSMatmulBackend(fmt=fmt, spec=spec, backend=backend,
                           block_m=block_m, block_n=block_n, block_k=block_k,
-                          interpret=interpret)
+                          blocks=blocks_mode, interpret=interpret)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))
     z = _trainable(x2, w, be)

@@ -10,10 +10,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ...core.arithmetic import lns_matmul
+from ...core.activations import llrelu
+from ...core.arithmetic import bias_add, lns_matmul
 from ...core.delta import DeltaEngine, DeltaSpec
 from ...core.formats import LNSFormat
-from ...core.lns import LNSArray
+from ...core.lns import LNSArray, convert_format
+from ...core.sgd import UpdateEpilogue, apply_update_codes
 
 
 def _mm(a_code, a_sign, b_code, b_sign, fmt, spec, *, t_a=False, t_b=False):
@@ -66,3 +68,45 @@ def lns_matmul_dw_partials_ref(x_code, x_sign, dy_code, dy_sign, *,
         codes.append(c)
         signs.append(sg)
     return jnp.stack(codes), jnp.stack(signs)
+
+
+def lns_matmul_fused_ref(x_code, x_sign, w_code, w_sign, *,
+                         fmt: LNSFormat, spec: DeltaSpec, epilogue,
+                         bias_code=None, bias_sign=None):
+    """Fused-forward oracle: the *unfused composition* the kernel folds in.
+
+    Sequential ⊞-MAC, then — as separate ops, exactly what the pre-fusion
+    train step ran — ``bias_add``, ``llrelu``, ``convert_format``, per the
+    :class:`~repro.kernels.lns_matmul.lns_matmul.FwdEpilogue`.  Returns
+    ``(code, sign, z_sign)`` with ``z_sign`` the post-bias pre-activation
+    sign plane; comparisons against the fused kernel are **bit-exact**.
+    """
+    eng = DeltaEngine(spec, fmt)
+    z = lns_matmul(LNSArray(x_code, x_sign.astype("int8")),
+                   LNSArray(w_code, w_sign.astype("int8")), eng,
+                   order="sequential")
+    if epilogue.bias:
+        z = bias_add(z, LNSArray(bias_code, bias_sign.astype("int8")), eng)
+    z_sign = z.sign
+    if epilogue.llrelu_beta is not None:
+        z = llrelu(z, epilogue.llrelu_beta, fmt)
+    if epilogue.dst_fmt is not None:
+        z = convert_format(z, fmt, epilogue.dst_fmt)
+    return z.code, z.sign.astype("int32"), z_sign.astype("int32")
+
+
+def lns_matmul_dw_update_ref(x_code, x_sign, dy_code, dy_sign, *,
+                             w: LNSArray, epilogue: UpdateEpilogue,
+                             fmt: LNSFormat, spec: DeltaSpec,
+                             m: "LNSArray | None" = None):
+    """Fused dW-update oracle: sequential dW, then the unfused ⊞-SGD.
+
+    ``matmul_dw`` followed by :func:`~repro.core.sgd.apply_update_codes`
+    — the exact composition the fused kernel's flush replaces.  Returns
+    ``(w_new, m_new)`` LNSArrays; bit-exact against
+    ``lns_matmul_dw_update_kernel``.
+    """
+    gc, gs = _mm(x_code, x_sign, dy_code, dy_sign, fmt, spec, t_a=True)
+    eng = DeltaEngine(spec, fmt)
+    return apply_update_codes(w, LNSArray(gc, gs.astype("int8")), m,
+                              epilogue, eng)

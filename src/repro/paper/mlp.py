@@ -40,10 +40,11 @@ import numpy as np
 from ..core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
                     DELTA_SOFTMAX, FXP12, FXP16, LNS12, LNS16, DeltaEngine,
                     DeltaSpec, LNSArray, LNSMatmulBackend, LogSGDConfig,
-                    NumericsPlan, NumericsSpec, apply_update, beta_code,
-                    boxabs_max, boxdot, boxsum, ce_grad_init,
-                    ce_loss_readout, convert_format, decode, encode,
-                    he_sigma, llrelu, llrelu_grad, log_normal_init,
+                    NumericsPlan, NumericsSpec, UpdateEpilogue,
+                    apply_update, beta_code, boxabs_max, boxdot, boxsum,
+                    ce_grad_init, ce_loss_readout, convert_format, decode,
+                    encode, he_sigma, llrelu, llrelu_grad,
+                    llrelu_grad_from_sign, log_normal_init,
                     log_softmax_lns, scalar, zeros)
 from ..core.linear_fixed import (fxp_affine, fxp_decode, fxp_encode,
                                  fxp_leaky_relu, fxp_leaky_relu_grad,
@@ -80,6 +81,12 @@ class MLPConfig:
                                     # spec, emulate).  Normalized to a
                                     # NumericsPlan in __post_init__.
     matmul_block: int = 32          # kernel tile edge; ≥128 on real TPUs
+    fused: bool = True              # lns only: flush-time kernel epilogues
+                                    # (bias/llrelu/requantize in the fwd
+                                    # kernel, ⊞-SGD in the dW flush) —
+                                    # bit-identical to the unfused
+                                    # composition; False = separate-pass
+                                    # reference path (benchmarks)
     data_parallel: int = 1          # lns only: devices on the 'data' axis
     # -- legacy loose knobs, deprecated: fold into ``spec`` ----------------
     matmul_backend: dataclasses.InitVar[Any] = None   # → spec.backend
@@ -354,6 +361,15 @@ class LNSMLP:
         self.beta = beta_code(ALPHA, self.fmts["hidden"])
         self.sgd = LogSGDConfig(lr=cfg.lr, weight_decay=cfg.weight_decay,
                                 momentum=cfg.momentum)
+        # The ⊞-SGD update as static scalar codes, one per layer format —
+        # what the fused kernels apply at accumulator flush (and what the
+        # fused-update kernel applies after the DP ⊞-combine).  Same
+        # scalar() quantization as apply_update → bit-identical updates.
+        # lr <= 0 has no scalar code (predict-only / frozen-weight
+        # configs): the fused paths fall back to the unfused update.
+        self.update_eps = (
+            {p: UpdateEpilogue.from_sgd(self.sgd, self.fmts[p])
+             for p in LAYER_PATHS} if cfg.lr > 0 else None)
         # Per-parameter views (the unit the DP reduce plans key on).
         self.param_runtimes = {k: self.runtimes[l]
                                for k, l in PARAM_LAYER.items()}
@@ -388,19 +404,54 @@ class LNSMLP:
                 for k in params}
 
     def _forward(self, params, x: LNSArray):
-        """Forward pass; returns (z1 [hidden fmt], a1 [out fmt], z2).
+        """Forward pass; returns (z1_sign, a1 [out fmt], z2).
 
         ``a1`` is returned already converted to the output layer's format
         — the form both its consumers (the z2 matmul and the dW2 backward
-        product) need.
+        product) need.  ``z1_sign`` is the post-bias pre-activation sign
+        plane, the only piece of z1 backward needs (``llrelu_grad``
+        depends on sign(z1) alone).  With ``cfg.fused`` the bias ⊞ /
+        llrelu / format conversion run in the forward kernels'
+        accumulator flush — one pass per matmul instead of one matmul +
+        three elementwise passes — bit-identical to the unfused chain.
         """
         mm_h = self.runtimes["hidden"].matmul
         mm_o = self.runtimes["out"].matmul
+        fh, fo = self.fmts["hidden"], self.fmts["out"]
+        if self.cfg.fused:
+            a1, z1_sign = mm_h.matmul_fused(
+                x, params["w1"], bias=params["b1"], llrelu_beta=self.beta,
+                out_fmt=fo, emit_z_sign=True)
+            z2 = mm_o.matmul_fused(a1, params["w2"], bias=params["b2"])
+            return z1_sign, a1, z2
         z1 = mm_h.affine(x, params["w1"], params["b1"])
-        a1 = llrelu(z1, self.beta, self.fmts["hidden"])
-        a1 = convert_format(a1, self.fmts["hidden"], self.fmts["out"])
+        a1 = llrelu(z1, self.beta, fh)
+        a1 = convert_format(a1, fh, fo)
         z2 = mm_o.affine(a1, params["w2"], params["b2"])
-        return z1, a1, z2
+        return z1.sign, a1, z2
+
+    def _bwd_core(self, params, xb, yb):
+        """Forward + error backprop; returns ``(x, a1, d1, d2, loss)``.
+
+        The shared trunk of every train-step flavor: the gradient *sources*
+        (per-layer error planes d1/d2 and the activations they pair with),
+        before any dW product — so the fused step can route them into
+        dW-update flushes while the unfused/segmented steps materialize
+        gradients.
+        """
+        fh, fo = self.fmts["hidden"], self.fmts["out"]
+        mm_o = self.runtimes["out"].matmul
+        x = encode(xb, fh)                      # dataset conversion (Sec. 4)
+        z1_sign, a1, z2 = self._forward(params, x)
+        p = log_softmax_lns(z2, self.eng_sm)
+        d2 = ce_grad_init(p, yb, fo, self.eng_sm)         # (B, K), out fmt
+        # Sum-reduction over the minibatch, matching the fxp baseline.
+        # The transposed MACs run on each layer's backward path (Pallas
+        # kernels when that layer's spec says backend=pallas).
+        bp = mm_o.matmul_dx(d2, params["w2"])             # (B, H), out fmt
+        bp = convert_format(bp, fo, fh)
+        d1 = boxdot(bp, llrelu_grad_from_sign(z1_sign, self.beta), fh)
+        return x, a1, d1, d2, ce_loss_readout(p, yb, fo)
 
     def _backward(self, params, xb, yb, num_segments=None):
         """Shared backward pass of the single-device and DP train steps.
@@ -411,20 +462,10 @@ class LNSMLP:
         emission side of the deterministic DP all-reduce.  Every gradient
         leaf is in its *own layer's* format (``PARAM_LAYER``).
         """
-        fh, fo = self.fmts["hidden"], self.fmts["out"]
         eng_h, eng_o = self.engs["hidden"], self.engs["out"]
         mm_h = self.runtimes["hidden"].matmul
         mm_o = self.runtimes["out"].matmul
-        x = encode(xb, fh)                      # dataset conversion (Sec. 4)
-        z1, a1, z2 = self._forward(params, x)
-        p = log_softmax_lns(z2, self.eng_sm)
-        d2 = ce_grad_init(p, yb, fo, self.eng_sm)         # (B, K), out fmt
-        # Sum-reduction over the minibatch, matching the fxp baseline.
-        # The transposed MACs run on each layer's backward path (Pallas
-        # kernels when that layer's spec says backend=pallas).
-        bp = mm_o.matmul_dx(d2, params["w2"])             # (B, H), out fmt
-        bp = convert_format(bp, fo, fh)
-        d1 = boxdot(bp, llrelu_grad(z1, self.beta, fh), fh)
+        x, a1, d1, d2, loss = self._bwd_core(params, xb, yb)
         if num_segments is None:
             grads = dict(w1=mm_h.matmul_dw(x, d1),
                          b1=boxsum(d1, 0, eng_h),
@@ -436,14 +477,36 @@ class LNSMLP:
                 b1=segmented_boxsum(d1, num_segments, eng_h),
                 w2=mm_o.matmul_dw_partials(a1, d2, num_segments),
                 b2=segmented_boxsum(d2, num_segments, eng_o))
-        return grads, ce_loss_readout(p, yb, fo)
+        return grads, loss
 
     def per_segment_grads(self, params, xb, yb, num_segments: int):
         """Per-segment gradient partials (leading segment axis) + loss."""
         return self._backward(params, xb, yb, num_segments)
 
     def apply_updates(self, params, grads, momentum=None):
-        """Pure-LNS SGD, each layer under its own Δ engine/format."""
+        """Pure-LNS SGD, each layer under its own Δ engine/format.
+
+        With ``cfg.fused`` the update runs through each layer backend's
+        one-pass fused-update kernel (``LNSMatmulBackend.fused_update``),
+        bit-identical to the unfused ``apply_update`` composition — this
+        is the post-⊞-combine epilogue of the DP deterministic reduce.
+        """
+        if self.cfg.fused and self.update_eps is not None:
+            # cfg.momentum == 0 with a momentum pytree passed: the
+            # unfused path passes the state through untouched — mirror
+            # that (the epilogue has no momentum term to feed it to).
+            has_mom = self.sgd.momentum != 0.0
+            new_p, new_m = {}, ({} if momentum is not None else None)
+            for k in params:
+                layer = PARAM_LAYER[k]
+                m_k = momentum[k] if has_mom and momentum is not None \
+                    else None
+                w_new, m_new = self.runtimes[layer].matmul.fused_update(
+                    params[k], grads[k], m_k, self.update_eps[layer])
+                new_p[k] = w_new
+                if momentum is not None:
+                    new_m[k] = m_new if has_mom else momentum[k]
+            return new_p, new_m
         new_p, new_m = {}, ({} if momentum is not None else None)
         for layer in LAYER_PATHS:
             keys = [k for k, l in PARAM_LAYER.items() if l == layer]
@@ -460,12 +523,47 @@ class LNSMLP:
     @functools.partial(jax.jit, static_argnums=0)
     def train_step(self, params, xb, yb, momentum=None):
         """One step; returns (params, loss), or (params, momentum, loss)
-        when a momentum pytree is passed (``cfg.momentum > 0``)."""
-        grads, loss = self._backward(params, xb, yb)
-        params, momentum = self.apply_updates(params, grads, momentum)
+        when a momentum pytree is passed (``cfg.momentum > 0``).
+
+        With ``cfg.fused`` (default) the step is one pass per matmul: the
+        forward kernels fold bias/llrelu/format conversion into their
+        flush, and the weight gradients never materialize — each dW
+        kernel's flush applies the ⊞-SGD update (momentum + weight decay)
+        against the resident weight/momentum tiles directly.  Bias
+        gradients (⊞-folds, not matmuls) go through the standalone
+        fused-update kernel.  Bit-identical to the unfused step.
+        """
+        if not self.cfg.fused or self.update_eps is None:
+            grads, loss = self._backward(params, xb, yb)
+            params, momentum = self.apply_updates(params, grads, momentum)
+            if momentum is None:
+                return params, loss
+            return params, momentum, loss
+        x, a1, d1, d2, loss = self._bwd_core(params, xb, yb)
+        # cfg.momentum == 0 with a momentum pytree passed: pass the
+        # state through untouched, exactly like the unfused path.
+        has_mom = self.sgd.momentum != 0.0
+        new_p = {}
+        new_m = {} if momentum is not None else None
+        for wk, bk, layer, act, d in (("w1", "b1", "hidden", x, d1),
+                                      ("w2", "b2", "out", a1, d2)):
+            mm = self.runtimes[layer].matmul
+            ep = self.update_eps[layer]
+            m_w = momentum[wk] if has_mom and momentum is not None \
+                else None
+            w_new, mw_new = mm.matmul_dw_update(act, d, params[wk], m_w,
+                                                ep)
+            gb = boxsum(d, 0, self.engs[layer])
+            m_b = momentum[bk] if has_mom and momentum is not None \
+                else None
+            b_new, mb_new = mm.fused_update(params[bk], gb, m_b, ep)
+            new_p[wk], new_p[bk] = w_new, b_new
+            if momentum is not None:
+                new_m[wk] = mw_new if has_mom else momentum[wk]
+                new_m[bk] = mb_new if has_mom else momentum[bk]
         if momentum is None:
-            return params, loss
-        return params, momentum, loss
+            return new_p, loss
+        return new_p, new_m, loss
 
     @functools.partial(jax.jit, static_argnums=0)
     def predict(self, params, xb):

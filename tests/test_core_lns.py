@@ -4,8 +4,8 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import (LNS12, LNS16, decode, encode, quantization_bound,
-                        scalar, zeros)
+from repro.core import (LNS12, LNS16, LNS21, LNSArray, convert_format,
+                        decode, encode, quantization_bound, scalar, zeros)
 
 FMT = [LNS16, LNS12]
 
@@ -84,3 +84,82 @@ def test_encode_is_jittable():
     f = jax.jit(lambda v: encode(v, LNS16).code)
     v = jnp.array([1.0, -2.0, 0.0, 0.5])
     np.testing.assert_array_equal(f(v), encode(v, LNS16).code)
+
+
+# ------------------------------------------------- convert_format edges
+def _arr(codes, signs, dtype_sign="int8"):
+    return LNSArray(jnp.asarray(codes, jnp.int32),
+                    jnp.asarray(signs, dtype_sign))
+
+
+def test_convert_format_identity_when_same():
+    a = encode(np.float32([1.5, -0.25, 0.0]), LNS16)
+    b = convert_format(a, LNS16, LNS16)
+    assert b is a
+
+
+@pytest.mark.parametrize("src,dst", [(LNS16, LNS12), (LNS16, LNS21),
+                                     (LNS12, LNS16), (LNS12, LNS21),
+                                     (LNS21, LNS12)])
+def test_convert_format_zero_code_preserved(src, dst):
+    """The reserved exact-zero sentinel maps to the destination's
+    sentinel, with the sign cleared."""
+    a = _arr([src.zero_code, src.zero_code], [0, 1])
+    b = convert_format(a, src, dst)
+    assert (np.asarray(b.code) == dst.zero_code).all()
+    assert (np.asarray(b.sign) == 0).all()
+
+
+def test_convert_format_saturating_narrowing_at_extremes():
+    """Codes beyond the narrow format's range saturate (top) or flush to
+    the zero sentinel (bottom) instead of wrapping."""
+    a = _arr([LNS16.code_max, LNS16.min_nonzero_code,
+              LNS16.code_min + 5], [0, 1, 1])
+    b = convert_format(a, LNS16, LNS12)
+    bc = np.asarray(b.code)
+    # lns16 code_max (log2 ≈ 16) exceeds lns12's max → saturate.
+    assert bc[0] == LNS12.code_max
+    # most negative magnitudes underflow lns12's resolution → zero, and
+    # the sign plane must be cleared with them.
+    assert bc[1] == LNS12.zero_code and int(b.sign[1]) == 0
+    assert bc[2] == LNS12.zero_code and int(b.sign[2]) == 0
+
+
+def test_convert_format_narrowing_rounds_half_up():
+    """Narrowing divides the code grid by 2^(qf_src - qf_dst) with
+    round-half-up: code 8 (= 0.5 ulp at Δqf=4) rounds to 1, code 7 to 0."""
+    shift = LNS16.qf - LNS12.qf  # 4
+    assert shift == 4
+    a = _arr([8, 7, -8, 24], [0, 0, 0, 1])
+    b = convert_format(a, LNS16, LNS12)
+    np.testing.assert_array_equal(np.asarray(b.code), [1, 0, 0, 2])
+
+
+def test_convert_format_widening_roundtrip_identity():
+    """Widening is an exact left shift, so narrow → wide → narrow is the
+    identity on every representable narrow code (and sign)."""
+    codes = np.arange(LNS12.min_nonzero_code, LNS12.code_max + 1,
+                      dtype=np.int32)
+    signs = (codes % 2 == 0).astype(np.int8)
+    a = _arr(codes, signs)
+    for wide in (LNS16, LNS21):
+        up = convert_format(a, LNS12, wide)
+        back = convert_format(up, wide, LNS12)
+        np.testing.assert_array_equal(np.asarray(back.code), codes)
+        np.testing.assert_array_equal(np.asarray(back.sign), signs)
+        # the widened magnitude decodes to the same value exactly
+        np.testing.assert_array_equal(np.asarray(decode(a, LNS12)),
+                                      np.asarray(decode(up, wide)))
+
+
+def test_convert_format_value_roundtrip_via_floats():
+    """Against the float codec: converting codes matches re-encoding the
+    decoded values (up to the narrow format's own quantization)."""
+    rng = np.random.default_rng(0)
+    v = (rng.normal(size=64) * 3).astype(np.float32)
+    a = encode(v, LNS16)
+    b = convert_format(a, LNS16, LNS12)
+    direct = encode(np.asarray(decode(a, LNS16)), LNS12)
+    # round-half-up on the code grid vs round-nearest through log2 can
+    # differ by at most one ulp of the narrow grid
+    assert np.abs(np.asarray(b.code) - np.asarray(direct.code)).max() <= 1

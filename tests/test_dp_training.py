@@ -220,27 +220,32 @@ def test_make_mlp_routes_data_parallel(rng):
 
 
 # ---------------------------------------------------------------- layer 4
-#: (id, numerics, momentum) — the device-count-invariance grid: the
-#: uniform plan (the PR-2 acceptance criterion), a mixed lns12/lns16
-#: per-layer plan (formats reduce per-parameter), and ⊞-momentum
-#: (replicated state updated after the deterministic reduce).
+#: (id, numerics, momentum, fused) — the device-count-invariance grid:
+#: the uniform plan (the PR-2 acceptance criterion), a mixed lns12/lns16
+#: per-layer plan (formats reduce per-parameter), ⊞-momentum (replicated
+#: state updated after the deterministic reduce), and the unfused
+#: reference path (fused epilogues apply after the canonical ⊞-combine,
+#: so invariance must hold with fusion on — the default — and off).
 INVARIANCE_CASES = [
-    ("uniform", "lns16-train-pallas,reduce.grad_segments=4", 0.0),
+    ("uniform", "lns16-train-pallas,reduce.grad_segments=4", 0.0, True),
     ("mixed-plan",
-     "lns16-train-pallas,reduce.grad_segments=4;hidden=fmt:lns12", 0.0),
-    ("momentum", "lns16-train-pallas,reduce.grad_segments=4", 0.9),
+     "lns16-train-pallas,reduce.grad_segments=4;hidden=fmt:lns12", 0.0,
+     True),
+    ("momentum", "lns16-train-pallas,reduce.grad_segments=4", 0.9, True),
+    ("unfused", "lns16-train-pallas,reduce.grad_segments=4", 0.9, False),
 ]
 
 
 def test_device_count_invariance_1_2_4():
     """The acceptance criterion: bit-identical weight codes on 1/2/4
     devices under reduce.mode=boxplus, matching the sequential baseline —
-    for the uniform spec, a mixed-format per-layer plan, and ⊞-momentum."""
+    for the uniform spec, a mixed-format per-layer plan, ⊞-momentum, and
+    both the fused and unfused update paths."""
     if jax.device_count() >= 4:
-        for name, numerics, momentum in INVARIANCE_CASES:
+        for name, numerics, momentum, fused in INVARIANCE_CASES:
             ok, runs = run_device_count_invariance_check(
                 (1, 2, 4), steps=2, batch=8, numerics=numerics,
-                momentum=momentum)
+                momentum=momentum, fused=fused)
             assert ok, (name,
                         {d: r["matches_reference"] for d, r in runs.items()})
             _params_equal(runs[1]["params"], runs[2]["params"])
@@ -253,9 +258,10 @@ def test_device_count_invariance_1_2_4():
         "import sys\n"
         "from repro.distributed.lns_dp import "
         "run_device_count_invariance_check\n"
-        f"for name, numerics, momentum in {INVARIANCE_CASES!r}:\n"
+        f"for name, numerics, momentum, fused in {INVARIANCE_CASES!r}:\n"
         "    ok, _ = run_device_count_invariance_check((1, 2, 4), steps=2, "
-        "batch=8, numerics=numerics, momentum=momentum, verbose=True)\n"
+        "batch=8, numerics=numerics, momentum=momentum, fused=fused, "
+        "verbose=True)\n"
         "    print(name, 'ok' if ok else 'MISMATCH')\n"
         "    assert ok, name\n")
     env = dict(os.environ,

@@ -1,0 +1,303 @@
+"""Fused kernel epilogues vs unfused compositions — all **bit-exact**.
+
+The epilogue contract (ROADMAP §Fused epilogues): bias ⊞ / llrelu /
+requantize fold into the forward kernel's accumulator flush, the ⊞-SGD
+update folds into the dW kernel's flush, and under data parallelism the
+update applies strictly *after* the canonical ⊞-combine via the standalone
+fused-update kernel.  Every fused path must equal the separate-pass
+composition code-for-code, on both backends, so fusion is purely a
+performance property.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT, LNS12,
+                        LNS16, DeltaEngine, LNSMatmulBackend, LogSGDConfig,
+                        UpdateEpilogue, apply_update, apply_update_codes,
+                        beta_code, encode, zeros)
+from repro.kernels.lns_matmul import (FwdEpilogue, lns_fused_update_kernel,
+                                      lns_matmul_dw_update_kernel,
+                                      lns_matmul_dw_update_ref,
+                                      lns_matmul_fused_kernel,
+                                      lns_matmul_fused_ref)
+from repro.paper.mlp import MLPConfig, make_mlp
+
+BETA16 = beta_code(0.01, LNS16)
+
+SGD_CASES = {
+    "plain": LogSGDConfig(lr=0.01),
+    "decay": LogSGDConfig(lr=0.01, weight_decay=0.001),
+    "momentum": LogSGDConfig(lr=0.01, momentum=0.9),
+    "momentum+decay": LogSGDConfig(lr=0.01, weight_decay=0.001,
+                                   momentum=0.9),
+}
+
+
+def _operands(rng, m, k, n, fmt, scale=1.0):
+    X = (rng.normal(size=(m, k)) * scale).astype(np.float32)
+    W = (rng.normal(size=(k, n)) * scale).astype(np.float32)
+    B = (rng.normal(size=(n,)) * scale).astype(np.float32)
+    DY = (rng.normal(size=(m, n)) * scale).astype(np.float32)
+    return (encode(X, fmt), encode(W, fmt), encode(B, fmt),
+            encode(DY, fmt))
+
+
+def _eq(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                  err_msg=msg)
+
+
+# ------------------------------------------------ forward epilogue kernel
+FWD_EPILOGUES = {
+    "bias": FwdEpilogue(bias=True),
+    "llrelu": FwdEpilogue(llrelu_beta=BETA16),
+    "bias+llrelu": FwdEpilogue(bias=True, llrelu_beta=BETA16),
+    "requant-narrow": FwdEpilogue(dst_fmt=LNS12),
+    "full+zsign": FwdEpilogue(bias=True, llrelu_beta=BETA16, dst_fmt=LNS12,
+                              emit_z_sign=True),
+}
+
+
+@pytest.mark.parametrize("ep", list(FWD_EPILOGUES.values()),
+                         ids=list(FWD_EPILOGUES))
+def test_fused_fwd_kernel_bitexact_vs_ref(rng, ep):
+    x, w, b, _ = _operands(rng, 7, 19, 5, LNS16)
+    bias = b if ep.bias else None
+    out = lns_matmul_fused_kernel(x, w, epilogue=ep, bias=bias, fmt=LNS16,
+                                  spec=DELTA_DEFAULT, block_m=8, block_n=8,
+                                  block_k=8)
+    z, zs = out if ep.emit_z_sign else (out, None)
+    rc, rs, rzs = lns_matmul_fused_ref(
+        x.code, x.sign, w.code, w.sign, fmt=LNS16, spec=DELTA_DEFAULT,
+        epilogue=ep, bias_code=None if bias is None else bias.code,
+        bias_sign=None if bias is None else bias.sign)
+    _eq(z.code, rc, "code")
+    _eq(z.sign.astype("int32"), rs, "sign")
+    if ep.emit_z_sign:
+        _eq(zs.astype("int32"), rzs, "z_sign")
+
+
+@pytest.mark.parametrize("spec", [DELTA_DEFAULT, DELTA_BITSHIFT,
+                                  DELTA_EXACT],
+                         ids=["lut20", "bitshift", "exact"])
+def test_fused_fwd_kernel_delta_engines(rng, spec):
+    x, w, b, _ = _operands(rng, 6, 14, 4, LNS16)
+    ep = FwdEpilogue(bias=True, llrelu_beta=BETA16)
+    z = lns_matmul_fused_kernel(x, w, epilogue=ep, bias=b, fmt=LNS16,
+                                spec=spec, block_m=8, block_n=8, block_k=8)
+    rc, rs, _ = lns_matmul_fused_ref(x.code, x.sign, w.code, w.sign,
+                                     fmt=LNS16, spec=spec, epilogue=ep,
+                                     bias_code=b.code, bias_sign=b.sign)
+    _eq(z.code, rc)
+    _eq(z.sign.astype("int32"), rs)
+
+
+def test_fused_fwd_widening_requantize(rng):
+    """lns12 layer feeding an lns16 layer: the flush emits lns16 codes."""
+    x, w, b, _ = _operands(rng, 5, 9, 3, LNS12)
+    ep = FwdEpilogue(bias=True, llrelu_beta=beta_code(0.01, LNS12),
+                     dst_fmt=LNS16)
+    z = lns_matmul_fused_kernel(x, w, epilogue=ep, bias=b, fmt=LNS12,
+                                spec=DELTA_DEFAULT, block_m=8, block_n=8,
+                                block_k=8)
+    rc, rs, _ = lns_matmul_fused_ref(x.code, x.sign, w.code, w.sign,
+                                     fmt=LNS12, spec=DELTA_DEFAULT,
+                                     epilogue=ep, bias_code=b.code,
+                                     bias_sign=b.sign)
+    _eq(z.code, rc)
+    _eq(z.sign.astype("int32"), rs)
+
+
+def test_fused_fwd_block_shape_invariance(rng):
+    """Tiling must not change the fused output (flush epilogue runs once
+    per output tile, after the whole sequential contraction)."""
+    x, w, b, _ = _operands(rng, 17, 40, 9, LNS16)
+    ep = FwdEpilogue(bias=True, llrelu_beta=BETA16, dst_fmt=LNS12)
+    z1 = lns_matmul_fused_kernel(x, w, epilogue=ep, bias=b, fmt=LNS16,
+                                 spec=DELTA_DEFAULT, block_m=8, block_n=8,
+                                 block_k=16)
+    z2 = lns_matmul_fused_kernel(x, w, epilogue=ep, bias=b, fmt=LNS16,
+                                 spec=DELTA_DEFAULT, block_m=16, block_n=4,
+                                 block_k=40)
+    _eq(z1.code, z2.code)
+    _eq(z1.sign, z2.sign)
+
+
+@pytest.mark.parametrize("backend", ["emulate", "pallas"])
+def test_backend_matmul_fused_equals_unfused_composition(rng, backend):
+    """The dispatcher surface: matmul_fused == matmul + bias_add +
+    llrelu + convert_format on both backends (and the backends agree)."""
+    from repro.core.arithmetic import bias_add
+    from repro.core.activations import llrelu
+    from repro.core.lns import convert_format, _cached_engine
+    x, w, b, _ = _operands(rng, 6, 10, 4, LNS16)
+    be = LNSMatmulBackend(fmt=LNS16, spec=DELTA_DEFAULT, backend=backend,
+                          block_m=8, block_n=8, block_k=8)
+    z, zsign = be.matmul_fused(x, w, bias=b, llrelu_beta=BETA16,
+                               out_fmt=LNS12, emit_z_sign=True)
+    ref = be.matmul(x, w)
+    ref = bias_add(ref, b, _cached_engine(DELTA_DEFAULT, LNS16))
+    ref_sign = ref.sign
+    ref = llrelu(ref, BETA16, LNS16)
+    ref = convert_format(ref, LNS16, LNS12)
+    _eq(z.code, ref.code)
+    _eq(z.sign, ref.sign)
+    _eq(zsign, ref_sign)
+
+
+# ------------------------------------------------- dW-update flush kernel
+@pytest.mark.parametrize("sgd", list(SGD_CASES.values()),
+                         ids=list(SGD_CASES))
+def test_fused_dw_update_kernel_bitexact_vs_ref(rng, sgd):
+    x, w0, _, dy = _operands(rng, 7, 13, 5, LNS16)
+    w = encode(rng.normal(size=(13, 5)).astype(np.float32), LNS16)
+    ep = UpdateEpilogue.from_sgd(sgd, LNS16)
+    m = zeros((13, 5), LNS16) if ep.has_momentum else None
+    w_new, m_new = lns_matmul_dw_update_kernel(
+        x, dy, w=w, m=m, epilogue=ep, fmt=LNS16, spec=DELTA_DEFAULT,
+        block_k=8, block_n=8, block_m=8)
+    rw, rm = lns_matmul_dw_update_ref(x.code, x.sign, dy.code, dy.sign,
+                                      w=w, m=m, epilogue=ep, fmt=LNS16,
+                                      spec=DELTA_DEFAULT)
+    _eq(w_new.code, rw.code)
+    _eq(w_new.sign, rw.sign)
+    if ep.has_momentum:
+        _eq(m_new.code, rm.code)
+        _eq(m_new.sign, rm.sign)
+    else:
+        assert m_new is None
+
+
+@pytest.mark.parametrize("backend", ["emulate", "pallas"])
+def test_backend_dw_update_equals_dw_plus_apply_update(rng, backend):
+    """matmul_dw_update == matmul_dw + apply_update (the full LogSGDConfig
+    path, not just apply_update_codes) on both backends."""
+    sgd = LogSGDConfig(lr=0.01, weight_decay=0.001, momentum=0.9)
+    x, _, _, dy = _operands(rng, 6, 11, 4, LNS16)
+    w = encode(rng.normal(size=(11, 4)).astype(np.float32), LNS16)
+    m = encode((rng.normal(size=(11, 4)) * 0.1).astype(np.float32), LNS16)
+    be = LNSMatmulBackend(fmt=LNS16, spec=DELTA_DEFAULT, backend=backend,
+                          block_m=8, block_n=8, block_k=8)
+    ep = UpdateEpilogue.from_sgd(sgd, LNS16)
+    w_new, m_new = be.matmul_dw_update(x, dy, w, m, ep)
+    g = be.matmul_dw(x, dy)
+    eng = DeltaEngine(DELTA_DEFAULT, LNS16)
+    ref_p, ref_m = apply_update({"w": w}, {"w": g}, {"w": m}, sgd, eng)
+    _eq(w_new.code, ref_p["w"].code)
+    _eq(w_new.sign, ref_p["w"].sign)
+    _eq(m_new.code, ref_m["w"].code)
+
+
+# --------------------------------------------- standalone update kernel
+@pytest.mark.parametrize("sgd", list(SGD_CASES.values()),
+                         ids=list(SGD_CASES))
+@pytest.mark.parametrize("shape", [(9, 5), (7,)], ids=["2d", "bias-1d"])
+def test_fused_update_kernel_bitexact(rng, sgd, shape):
+    """The post-⊞-combine kernel == apply_update_codes == apply_update,
+    for weight planes and 1-D bias vectors alike."""
+    w = encode(rng.normal(size=shape).astype(np.float32), LNS16)
+    g = encode(rng.normal(size=shape).astype(np.float32), LNS16)
+    ep = UpdateEpilogue.from_sgd(sgd, LNS16)
+    m = zeros(shape, LNS16) if ep.has_momentum else None
+    w_new, m_new = lns_fused_update_kernel(w, g, m=m, epilogue=ep,
+                                           fmt=LNS16, spec=DELTA_DEFAULT,
+                                           block=8)
+    eng = DeltaEngine(DELTA_DEFAULT, LNS16)
+    rw, rm = apply_update_codes(w, g, m, ep, eng)
+    _eq(w_new.code, rw.code)
+    _eq(w_new.sign, rw.sign)
+    if ep.has_momentum:
+        _eq(m_new.code, rm.code)
+    ref_p, _ = apply_update({"w": w}, {"w": g},
+                            None if m is None else {"w": m}, sgd, eng)
+    _eq(w_new.code, ref_p["w"].code)
+
+
+def test_momentum_pytree_with_zero_momentum_passes_through(rng):
+    """cfg.momentum == 0 with a momentum pytree passed: the fused step
+    must match the unfused behavior — state returned untouched."""
+    from repro.core import zeros
+    xb = rng.uniform(0, 1, size=(4, 12)).astype(np.float32)
+    yb = rng.integers(0, 4, size=(4,))
+    outs = {}
+    for fused in (True, False):
+        cfg = MLPConfig(n_in=12, n_hidden=9, n_out=4, momentum=0.0,
+                        spec="lns16-train-pallas", matmul_block=8,
+                        fused=fused)
+        model = make_mlp("lns", cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        mom = {k: zeros(params[k].shape, model.param_fmts[k])
+               for k in params}
+        new_p, new_m, _ = model.train_step(params, xb, yb, mom)
+        outs[fused] = (new_p, new_m)
+        for k in mom:  # no momentum term → state untouched
+            _eq(new_m[k].code, mom[k].code, k)
+    for k in outs[True][0]:
+        _eq(outs[True][0][k].code, outs[False][0][k].code, k)
+
+
+def test_lr_zero_config_still_constructs_and_steps(rng):
+    """lr=0 (predict-only / frozen weights) has no fused scalar code; the
+    model must construct and fall back to the unfused no-op update."""
+    xb = rng.uniform(0, 1, size=(4, 12)).astype(np.float32)
+    yb = rng.integers(0, 4, size=(4,))
+    cfg = MLPConfig(n_in=12, n_hidden=9, n_out=4, lr=0.0,
+                    spec="lns16-train-pallas", matmul_block=8)
+    model = make_mlp("lns", cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    preds = model.predict(params, xb)
+    assert preds.shape == (4,)
+    new_params, loss = model.train_step(params, xb, yb)
+    for k in params:  # lr=0 → the ⊞-SGD step is the identity
+        _eq(new_params[k].code, params[k].code, k)
+
+
+def test_update_epilogue_validation():
+    with pytest.raises(ValueError, match="lr > 0"):
+        UpdateEpilogue.from_sgd(LogSGDConfig(lr=0.0), LNS16)
+    ep = UpdateEpilogue.from_sgd(LogSGDConfig(lr=0.01, momentum=0.9),
+                                 LNS16)
+    w = zeros((3,), LNS16)
+    with pytest.raises(ValueError, match="momentum"):
+        lns_fused_update_kernel(w, w, m=None, epilogue=ep, fmt=LNS16,
+                                spec=DELTA_DEFAULT)
+
+
+# ------------------------------------------------- end-to-end train step
+@pytest.mark.parametrize("spec", ["lns16-train-emulate",
+                                  "lns16-train-pallas",
+                                  "lns16-train-pallas;hidden=fmt:lns12"],
+                         ids=["emulate", "pallas", "mixed-plan"])
+@pytest.mark.parametrize("momentum,wd", [(0.0, 0.0), (0.9, 0.001)],
+                         ids=["sgd", "momentum+decay"])
+def test_fused_training_bitexact_vs_unfused(rng, spec, momentum, wd):
+    """N-step paper-MLP training: the fused one-pass step reproduces the
+    unfused step's weight codes and losses exactly — uniform and
+    mixed-format plans, with and without ⊞-momentum/weight decay."""
+    xb = rng.uniform(0, 1, size=(6, 12)).astype(np.float32)
+    yb = rng.integers(0, 4, size=(6,))
+    runs = {}
+    for fused in (True, False):
+        cfg = MLPConfig(n_in=12, n_hidden=9, n_out=4, spec=spec,
+                        matmul_block=8, fused=fused, momentum=momentum,
+                        weight_decay=wd)
+        model = make_mlp("lns", cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        mom = model.init_momentum(params)
+        losses = []
+        for _ in range(3):
+            out = model.train_step(params, xb, yb, mom)
+            if mom is None:
+                params, loss = out
+            else:
+                params, mom, loss = out
+            losses.append(float(loss))
+        runs[fused] = (params, losses)
+    pf, lf = runs[True]
+    pu, lu = runs[False]
+    assert lf == lu
+    for k in pf:
+        _eq(pf[k].code, pu[k].code, k)
+        _eq(pf[k].sign, pu[k].sign, k)
