@@ -18,6 +18,13 @@ reported but never fail the gate (new ops appear, old ones retire);
 vanished) to failures.  Improvements are printed so wins land in the CI
 log next to the numbers that prove them.
 
+The serving engine rides the same gate: tier-1 CI runs
+``serve_bench.py --micro`` and compares against
+``baselines/serve.json`` with ``--normalize --gate-ops
+serve_throughput`` — only the end-to-end throughput rows (one per
+offered-load ``mode``) gate hard; decode/prefill micro rows report drift
+only.
+
 Interpret-mode wall times are noisy; a 20% per-row threshold plus the
 matched-pair discipline is deliberately coarse — this gate catches "the
 fused path silently fell off a cliff", not single-digit drift.  When the
@@ -36,9 +43,16 @@ import sys
 
 
 def row_key(row: dict) -> tuple:
-    """Identity of a bench row: configuration, not measurement."""
+    """Identity of a bench row: configuration, not measurement.
+
+    ``mode`` distinguishes same-shape rows swept over a workload knob
+    (serve_bench's offered-load sweep emits one ``serve_throughput`` row
+    per ``loadN`` mode); rows without it collapse to ``"-"`` so kernel
+    JSONs are unaffected.
+    """
     return (row.get("op"), row.get("shape"), row.get("spec"),
-            row.get("backend"), row.get("devices", 1))
+            row.get("backend"), row.get("devices", 1),
+            row.get("mode", "-"))
 
 
 def load_rows(path: str, normalize: bool = False) -> dict:
@@ -100,8 +114,9 @@ def compare(current: dict, baseline: dict, threshold: float):
 
 
 def _fmt_key(key: tuple) -> str:
-    op, shape, spec, backend, devices = key
-    return f"{op}/{backend}/{shape} [{spec}] x{devices}"
+    op, shape, spec, backend, devices, mode = key
+    m = "" if mode in ("-", None) else f" mode={mode}"
+    return f"{op}/{backend}/{shape} [{spec}] x{devices}{m}"
 
 
 def main(argv=None) -> int:

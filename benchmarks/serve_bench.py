@@ -1,0 +1,201 @@
+"""Serving engine benchmark: throughput / latency vs offered load.
+
+Drives :class:`repro.serve.ServingEngine` (chunked prefill + paged KV
+cache + continuous batching) over an offered-load sweep and emits
+``BENCH_serve.json`` in the shared bench-row schema so
+``compare_bench.py`` gates it against ``benchmarks/baselines/serve.json``.
+
+Rows (identity = ``(op, shape, spec, backend, devices, mode)``):
+
+* ``serve_throughput`` (mode ``loadN``) — wall ms per *generated* token
+  for N requests offered at once; carries ``tok_per_s``, per-request
+  latency ``p50_ms`` / ``p99_ms``, and mean ``occupancy`` (busy decode
+  slots per step).  This is the row the CI gate pins.
+* ``serve_decode_step`` — one batched decode step, full batch.
+* ``serve_prefill_chunk`` — one prefill-chunk splice.
+* ``serve_sequential`` — the same request set served one-at-a-time by
+  ``reference_generate`` (the dense token-by-token pre-paged path); its
+  ms-per-token against ``serve_throughput`` is the continuous-batching /
+  chunked-prefill win.
+* ``calibration`` — compute-bound float matmul, the ``--normalize``
+  denominator for cross-machine comparison.
+
+Every ``serve_throughput`` row also records ``stall_steps``: engine steps
+where a prefill ran while admitted decode-ready slots generated nothing.
+Chunked prefill interleaves with decode, so this stays 0 — the
+"prefill no longer stalls decodes" acceptance number.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import NumericsPlan
+from repro.nn import init_params
+from repro.serve import (TERMINAL, ServeConfig, ServingEngine,
+                         reference_generate)
+
+
+def _row(op, shape, backend, ms, note, spec, mode="-", tokens=1, **extra):
+    r = dict(op=op, shape=shape, backend=backend, devices=1,
+             ms_per_step=ms, tok_per_s=tokens / (ms / 1e3) if ms else 0.0,
+             note=note, mode=mode, spec=spec,
+             plan=str(NumericsPlan.parse(spec)))
+    r.update(extra)
+    return r
+
+
+def _mk_prompts(n, vocab, plen, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, vocab, size=int(rng.integers(max(2, plen // 2),
+                                                         plen + 1)))
+            for _ in range(n)]
+
+
+def _drive(engine, prompts, max_new):
+    """Submit all, drain; returns (wall_s, latencies_ms, stall_steps)."""
+    rids = [engine.submit(p, max_new=max_new) for p in prompts]
+    stall = 0
+    t0 = time.perf_counter()
+    while any(engine.poll(r).state not in TERMINAL for r in rids):
+        decoders_before = int(engine.active.sum())
+        d0 = engine.stats["decode_steps"]
+        p0 = engine.stats["prefill_chunks"]
+        engine.step()
+        ran_prefill = engine.stats["prefill_chunks"] > p0
+        ran_decode = engine.stats["decode_steps"] > d0
+        if ran_prefill and decoders_before > 0 and not ran_decode:
+            stall += 1  # a prefill chunk displaced ready decode work
+    wall = time.perf_counter() - t0
+    lats = [1e3 * (engine.poll(r).finish_time - engine.poll(r).submit_time)
+            for r in rids]
+    return wall, lats, stall
+
+
+def records(arch="qwen3-1.7b", numerics="fp32", micro=False):
+    cfg = reduced(get_config(arch)).with_(numerics=numerics,
+                                          param_dtype="float32",
+                                          remat="none")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if micro:
+        sc = ServeConfig(max_batch=2, max_len=48, block_size=8,
+                         prefill_chunk=8)
+        loads, max_new, plen = [2, 6], 8, 12
+    else:
+        sc = ServeConfig(max_batch=4, max_len=96, block_size=16,
+                         prefill_chunk=16)
+        loads, max_new, plen = [2, 8, 24], 16, 24
+    shape = f"b{sc.max_batch}xl{sc.max_len}x{cfg.d_model}"
+    rows = []
+
+    # Warm the compiled graphs once so the load sweep times steady-state
+    # serving, not tracing.
+    warm = ServingEngine(cfg, params, sc)
+    warm.run(_mk_prompts(2, cfg.vocab_size, plen, seed=9), max_new=2)
+
+    seq_prompts = _mk_prompts(loads[0], cfg.vocab_size, plen, seed=1)
+    for load in loads:
+        prompts = _mk_prompts(load, cfg.vocab_size, plen, seed=1)
+        engine = ServingEngine(cfg, params, sc)
+        wall, lats, stall = _drive(engine, prompts, max_new)
+        toks = engine.stats["tokens_generated"]
+        rows.append(_row(
+            "serve_throughput", shape, "engine", wall * 1e3 / max(toks, 1),
+            f"{load} requests offered at once, {toks} tokens generated",
+            numerics, mode=f"load{load}", tokens=1,
+            p50_ms=float(np.percentile(lats, 50)),
+            p99_ms=float(np.percentile(lats, 99)),
+            occupancy=round(engine.occupancy, 3), stall_steps=stall,
+            requests=load))
+
+    # Micro rows: one steady-state decode step / prefill chunk.
+    engine = ServingEngine(cfg, params, sc)
+    rids = [engine.submit(p, max_new=max_new)
+            for p in _mk_prompts(sc.max_batch, cfg.vocab_size, plen,
+                                 seed=2)]
+    while int(engine.active.sum()) < min(sc.max_batch, len(rids)):
+        engine.step()
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        engine._decode_active()
+        best = min(best, time.perf_counter() - t0)
+    rows.append(_row("serve_decode_step", shape, "engine", best * 1e3,
+                     f"one batched decode step, {sc.max_batch} slots",
+                     numerics, tokens=sc.max_batch))
+
+    engine = ServingEngine(cfg, params, sc)
+    engine.submit(np.full((sc.max_len - max_new,), 5, np.int32),
+                  max_new=2)
+    engine._refill()
+    best = float("inf")
+    for _ in range(3):
+        req = [r for r in engine.slot_req if r is not None][0]
+        req.prefill_pos = 0  # re-splice the same chunk
+        t0 = time.perf_counter()
+        engine._prefill_one()
+        best = min(best, time.perf_counter() - t0)
+    rows.append(_row("serve_prefill_chunk", shape, "engine", best * 1e3,
+                     f"one {sc.prefill_chunk}-token chunk splice",
+                     numerics, tokens=sc.prefill_chunk))
+
+    # Sequential dense reference: same requests, one at a time, token by
+    # token — the pre-paged serving path.
+    t0 = time.perf_counter()
+    seq_toks = 0
+    for i, p in enumerate(seq_prompts):
+        out = reference_generate(cfg, params, p, max_new,
+                                 max_len=sc.max_len)
+        seq_toks += len(out)
+    seq_wall = time.perf_counter() - t0
+    rows.append(_row("serve_sequential", shape, "dense-reference",
+                     seq_wall * 1e3 / max(seq_toks, 1),
+                     f"{len(seq_prompts)} requests token-by-token, no "
+                     f"batching (pre-paged path)", numerics, tokens=1))
+
+    c = np.random.default_rng(0).normal(size=(1024, 1024)).astype(np.float32)
+    mm = jax.jit(jnp.matmul)
+    jax.block_until_ready(mm(c, c))
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(mm(c, c))
+        best = min(best, time.perf_counter() - t0)
+    rows.append(_row("calibration", "1024x1024x1024", "float", best * 1e3,
+                     "machine-speed reference (compare_bench --normalize "
+                     "denominator)", "fp32", tokens=1024))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--numerics", default="fp32")
+    ap.add_argument("--micro", action="store_true",
+                    help="2-slot micro config for the CI tier-1 smoke row")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    rows = records(args.arch, args.numerics, args.micro)
+    with open(args.out, "w") as f:
+        json.dump({"benchmark": "serve", "rows": rows}, f, indent=1)
+    for r in rows:
+        extra = ""
+        if r["op"] == "serve_throughput":
+            extra = (f" p50={r['p50_ms']:.0f}ms p99={r['p99_ms']:.0f}ms "
+                     f"occ={r['occupancy']} stall={r['stall_steps']}")
+        print(f"serve/{r['op']}_{r['mode']}_{r['shape']},"
+              f"{r['ms_per_step']:.2f}ms,{r['note']}{extra}")
+    stalls = [r["stall_steps"] for r in rows if r["op"] == "serve_throughput"]
+    print(f"[serve_bench] wrote {len(rows)} rows to {args.out}; "
+          f"prefill stall steps across loads: {stalls}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -170,3 +170,54 @@ print(f"fused step,   blocks=auto      : {after:6.0f} ms "
 print("(interpret-mode timings late in a busy process understate the "
       "win; benchmarks/kernel_bench.py measures the same rows in a "
       "fresh process — see the train_step rows in BENCH_kernels.json)")
+
+print("\n=== 7. Serving: chunked prefill + paged KV cache + batching ===")
+# The serving engine turns max_len into a *token budget* over fixed-size
+# KV blocks: each layer holds a pool of num_blocks physical blocks of
+# block_size positions, a per-slot block table maps logical -> physical,
+# and block 0 is the reserved null write sink.  Budget math:
+#   blocks/request = ceil(min(max_len, prompt + max_new) / block_size)
+# reserved in full at admission, so an admitted request never OOMs
+# mid-flight.  Prompts are spliced in prefill_chunk-token chunks by a
+# dedicated jitted graph — at most one chunk per engine step, so a long
+# prompt never stalls concurrent decodes.  Greedy outputs are
+# bit-identical to the dense token-by-token reference (pinned in
+# tests/test_serve_engine.py).
+from repro.nn import init_params
+from repro.nn.config import ModelConfig
+from repro.serve import ServeConfig, ServingEngine, TERMINAL
+
+_scfg = ModelConfig(name="qs-serve", family="dense", n_layers=2,
+                    d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                    vocab_size=64, d_head=16, vocab_pad_to=64,
+                    numerics="fp32", param_dtype="float32", remat="none",
+                    q_chunk=8)
+_sp = init_params(jax.random.PRNGKey(0), _scfg)
+_sc = ServeConfig(max_batch=2, max_len=24, block_size=4, prefill_chunk=4)
+engine = ServingEngine(_scfg, _sp, _sc)
+print(f"pool: {engine.bm.capacity} blocks x {_sc.block_size} lines "
+      f"= {engine.bm.capacity * _sc.block_size}-token budget "
+      f"({_sc.max_batch} slots x max_len {_sc.max_len})")
+
+# Async surface: submit() -> rid immediately; step() advances admission,
+# one prefill chunk, and one batched decode; poll(rid) reads state.
+_rng = np.random.default_rng(0)
+rids = [engine.submit(_rng.integers(3, 64, size=n), max_new=4,
+                      deadline_steps=50) for n in (5, 7, 3)]
+while any(engine.poll(r).state not in TERMINAL for r in rids):
+    engine.step()
+for r in rids:
+    req = engine.poll(r)
+    blocks = engine.bm.blocks_for(min(_sc.max_len,
+                                      req.prompt_len + req.max_new))
+    print(f"  rid {r}: {req.state} prompt={req.prompt_len} "
+          f"reserved {blocks} blocks -> {list(req.output)}")
+engine.bm.check_conserved()   # free-list conservation: no leaks
+print(f"occupancy {engine.occupancy:.2f}/{_sc.max_batch} slots, "
+      f"{engine.stats['prefill_chunks']} prefill chunks, "
+      f"{engine.bm.available}/{engine.bm.capacity} blocks free again")
+# Decode/prefill matmuls run the runtime's *inference* dispatch: on
+# kernel-path specs that is matmul_fused (the fused forward-epilogue
+# surface from §6) — bit-identical to the training forward by the
+# fusion contract, one launch per matmul instead of kernel + epilogues.
+print(f"numerics (fused-infer dispatch): {engine.matmul_path}")

@@ -1,8 +1,15 @@
-"""Batched serving with continuous batching (KV-cache slots).
+"""Batched serving: chunked prefill + paged KV cache + continuous batching.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch yi-6b
 (reduced-config model; the full configs serve identically on TPU meshes —
-see repro/launch/dryrun.py decode cells for the production lowering.)
+the ``decode_32k`` dry-run cell in repro/launch/dryrun.py lowers this
+exact paged decode graph on the production mesh.)
+
+Prompts are spliced into the paged cache a chunk at a time (at most one
+chunk per engine step, so prefills never stall concurrent decodes);
+finished slots refill from the admission queue without draining the
+batch.  See examples/quickstart.py §7 for the async submit/poll surface
+and the paged-cache budget math.
 
 The matmul path is selected by ``--numerics`` — a ``NumericsSpec`` alias
 or spec string resolved once by the engine into an
@@ -36,6 +43,10 @@ def main(argv=None):
                     "lns16-exact | lns16-exact-pallas (the kernel path; "
                     "slower on CPU where the Pallas interpreter runs the "
                     "kernels) | 'lns16-exact,backend=pallas' | ...")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV lines per paged-cache block")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prompt tokens spliced per prefill chunk")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch)).with_(numerics=args.numerics,
@@ -44,7 +55,9 @@ def main(argv=None):
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_batch=3, max_len=40,
-                                       temperature=args.temperature))
+                                       temperature=args.temperature,
+                                       block_size=args.block_size,
+                                       prefill_chunk=args.chunk))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(3, cfg.vocab_size, size=rng.integers(4, 12))
                for _ in range(args.requests)]
@@ -56,6 +69,9 @@ def main(argv=None):
     n = sum(len(o) for o in outs)
     print(f"[serve] {args.requests} requests, {n} new tokens, "
           f"{n/dt:.1f} tok/s (continuous batching over 3 slots)")
+    print(f"[serve] occupancy {engine.occupancy:.2f}/3 slots, "
+          f"{engine.stats['prefill_chunks']} prefill chunks, "
+          f"{engine.bm.available}/{engine.bm.capacity} blocks free")
     print(f"[serve] numerics spec: {engine.numerics.spec}")
     print(f"[serve] batch served by: {engine.matmul_path}")
     return outs

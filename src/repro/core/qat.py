@@ -113,3 +113,22 @@ def _dd_bwd(be, res, g):
 
 
 lns_dot_dispatch.defvjp(_dd_fwd, _dd_bwd)
+
+
+def lns_dot_fused(x, w, be: LNSMatmulBackend):
+    """(..., K) @ (K, N) forward-only through the *fused* kernel surface.
+
+    The serving twin of :func:`lns_dot_dispatch`: the product goes through
+    :meth:`~repro.core.lns.LNSMatmulBackend.matmul_fused` (PR 5's
+    flush-time-epilogue kernel, here with an empty epilogue) so decode and
+    prefill matmuls ride the single-pass fused launch instead of the plain
+    kernel + separate decode composition.  Bit-identical to
+    ``lns_dot_dispatch`` by the fusion contract (fused ≡ unfused on both
+    backends); inference-only — there is no VJP, gradients must use
+    ``lns_matmul_trainable`` / ``lns_dot_dispatch``.
+    """
+    fmt = be.fmt
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    z = be.matmul_fused(encode(x2, fmt), encode(w, fmt))
+    return decode(z, fmt).reshape(lead + (w.shape[-1],))

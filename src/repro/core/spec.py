@@ -627,6 +627,27 @@ class LNSRuntime:
             return lns_dot_exact(x, w, s.fmt, s.delta_spec)
         return jnp.matmul(self.q_act(x), self.q_param(w))
 
+    def linear_infer(self, x, w):
+        """Forward-only :meth:`linear` for serving (decode / prefill).
+
+        Bit-identical to :meth:`linear`'s forward on every spec, but
+        Δ-spec'd numerics with a kernel path route through the *fused*
+        forward-epilogue backend surface
+        (:meth:`~repro.core.lns.LNSMatmulBackend.matmul_fused` — one
+        flush-time launch, no custom_vjp machinery resident).  The
+        emulate-backend exact mode keeps :meth:`linear`'s pairwise-tree
+        ``lns_dot_exact`` (there is no kernel to fuse, and changing the
+        reduction order would change results).  No gradient path —
+        training must use :meth:`linear`.
+        """
+        s = self.spec
+        if s.delta_spec is None:
+            return jnp.matmul(self.q_act(x), self.q_param(w))
+        if s.quantize_grads or s.backend != "emulate":
+            from .qat import lns_dot_fused
+            return lns_dot_fused(x, w, self.matmul)
+        return self.linear(x, w)
+
     @property
     def matmul_path(self) -> str:
         """Human-readable description of the path :meth:`linear` takes.
@@ -639,6 +660,18 @@ class LNSRuntime:
             return f"float XLA matmul ({s.compute_dtype})"
         if s.quantize_grads or s.backend != "emulate":
             return f"LNS ⊞-MAC via LNSMatmulBackend(backend='{s.backend}')"
+        return "LNS ⊞-MAC via lns_dot_exact (emulated, pairwise-tree order)"
+
+    @property
+    def infer_path(self) -> str:
+        """Description of the path :meth:`linear_infer` takes (serving)."""
+        s = self.spec
+        if s.delta_spec is None:
+            return f"float XLA matmul ({s.compute_dtype})"
+        if s.quantize_grads or s.backend != "emulate":
+            return (f"LNS ⊞-MAC via matmul_fused "
+                    f"(fused forward-epilogue surface, "
+                    f"backend='{s.backend}')")
         return "LNS ⊞-MAC via lns_dot_exact (emulated, pairwise-tree order)"
 
     # -- legacy NumericsPolicy surface ------------------------------------

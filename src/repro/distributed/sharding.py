@@ -97,14 +97,32 @@ def batch_specs(batch, data_axes=("data",)) -> "pytree[P]":
     return jax.tree.map(one, batch)
 
 
-def cache_specs(caches, data_axes=("data",), model_axis="model"):
+def cache_specs(caches, data_axes=("data",), model_axis="model",
+                paged: bool = False):
     data_axes = tuple(data_axes) or None
     """Decode caches: batch over data; heads (4D+) over model.
 
     Layouts: GQA KV (L,B,S,KV,hd) → heads on model; MLA latents (L,B,S,r)
     and SSM conv (L,B,K,C) → last dim on model; SSM state (L,B,H,P,N) →
     heads on model; enc_out (B,S,d) → batch only.
+
+    ``paged=True`` switches to the serving pool layout (no batch dim —
+    blocks are a shared pool addressed by replicated per-slot block
+    tables): GQA pages (L,NB,bs,KV,hd) / MLA pages (L,NB,bs,r) shard the
+    *within-block* dim ``bs`` over model — the flash-decoding split of
+    the dense layout's sequence sharding, and the only dim with a
+    guaranteed model-divisible extent (NB varies with the token budget,
+    KV-head counts can undershoot the axis).
     """
+    if paged:
+        def one_paged(_path, leaf):
+            nd = leaf.ndim
+            if nd == 5:                       # GQA pages (L,NB,bs,KV,hd)
+                return P(None, None, model_axis, None, None)
+            if nd == 4:                       # MLA pages (L,NB,bs,r)
+                return P(None, None, model_axis, None)
+            return P()
+        return jax.tree_util.tree_map_with_path(one_paged, caches)
     def one(path, leaf):
         ps = _path_str(path)
         nd = leaf.ndim

@@ -34,7 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, get_config
 from ..distributed.sharding import (batch_specs, cache_specs, param_specs)
-from ..nn import Runtime, decode_step, init_decode_caches, init_params
+from ..nn import (PAGED_FAMILIES, Runtime, decode_step, decode_step_paged,
+                  init_decode_caches, init_paged_caches, init_params)
 from ..nn.config import SHAPE_CELLS, HybridConfig, ModelConfig, ShapeCell
 from ..nn.model import loss_fn, prefill
 from ..optim.optimizers import AdamWConfig
@@ -163,13 +164,40 @@ def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, *,
         return fn, (params_shape, batch), (pshard, _shardings(mesh, bspecs)), ()
     # decode
     enc_len = cell.seq_len if scfg.family in ("encdec", "audio") else None
+    d = decode_struct(scfg, cell, abstract=True)
+    tok_s = NamedSharding(mesh, P(daxes, None))
+    pos_s = NamedSharding(mesh, P(daxes))
+    if cell.name == "decode_32k" and scfg.family in PAGED_FAMILIES:
+        # The decode_32k cell lowers the *serving* data plane — the same
+        # paged graph the ServingEngine drives: a shared pool of
+        # fixed-size KV blocks, per-slot block tables, an active-slot
+        # mask.  long_500k (sub-quadratic families only) keeps the dense
+        # recurrent-state path — SSM state is O(1) per slot, nothing to
+        # page.
+        b = cell.global_batch
+        blk = 128                       # model-axis-divisible block size
+        w = -(-cell.seq_len // blk)
+        nb = 1 + b * w                  # full-occupancy pool + null block
+        caches_shape = jax.eval_shape(
+            lambda: init_paged_caches(scfg, nb, blk, jnp.bfloat16))
+        cspecs = cache_specs(caches_shape, daxes, paged=True)
+        bt = jax.ShapeDtypeStruct((b, w), jnp.int32)
+        active = jax.ShapeDtypeStruct((b,), jnp.bool_)
+        bt_s = NamedSharding(mesh, P(daxes, None))
+
+        def pfn(params, tok, caches, bt, pos, active):
+            return decode_step_paged(params, tok, caches, bt, pos, active,
+                                     scfg, rt)
+
+        return (pfn,
+                (params_shape, d["tok"], caches_shape, bt, d["pos"],
+                 active),
+                (pshard, tok_s, _shardings(mesh, cspecs), bt_s, pos_s,
+                 pos_s), (2,))
     caches_shape = jax.eval_shape(
         lambda: init_decode_caches(scfg, cell.global_batch, cell.seq_len,
                                    jnp.bfloat16, enc_len=enc_len))
     cspecs = cache_specs(caches_shape, daxes)
-    d = decode_struct(scfg, cell, abstract=True)
-    tok_s = NamedSharding(mesh, P(daxes, None))
-    pos_s = NamedSharding(mesh, P(daxes))
 
     def fn(params, tok, caches, pos):
         return decode_step(params, tok, caches, pos, scfg, rt)

@@ -24,15 +24,23 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--numerics", default="fp32",
+                    help="NumericsSpec alias / spec / plan string")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV lines per paged-cache block")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prompt tokens spliced per prefill chunk")
     args = ap.parse_args(argv)
 
-    cfg = reduced(get_config(args.arch)).with_(numerics="fp32",
+    cfg = reduced(get_config(args.arch)).with_(numerics=args.numerics,
                                                param_dtype="float32",
                                                remat="none")
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     sc = ServeConfig(max_batch=args.max_batch,
                      max_len=args.prompt_len + args.max_new + 2,
-                     temperature=args.temperature, seed=args.seed)
+                     temperature=args.temperature, seed=args.seed,
+                     block_size=args.block_size,
+                     prefill_chunk=args.chunk)
     engine = ServingEngine(cfg, params, sc)
 
     rng = np.random.default_rng(args.seed)
@@ -47,6 +55,11 @@ def main(argv=None):
         print(f"[serve] req {i}: prompt_len={len(prompts[i])} → {o}")
     print(f"[serve] {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s batched)")
+    print(f"[serve] occupancy {engine.occupancy:.2f}/{sc.max_batch} slots, "
+          f"{engine.stats['prefill_chunks']} prefill chunks, "
+          f"{engine.stats['decode_steps']} decode steps, "
+          f"{engine.bm.available}/{engine.bm.capacity} blocks free")
+    print(f"[serve] matmul path: {engine.matmul_path}")
     return outs
 
 

@@ -2,10 +2,12 @@
 hybrid/enc-dec assembly — all numerics-policy aware (LNS modes plug in)."""
 from .config import (EncDecConfig, HybridConfig, MLAConfig, ModelConfig,
                      MoEConfig, SHAPE_CELLS, ShapeCell, SSMConfig)
-from .model import (Runtime, decode_step, init_decode_caches, init_params,
-                    loss_fn, prefill)
+from .model import (PAGED_FAMILIES, Runtime, decode_step, decode_step_paged,
+                    init_decode_caches, init_paged_caches, init_params,
+                    loss_fn, prefill, prefill_chunk)
 
 __all__ = ["EncDecConfig", "HybridConfig", "MLAConfig", "ModelConfig",
-           "MoEConfig", "SHAPE_CELLS", "ShapeCell", "SSMConfig", "Runtime",
-           "decode_step", "init_decode_caches", "init_params", "loss_fn",
-           "prefill"]
+           "MoEConfig", "PAGED_FAMILIES", "SHAPE_CELLS", "ShapeCell",
+           "SSMConfig", "Runtime", "decode_step", "decode_step_paged",
+           "init_decode_caches", "init_paged_caches", "init_params",
+           "loss_fn", "prefill", "prefill_chunk"]

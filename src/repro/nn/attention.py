@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from ..core.numerics import NumericsPolicy
 from .config import ModelConfig
 from .layers import apply_rope, rms_head_norm
+from .paged import paged_gather, paged_write_chunk, paged_write_token
 
 
 class KVCache(NamedTuple):
@@ -172,6 +173,60 @@ def gqa_decode(p, x, cfg: ModelConfig, pol: NumericsPolicy, cache: KVCache,
     return pol.linear(o, p["wo"]), KVCache(k, v)
 
 
+# --------------------------------------------------------- paged GQA -----
+def gqa_decode_paged(p, x, cfg: ModelConfig, pol: NumericsPolicy,
+                     cache: KVCache, bt, pos, active
+                     ) -> tuple[jax.Array, KVCache]:
+    """One-token batched decode against a paged (block) KV cache.
+
+    cache arrays: (NB, bs, KV, hd) shared page pool; bt: (B, W) block
+    tables; pos: (B,) logical positions; active: (B,) bool — inactive
+    slots write to the null block and their outputs carry no meaning.
+    Attention runs over the gathered (B, W·bs) logical view with the same
+    length mask as the dense path, so unallocated pages contribute
+    exactly-zero softmax weight.
+    """
+    b, _, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q, k_new, v_new = gqa_qkv(p, x, cfg, pol, pos[:, None])
+    k_pages = paged_write_token(cache.k, bt, pos, k_new[:, 0], active)
+    v_pages = paged_write_token(cache.v, bt, pos, v_new[:, 0], active)
+    k = paged_gather(k_pages, bt)                   # (B, W·bs, KV, hd)
+    v = paged_gather(v_pages, bt)
+    smax = k.shape[1]
+    qg = q.reshape(b, 1, kv, h // kv, hd)
+    mask = (jnp.arange(smax)[None, :] <= pos[:, None])[:, None, None, None]
+    o = _sdpa_block(qg, k, v, hd ** -0.5, mask).reshape(b, 1, h * hd)
+    return pol.linear(o, p["wo"]), KVCache(k_pages, v_pages)
+
+
+def gqa_prefill_paged(p, x, cfg: ModelConfig, pol: NumericsPolicy,
+                      cache: KVCache, bt_row, pos_base, n_valid
+                      ) -> tuple[jax.Array, KVCache]:
+    """Chunked-prefill attention for ONE slot: splice then attend.
+
+    x: (1, C, d) — a prompt chunk at logical positions ``pos_base +
+    arange(C)`` (entries ≥ ``n_valid`` are padding so every chunk reuses
+    one compiled graph).  The chunk's K/V lines are written directly into
+    the slot's pages (no per-token decode loop), then the C queries attend
+    causally over the gathered logical view — which already contains every
+    previous chunk's lines, so cross-chunk attention needs no extra state.
+    """
+    _, c, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    lpos = pos_base + jnp.arange(c)
+    q, k_new, v_new = gqa_qkv(p, x, cfg, pol, lpos[None])
+    k_pages = paged_write_chunk(cache.k, bt_row, pos_base, k_new[0], n_valid)
+    v_pages = paged_write_chunk(cache.v, bt_row, pos_base, v_new[0], n_valid)
+    k = paged_gather(k_pages, bt_row[None])         # (1, W·bs, KV, hd)
+    v = paged_gather(v_pages, bt_row[None])
+    smax = k.shape[1]
+    qg = q.reshape(1, c, kv, h // kv, hd)
+    mask = (jnp.arange(smax)[None, :] <= lpos[:, None])[None, None, None]
+    o = _sdpa_block(qg, k, v, hd ** -0.5, mask).reshape(1, c, h * hd)
+    return pol.linear(o, p["wo"]), KVCache(k_pages, v_pages)
+
+
 # ------------------------------------------------------------- MLA -------
 def init_mla(key, cfg: ModelConfig, dtype):
     m = cfg.mla
@@ -237,22 +292,19 @@ def mla_attention(p, x, cfg: ModelConfig, pol: NumericsPolicy,
     return pol.linear(o, p["wo"]), KVCache(c_kv, k_pe)
 
 
-def mla_decode(p, x, cfg: ModelConfig, pol: NumericsPolicy, cache: KVCache,
-               pos) -> tuple[jax.Array, KVCache]:
-    """Absorbed one-token MLA decode on the latent cache.
+def _mla_absorbed(p, x, cfg: ModelConfig, pol: NumericsPolicy, ck, kpe,
+                  positions, mask):
+    """Absorbed MLA attention of (B, Q, d) queries over latent caches.
 
-    cache.k: (B, S, lora) compressed latents; cache.v: (B, S, rope) k_pe.
-    Per-step attention cost is O(S·(lora+rope)) per head — the MLA win.
+    ck: (B, S, lora) compressed latents; kpe: (B, S, rope) positional
+    keys; mask: bool broadcastable to (B, H, Q, S).  Per-query cost is
+    O(S·(lora+rope)) per head — the MLA win; shared by one-token decode
+    (Q=1, length mask) and chunked prefill (Q=C, causal mask).
     """
     m = cfg.mla
-    b = x.shape[0]
+    b, qn = x.shape[0], x.shape[1]
     h = cfg.n_heads
-    c_new, pe_new = _mla_latents(p, x, cfg, pol, pos[:, None])
-    smax = cache.k.shape[1]
-    arange = jnp.arange(smax)[None, :, None]
-    ck = jnp.where(arange == pos[:, None, None], c_new, cache.k)
-    kpe = jnp.where(arange == pos[:, None, None], pe_new, cache.v)
-    q_nope, q_pe = _mla_q(p, x, cfg, pol, pos[:, None])
+    q_nope, q_pe = _mla_q(p, x, cfg, pol, positions)
     w_ukv = pol.q_param(p["w_ukv"]).reshape(
         m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim)
     w_uk = w_ukv[..., :m.nope_head_dim]             # (lora, H, nope)
@@ -261,12 +313,70 @@ def mla_decode(p, x, cfg: ModelConfig, pol: NumericsPolicy, cache: KVCache,
     sc = jnp.einsum("bqhl,bsl->bhqs", q_lat, ck)
     sc = sc + jnp.einsum("bqhr,bsr->bhqs", q_pe, kpe)
     sc = sc.astype(jnp.float32) * (m.nope_head_dim + m.rope_head_dim) ** -0.5
-    valid = (jnp.arange(smax)[None, :] <= pos[:, None])[:, None, None, :]
-    sc = jnp.where(valid, sc, jnp.float32(-1e30))
+    sc = jnp.where(mask, sc, jnp.float32(-1e30))
     pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhqs,bsl->bqhl", pr, ck)
-    o = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv).reshape(b, 1, -1)
-    return pol.linear(o, p["wo"]), KVCache(ck, kpe)
+    o = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv).reshape(b, qn, -1)
+    return pol.linear(o, p["wo"])
+
+
+def mla_decode(p, x, cfg: ModelConfig, pol: NumericsPolicy, cache: KVCache,
+               pos) -> tuple[jax.Array, KVCache]:
+    """Absorbed one-token MLA decode on the latent cache.
+
+    cache.k: (B, S, lora) compressed latents; cache.v: (B, S, rope) k_pe.
+    """
+    c_new, pe_new = _mla_latents(p, x, cfg, pol, pos[:, None])
+    smax = cache.k.shape[1]
+    arange = jnp.arange(smax)[None, :, None]
+    ck = jnp.where(arange == pos[:, None, None], c_new, cache.k)
+    kpe = jnp.where(arange == pos[:, None, None], pe_new, cache.v)
+    mask = (jnp.arange(smax)[None, :] <= pos[:, None])[:, None, None, :]
+    o = _mla_absorbed(p, x, cfg, pol, ck, kpe, pos[:, None], mask)
+    return o, KVCache(ck, kpe)
+
+
+def mla_decode_paged(p, x, cfg: ModelConfig, pol: NumericsPolicy,
+                     cache: KVCache, bt, pos, active
+                     ) -> tuple[jax.Array, KVCache]:
+    """Absorbed one-token MLA decode on paged latent caches.
+
+    cache.k: (NB, bs, lora) latent pages; cache.v: (NB, bs, rope) k_pe
+    pages; bt/pos/active as in :func:`gqa_decode_paged`.
+    """
+    c_new, pe_new = _mla_latents(p, x, cfg, pol, pos[:, None])
+    ck_pages = paged_write_token(cache.k, bt, pos, c_new[:, 0], active)
+    pe_pages = paged_write_token(cache.v, bt, pos, pe_new[:, 0], active)
+    ck = paged_gather(ck_pages, bt)                 # (B, W·bs, lora)
+    kpe = paged_gather(pe_pages, bt)
+    smax = ck.shape[1]
+    mask = (jnp.arange(smax)[None, :] <= pos[:, None])[:, None, None, :]
+    o = _mla_absorbed(p, x, cfg, pol, ck, kpe, pos[:, None], mask)
+    return o, KVCache(ck_pages, pe_pages)
+
+
+def mla_prefill_paged(p, x, cfg: ModelConfig, pol: NumericsPolicy,
+                      cache: KVCache, bt_row, pos_base, n_valid
+                      ) -> tuple[jax.Array, KVCache]:
+    """Chunked-prefill MLA for one slot: splice latents, attend absorbed.
+
+    Same contract as :func:`gqa_prefill_paged`; the chunk's compressed
+    latents + positional keys are written straight into the slot's pages
+    and the C queries run the absorbed attention causally over them.
+    """
+    _, c, _ = x.shape
+    lpos = pos_base + jnp.arange(c)
+    c_new, pe_new = _mla_latents(p, x, cfg, pol, lpos[None])
+    ck_pages = paged_write_chunk(cache.k, bt_row, pos_base, c_new[0],
+                                 n_valid)
+    pe_pages = paged_write_chunk(cache.v, bt_row, pos_base, pe_new[0],
+                                 n_valid)
+    ck = paged_gather(ck_pages, bt_row[None])       # (1, W·bs, lora)
+    kpe = paged_gather(pe_pages, bt_row[None])
+    smax = ck.shape[1]
+    mask = (jnp.arange(smax)[None, :] <= lpos[:, None])[None, None]
+    o = _mla_absorbed(p, x, cfg, pol, ck, kpe, lpos[None], mask)
+    return o, KVCache(ck_pages, pe_pages)
 
 
 def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
@@ -279,3 +389,23 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return KVCache(
         jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
         jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype))
+
+
+def make_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype):
+    """Empty per-layer *paged* KV cache: a shared pool of KV blocks.
+
+    Capacity is a token budget (``num_blocks · block_size`` lines, block 0
+    reserved as the null sink) rather than a dense (B, max_len)
+    allocation; slots map into it via block tables (see ``nn/paged.py``).
+    """
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        return KVCache(
+            jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
+            jnp.zeros((num_blocks, block_size, m.rope_head_dim), dtype))
+    return KVCache(
+        jnp.zeros((num_blocks, block_size, cfg.n_kv_heads, cfg.d_head),
+                  dtype),
+        jnp.zeros((num_blocks, block_size, cfg.n_kv_heads, cfg.d_head),
+                  dtype))

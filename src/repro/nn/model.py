@@ -32,8 +32,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core.numerics import get_plan
-from .attention import (KVCache, gqa_attention, gqa_decode, init_gqa,
-                        init_mla, make_cache, mla_attention, mla_decode)
+from .attention import (KVCache, gqa_attention, gqa_decode,
+                        gqa_decode_paged, gqa_prefill_paged, init_gqa,
+                        init_mla, make_cache, make_paged_cache,
+                        mla_attention, mla_decode, mla_decode_paged,
+                        mla_prefill_paged)
 from .config import ModelConfig
 from .layers import (apply_mlp, apply_norm, chunked_ce_loss, embed_tokens,
                      init_embeddings, init_mlp, init_norm, lm_logits)
@@ -732,3 +735,248 @@ def decode_step(params, tok, caches, pos, cfg: ModelConfig,
     x = apply_norm(params["final_norm"], x, cfg)
     return lm_logits(params["emb"], x, plan.runtime_for("head"), cfg), \
         new_caches
+
+
+# ------------------------------------------------- paged serving ---------
+#: Families the paged serving data plane supports: every per-layer cache
+#: is a KVCache growing along the sequence dim.  SSM/hybrid state caches
+#: are O(1) per slot (nothing to page) and enc-dec carries a static
+#: cross-attention memory; those families serve via the dense reference
+#: path (``repro.serve.engine.reference_generate``).
+PAGED_FAMILIES = ("dense", "vlm", "moe")
+
+
+class _InferPol:
+    """Serving view of a layer's numerics runtime.
+
+    Matmuls route through ``LNSRuntime.linear_infer`` — the fused
+    forward-epilogue backend surface (``matmul_fused``) for Δ-spec'd
+    kernel paths, bit-identical to ``linear``'s forward — so decode and
+    prefill ride PR 5's one-pass kernels without the custom_vjp machinery
+    training needs.  Everything else forwards to the wrapped runtime.
+    """
+
+    __slots__ = ("rt",)
+
+    def __init__(self, rt):
+        self.rt = rt
+
+    def linear(self, x, w):
+        return self.rt.linear_infer(x, w)
+
+    def q_param(self, w):
+        return self.rt.q_param(w)
+
+    def q_act(self, x):
+        return self.rt.q_act(x)
+
+    @property
+    def dtype(self):
+        return self.rt.dtype
+
+    @property
+    def name(self):
+        return self.rt.name
+
+
+def _infer_pols(bp: BlockPols) -> BlockPols:
+    return BlockPols(**{
+        f.name: (_InferPol(v) if v is not None else None)
+        for f in dataclasses.fields(BlockPols)
+        for v in [getattr(bp, f.name)]})
+
+
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      dtype=jnp.bfloat16):
+    """Empty paged decode caches: per-stack page pools, shared block ids.
+
+    Every layer owns ``num_blocks`` physical blocks addressed by ONE
+    block-table space (a slot's logical block *i* lives at the same
+    physical id in every layer) — allocation happens once per logical
+    block, in the serve-layer :class:`~repro.serve.paged_cache.BlockManager`.
+    """
+    fam = cfg.family
+    if fam not in PAGED_FAMILIES:
+        raise ValueError(
+            f"family {fam!r} has no paged KV cache (supported: "
+            f"{PAGED_FAMILIES}); serve it via the dense path "
+            f"(init_decode_caches / reference_generate)")
+
+    def stack(n):
+        one = make_paged_cache(cfg, num_blocks, block_size, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape),
+                            one)
+
+    if fam == "moe":
+        fd = cfg.moe.first_dense_layers
+        return {"dense_layers": stack(max(fd, 1)),
+                "layers": stack(max(cfg.layers - fd, 1))}
+    return {"layers": stack(cfg.layers)}
+
+
+def _attn_dec_paged(lp, x, cfg, pol, cache, bt, pos, active):
+    if cfg.attn_kind == "mla":
+        return mla_decode_paged(lp, x, cfg, pol, cache, bt, pos, active)
+    return gqa_decode_paged(lp, x, cfg, pol, cache, bt, pos, active)
+
+
+def _attn_prefill_paged(lp, x, cfg, pol, cache, bt_row, pos_base, n_valid):
+    if cfg.attn_kind == "mla":
+        return mla_prefill_paged(lp, x, cfg, pol, cache, bt_row, pos_base,
+                                 n_valid)
+    return gqa_prefill_paged(lp, x, cfg, pol, cache, bt_row, pos_base,
+                             n_valid)
+
+
+def _dense_block_decode_paged(lp, x, cfg, bp: BlockPols, cache, bt, pos,
+                              active):
+    if cfg.block_style == "parallel":
+        h = apply_norm(lp["norm1"], x, cfg)
+        a, cache = _attn_dec_paged(lp["attn"], h, cfg, bp.attn, cache, bt,
+                                   pos, active)
+        x = x + _res(x, a) + _res(x, apply_mlp(lp["mlp"], h, cfg, bp.mlp))
+    else:
+        a, cache = _attn_dec_paged(lp["attn"],
+                                   apply_norm(lp["norm1"], x, cfg), cfg,
+                                   bp.attn, cache, bt, pos, active)
+        x = x + _res(x, a)
+        x = x + _res(x, apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg),
+                                  cfg, bp.mlp))
+    return x, cache
+
+
+def decode_step_paged(params, tok, caches, bt, pos, active,
+                      cfg: ModelConfig, rt: Runtime = Runtime()):
+    """One token for every slot against the paged KV cache.
+
+    tok: (B, 1) int32; bt: (B, W) block tables; pos: (B,) int32; active:
+    (B,) bool — inactive slots (free, or mid-prefill) write to the null
+    block and their logits are meaningless.  Matmuls run the fused-infer
+    numerics path (:class:`_InferPol`).  Returns (logits (B, 1, V), new
+    caches).
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(f"decode_step_paged: unsupported family "
+                         f"{cfg.family!r} (supported: {PAGED_FAMILIES})")
+    plan = _model_plan(cfg)
+    x = embed_tokens(params["emb"], tok, _InferPol(plan.runtime_for("emb")),
+                     rt)
+    new_caches = dict(caches)
+
+    def scan_dense(x, stack, cache, prefix):
+        bp = _infer_pols(_block_pols(plan, prefix, "attn", "mlp"))
+
+        def body(h, inp):
+            lp, c = inp
+            return _dense_block_decode_paged(lp, h, cfg, bp, c, bt, pos,
+                                             active)
+
+        return _scan(body, x, (stack, cache), cfg)
+
+    if cfg.family == "moe":
+        x, kv_d = scan_dense(x, params["dense_layers"],
+                             caches["dense_layers"], "dense_layers")
+        new_caches["dense_layers"] = kv_d
+        bp = _infer_pols(_block_pols(plan, "layers", "attn", "moe"))
+
+        def body(h, inp):
+            lp, c = inp
+            a, c2 = _attn_dec_paged(lp["attn"],
+                                    apply_norm(lp["norm1"], h, cfg), cfg,
+                                    bp.attn, c, bt, pos, active)
+            h = h + _res(h, a)
+            y, _ = moe_block(lp["moe"], apply_norm(lp["norm2"], h, cfg),
+                             cfg, bp.moe,
+                             rt.moe_rt if rt.mesh is not None else None)
+            return h + _res(h, y), c2
+
+        x, kv = _scan(body, x, (params["layers"], caches["layers"]), cfg)
+        new_caches["layers"] = kv
+    else:
+        x, kv = scan_dense(x, params["layers"], caches["layers"], "layers")
+        new_caches["layers"] = kv
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["emb"], x,
+                       _InferPol(plan.runtime_for("head")), cfg)
+    return logits, new_caches
+
+
+def prefill_chunk(params, tok, caches, bt_row, pos_base, n_valid,
+                  cfg: ModelConfig, rt: Runtime = Runtime()):
+    """One chunked-prefill step for ONE slot: splice C cache lines, return
+    the logits at the last valid position.
+
+    tok: (1, C) int32 — a prompt chunk at logical positions ``pos_base +
+    arange(C)``, padded beyond ``n_valid`` so every chunk length shares
+    one compiled graph.  KV lines are written directly into the slot's
+    pages (cache splice) — prompt tokens never pass through the batched
+    decode step, so a prefill never stalls other slots' decodes for more
+    than one chunk's compute.  Returns (logits (1, 1, V), new caches);
+    the logits are those of position ``pos_base + n_valid - 1`` (what the
+    first sampled continuation token conditions on).
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(f"prefill_chunk: unsupported family "
+                         f"{cfg.family!r} (supported: {PAGED_FAMILIES})")
+    plan = _model_plan(cfg)
+    x = embed_tokens(params["emb"], tok, _InferPol(plan.runtime_for("emb")),
+                     rt)
+    new_caches = dict(caches)
+
+    def block_prefill(lp, h, bp, c):
+        hn = apply_norm(lp["norm1"], h, cfg)
+        if cfg.block_style == "parallel":
+            a, c2 = _attn_prefill_paged(lp["attn"], hn, cfg, bp.attn, c,
+                                        bt_row, pos_base, n_valid)
+            h = h + _res(h, a) + _res(h, apply_mlp(lp["mlp"], hn, cfg,
+                                                   bp.mlp))
+        else:
+            a, c2 = _attn_prefill_paged(lp["attn"], hn, cfg, bp.attn, c,
+                                        bt_row, pos_base, n_valid)
+            h = h + _res(h, a)
+            h = h + _res(h, apply_mlp(lp["mlp"],
+                                      apply_norm(lp["norm2"], h, cfg),
+                                      cfg, bp.mlp))
+        return h, c2
+
+    def scan_dense(x, stack, cache, prefix):
+        bp = _infer_pols(_block_pols(plan, prefix, "attn", "mlp"))
+
+        def body(h, inp):
+            lp, c = inp
+            return block_prefill(lp, h, bp, c)
+
+        return _scan(body, x, (stack, cache), cfg)
+
+    if cfg.family == "moe":
+        x, kv_d = scan_dense(x, params["dense_layers"],
+                             caches["dense_layers"], "dense_layers")
+        new_caches["dense_layers"] = kv_d
+        bp = _infer_pols(_block_pols(plan, "layers", "attn", "moe"))
+
+        def body(h, inp):
+            lp, c = inp
+            a, c2 = _attn_prefill_paged(lp["attn"],
+                                        apply_norm(lp["norm1"], h, cfg),
+                                        cfg, bp.attn, c, bt_row, pos_base,
+                                        n_valid)
+            h = h + _res(h, a)
+            y, _ = moe_block(lp["moe"], apply_norm(lp["norm2"], h, cfg),
+                             cfg, bp.moe,
+                             rt.moe_rt if rt.mesh is not None else None)
+            return h + _res(h, y), c2
+
+        x, kv = _scan(body, x, (params["layers"], caches["layers"]), cfg)
+        new_caches["layers"] = kv
+    else:
+        x, kv = scan_dense(x, params["layers"], caches["layers"], "layers")
+        new_caches["layers"] = kv
+    # Only the last valid position's logits matter (they seed the first
+    # decode step); slicing before the head matmul keeps the lm head at
+    # (1, 1, d) regardless of chunk size.
+    x = jax.lax.dynamic_slice_in_dim(x, jnp.maximum(n_valid - 1, 0), 1,
+                                     axis=1)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["emb"], x,
+                       _InferPol(plan.runtime_for("head")), cfg)
+    return logits, new_caches

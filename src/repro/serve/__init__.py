@@ -1,4 +1,10 @@
-"""Serving substrate: batched prefill + decode with KV-cache management."""
-from .engine import ServeConfig, ServingEngine
+"""Serving substrate: chunked prefill + paged KV cache + continuous
+batching, with an async submit/poll queue and admission control."""
+from .engine import ServeConfig, ServingEngine, reference_generate
+from .paged_cache import BlockManager
+from .queue import (DECODE, DONE, PREFILL, QUEUED, REJECTED, TERMINAL,
+                    Request, RequestQueue)
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["ServeConfig", "ServingEngine", "reference_generate",
+           "BlockManager", "Request", "RequestQueue", "QUEUED", "PREFILL",
+           "DECODE", "DONE", "REJECTED", "TERMINAL"]

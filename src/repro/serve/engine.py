@@ -1,150 +1,402 @@
-"""Batched serving engine: continuous batching over a fixed-capacity
-decode batch.
+"""Production serving engine: chunked prefill, paged KV cache, continuous
+batching.
 
-The engine keeps a decode batch of ``max_batch`` slots, each slot holding
-one sequence's position; finished slots (EOS or length limit) are refilled
-from a request queue and the slot's cache lines are overwritten by the next
-prefill.  Greedy or temperature sampling.  This is the control plane the
-``decode_32k`` / ``long_500k`` dry-run cells lower the data plane for.
+Engine contract
+---------------
+
+* **Paged KV cache** — each layer owns a pool of ``num_blocks`` physical
+  blocks of ``block_size`` token positions; a slot references its pages
+  through a per-slot block table shared across layers.  ``max_len`` is a
+  per-request *token budget*, not a dense allocation; the pool-wide budget
+  is ``(num_blocks - 1) * block_size`` tokens (block 0 is the null write
+  sink).  Blocks are reserved in full at admission
+  (``ceil(min(max_len, prompt + max_new) / block_size)``), so an admitted
+  request can never hit OOM mid-flight.
+
+* **Chunked prefill** — prompts are spliced into the cache
+  ``prefill_chunk`` tokens at a time by a dedicated jitted graph
+  (:func:`repro.nn.prefill_chunk`) that writes KV lines directly; no
+  per-token decode loop ever runs for prompt tokens.  At most ONE chunk
+  runs per engine step, interleaved with the batched decode step, so a
+  long prompt delays concurrent decodes by at most one chunk's compute.
+
+* **Continuous batching** — finished slots are refilled from an async
+  request queue (:meth:`submit` / :meth:`poll`) without draining the
+  batch.  Admission control rejects gracefully (state ``REJECTED`` +
+  reason, never an exception): queue-depth cap, prompt vs. token budget,
+  and per-request deadlines (engine steps spent queued).
+
+* **Numerics** — every matmul routes through the layer's
+  :meth:`~repro.core.spec.LNSRuntime.linear_infer`: the fused
+  forward-epilogue kernel surface (``matmul_fused``) on Δ-spec'd paths,
+  bit-identical to the training forward by the fusion contract.
+
+Sampling is per-request seeded (``fold_in(key(seed), rid)`` then
+``fold_in(·, token_index)``): which slot a request lands in, and when,
+cannot change its sampled continuation.  Under greedy decoding the output
+for a prompt is bit-identical to :func:`reference_generate`, the dense
+token-by-token oracle — that parity is pinned in
+``tests/test_serve_engine.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import functools
+import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.numerics import get_plan
-from ..nn import Runtime, decode_step, init_decode_caches, prefill
+from ..nn import (PAGED_FAMILIES, Runtime, decode_step, decode_step_paged,
+                  init_decode_caches, init_paged_caches, prefill_chunk)
 from ..nn.config import ModelConfig
+from ..nn.paged import NULL_BLOCK
+from .paged_cache import BlockManager
+from .queue import (DECODE, DONE, PREFILL, QUEUED, REJECTED, TERMINAL,
+                    Request, RequestQueue)
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
-    max_len: int = 512
+    max_len: int = 512           # per-request token budget (prompt + new)
     eos_token: int = 2
     temperature: float = 0.0     # 0 → greedy
     seed: int = 0
+    block_size: int = 16         # KV lines per physical block
+    num_blocks: Optional[int] = None  # pool size; None → full occupancy
+    prefill_chunk: int = 16      # prompt tokens spliced per engine step
+    max_queue: int = 128         # admission queue depth cap
+
+    @property
+    def table_width(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+    def pool_blocks(self) -> int:
+        """Physical blocks incl. the null block.  The default sizes the
+        pool so ``max_batch`` slots can all hold ``max_len`` tokens —
+        paged layout, dense-equivalent capacity.  Pass ``num_blocks`` to
+        oversubscribe (queueing admits by actual reservation)."""
+        if self.num_blocks is not None:
+            return self.num_blocks
+        return 1 + self.max_batch * self.table_width
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_graph(cfg: ModelConfig, rt: Runtime):
+    return jax.jit(functools.partial(decode_step_paged, cfg=cfg, rt=rt))
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_step_graph(cfg: ModelConfig, rt: Runtime):
+    return jax.jit(functools.partial(decode_step, cfg=cfg, rt=rt))
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_graph(cfg: ModelConfig, rt: Runtime):
+    # One compile per chunk width: n_valid/pos_base are traced operands, so
+    # every chunk of a fixed ``prefill_chunk`` shares a single graph.
+    return jax.jit(functools.partial(prefill_chunk, cfg=cfg, rt=rt))
 
 
 class ServingEngine:
+    """Continuous-batching engine over a paged KV cache.
+
+    Async surface: :meth:`submit` → rid, :meth:`step` to advance,
+    :meth:`poll` to read request state/output.  :meth:`run` is the
+    synchronous convenience wrapper (submit all, drain, return outputs in
+    request order).
+    """
+
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
                  rt: Runtime = Runtime()):
+        if cfg.family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"ServingEngine serves {PAGED_FAMILIES} families; "
+                f"{cfg.family!r} has no paged KV cache — use "
+                f"repro.serve.reference_generate for it")
         self.cfg = cfg
         self.params = params
         self.sc = sc
         self.rt = rt
-        # Resolve the model's numerics plan once: every decode-step matmul
-        # routes through its per-layer runtimes.  Validating the rule
-        # patterns against this arch's layer paths here makes a bad
-        # spec/plan string (unknown key/value OR dead pattern) fail fast,
-        # before any compilation.  ``numerics`` stays the *default*
-        # runtime for pre-plan call sites.
+        # Resolve the model's numerics plan once: every decode/prefill
+        # matmul routes through its per-layer runtimes (fused infer path).
+        # Validating the rule patterns here makes a bad spec/plan string
+        # fail fast, before any compilation.
         from ..nn.model import known_layer_paths
         self.plan = get_plan(cfg.numerics).validate_paths(
             known_layer_paths(cfg))
         self.numerics = self.plan.runtime()
-        self.caches = init_decode_caches(
-            cfg, sc.max_batch, sc.max_len,
-            jnp.dtype(cfg.param_dtype), enc_len=sc.max_len)
-        self.pos = jnp.zeros((sc.max_batch,), jnp.int32)
-        self.tok = jnp.zeros((sc.max_batch, 1), jnp.int32)
-        self.active = np.zeros((sc.max_batch,), bool)
-        self.outputs: list[list[int]] = [[] for _ in range(sc.max_batch)]
-        self._step = jax.jit(
-            lambda p, t, c, q: decode_step(p, t, c, q, cfg, rt))
-        self._rng = jax.random.PRNGKey(sc.seed)
 
+        nb = sc.pool_blocks()
+        self.bm = BlockManager(nb, sc.block_size)
+        self.queue = RequestQueue(sc.max_queue)
+        dt = jnp.dtype(cfg.param_dtype)
+        self.caches = init_paged_caches(cfg, nb, sc.block_size, dt)
+        w = sc.table_width
+        self.bt = np.full((sc.max_batch, w), NULL_BLOCK, np.int32)
+        self.pos = np.zeros((sc.max_batch,), np.int32)
+        self.tok = np.zeros((sc.max_batch, 1), np.int32)
+        self.slot_req: list[Optional[Request]] = [None] * sc.max_batch
+        self.step_count = 0
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
+                      "tokens_generated": 0, "occupancy_sum": 0}
+        self._decode = _decode_graph(cfg, rt)
+        self._prefill = _prefill_graph(cfg, rt)
+
+    # ------------------------------------------------------ reporting ---
     @property
     def matmul_path(self) -> str:
-        """The matmul path serving runs on, straight from the runtime
-        (lives next to ``LNSRuntime.linear`` so it cannot drift from the
-        actual dispatch).  Under a per-layer plan the default path is
-        reported with the number of per-layer overrides appended."""
-        path = self.numerics.matmul_path
+        """The matmul path serving runs on, straight from the runtime's
+        inference dispatch (``LNSRuntime.infer_path`` lives next to
+        ``linear_infer`` so it cannot drift from the actual dispatch).
+        Under a per-layer plan the default path is reported with the
+        number of per-layer overrides appended."""
+        path = self.numerics.infer_path
         if not self.plan.is_uniform:
             path += (f" (+{len(self.plan.rules)} per-layer override"
                      f"{'s' if len(self.plan.rules) != 1 else ''})")
         return path
 
-    # -- slot management ---------------------------------------------------
-    def add_request(self, prompt: np.ndarray) -> Optional[int]:
-        """Prefill a prompt into a free slot; returns slot id or None."""
-        free = np.where(~self.active)[0]
-        if len(free) == 0:
-            return None
-        slot = int(free[0])
-        # teacher-force the prompt through decode steps into this slot's
-        # cache lines (slot-local prefill; a production engine would use a
-        # dedicated prefill graph + cache splice)
-        for t, tok in enumerate(prompt):
-            logits, self.caches = self._step(
-                self.params,
-                self.tok.at[slot].set(int(tok)),
-                self.caches,
-                self.pos.at[slot].set(t))
-        self.pos = self.pos.at[slot].set(len(prompt))
-        nxt = self._sample(logits[slot])
-        self.tok = self.tok.at[slot, 0].set(nxt)
-        self.outputs[slot] = [int(nxt)]
-        self.active[slot] = True
-        return slot
+    @property
+    def active(self) -> np.ndarray:
+        """Decode-batch mask: slots with a request in DECODE state."""
+        return np.array([r is not None and r.state == DECODE
+                         for r in self.slot_req])
 
-    def _sample(self, logits) -> int:
-        if self.sc.temperature == 0.0:
-            return int(jnp.argmax(logits[-1]))
-        self._rng, k = jax.random.split(self._rng)
-        return int(jax.random.categorical(
-            k, logits[-1] / self.sc.temperature))
+    @property
+    def occupancy(self) -> float:
+        """Mean busy slots per decode step so far (0 if none ran)."""
+        d = self.stats["decode_steps"]
+        return self.stats["occupancy_sum"] / d if d else 0.0
 
-    # -- decode loop ---------------------------------------------------------
-    def step(self):
-        """One batched decode step for all active slots."""
-        if not self.active.any():
+    # ------------------------------------------------------ admission ---
+    def submit(self, prompt, max_new: int = 32,
+               deadline_steps: Optional[int] = None) -> int:
+        """Queue one request; returns its rid (check state via poll).
+
+        Rejections are graceful — the rid is still valid and ``poll``
+        reports ``state == "REJECTED"`` with a reason:
+
+        * ``queue full`` — depth cap hit;
+        * ``prompt exceeds max_len`` — even 1 sampled token wouldn't fit
+          the per-request budget;
+        * ``reservation exceeds pool`` — the block reservation could
+          never be satisfied, even by a drained pool.
+        """
+        req = self.queue.submit(prompt, max_new, deadline_steps,
+                                self.step_count)
+        if req.state != QUEUED:
+            return req.rid
+        reason = None
+        if req.prompt_len + 1 > self.sc.max_len:
+            reason = (f"prompt exceeds max_len "
+                      f"({req.prompt_len} + 1 > {self.sc.max_len})")
+        elif not self.bm.fits_ever(self._reservation_tokens(req)):
+            reason = (f"reservation exceeds pool "
+                      f"({self.bm.blocks_for(self._reservation_tokens(req))}"
+                      f" > {self.bm.capacity} blocks)")
+        if reason is not None:
+            self.queue.withdraw(req)
+            req.reject(reason, self.step_count)
+        return req.rid
+
+    def poll(self, rid: int) -> Request:
+        """Request state/output; valid for accepted AND rejected rids."""
+        return self.queue.poll(rid)
+
+    def _reservation_tokens(self, req: Request) -> int:
+        # KV lines the request can write: prompt + one per decode step
+        # (≤ max_new - 1 after the prefill-sampled token, +1 for the line
+        # the final step writes), capped by the per-request budget.
+        return min(self.sc.max_len, req.prompt_len + req.max_new)
+
+    # ------------------------------------------------------ scheduling --
+    def _refill(self):
+        """Admit queued requests into free slots (FIFO, all-or-nothing)."""
+        free = [s for s in range(self.sc.max_batch)
+                if self.slot_req[s] is None]
+        while free and self.queue.depth:
+            req = self.queue.peek()
+            blocks = self.bm.alloc(
+                self.bm.blocks_for(self._reservation_tokens(req)))
+            if blocks is None:
+                break  # head-of-line waits for blocks to free up
+            self.queue.pop()
+            slot = free.pop(0)
+            req.state = PREFILL
+            req.slot = slot
+            req.blocks = blocks
+            req.start_step = self.step_count
+            req.prefill_pos = 0
+            self.slot_req[slot] = req
+            row = np.full((self.sc.table_width,), NULL_BLOCK, np.int32)
+            row[:len(blocks)] = blocks
+            self.bt[slot] = row
+            self.pos[slot] = 0
+            self.tok[slot, 0] = 0
+
+    def _prefill_one(self):
+        """Splice ONE chunk for the oldest mid-prefill request."""
+        cands = [r for r in self.slot_req
+                 if r is not None and r.state == PREFILL]
+        if not cands:
             return
-        logits, self.caches = self._step(self.params, self.tok, self.caches,
-                                         self.pos)
-        self.pos = self.pos + jnp.asarray(self.active, jnp.int32)
-        new_toks = []
-        for slot in range(self.sc.max_batch):
-            if not self.active[slot]:
-                new_toks.append(0)
-                continue
-            nxt = self._sample(logits[slot])
-            self.outputs[slot].append(nxt)
-            done = (nxt == self.sc.eos_token
-                    or int(self.pos[slot]) >= self.sc.max_len - 1)
-            if done:
-                self.active[slot] = False
-            new_toks.append(nxt)
-        self.tok = jnp.asarray(new_toks, jnp.int32)[:, None]
+        req = min(cands, key=lambda r: (r.start_step, r.rid))
+        c = self.sc.prefill_chunk
+        chunk = req.prompt[req.prefill_pos:req.prefill_pos + c]
+        nv = len(chunk)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :nv] = chunk
+        logits, self.caches = self._prefill(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.bt[req.slot]), jnp.int32(req.prefill_pos),
+            jnp.int32(nv))
+        req.prefill_pos += nv
+        self.stats["prefill_chunks"] += 1
+        if req.prefill_pos >= req.prompt_len:
+            # Prompt fully spliced: sample the first continuation token
+            # from the last valid position's logits and join the batch.
+            nxt = self._sample(logits[0, -1], req)
+            req.output.append(nxt)
+            self.stats["tokens_generated"] += 1
+            self.pos[req.slot] = req.prompt_len
+            self.tok[req.slot, 0] = nxt
+            if len(req.output) >= req.max_new:
+                self._finish(req)
+            else:
+                req.state = DECODE
 
-    def run(self, prompts: list[np.ndarray], max_new: int = 32):
-        """Serve a list of prompts with continuous batching."""
-        queue = list(prompts)
-        results = {}
-        submitted = {}
-        while queue or self.active.any():
-            while queue:
-                slot = self.add_request(queue[0])
-                if slot is None:
-                    break
-                submitted[slot] = len(results) + len(submitted)
-                queue.pop(0)
+    def _decode_active(self):
+        """One batched decode step for every DECODE slot."""
+        act = self.active
+        if not act.any():
+            return
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.tok), self.caches,
+            jnp.asarray(self.bt), jnp.asarray(self.pos), jnp.asarray(act))
+        self.stats["decode_steps"] += 1
+        self.stats["occupancy_sum"] += int(act.sum())
+        for slot in range(self.sc.max_batch):
+            req = self.slot_req[slot]
+            if req is None or req.state != DECODE:
+                continue
+            self.pos[slot] += 1
+            nxt = self._sample(logits[slot, -1], req)
+            req.output.append(nxt)
+            self.stats["tokens_generated"] += 1
+            self.tok[slot, 0] = nxt
+            if (nxt == self.sc.eos_token
+                    or int(self.pos[slot]) >= self.sc.max_len - 1
+                    or len(req.output) >= req.max_new):
+                self._finish(req)
+
+    def _finish(self, req: Request):
+        req.state = DONE
+        req.finish_step = self.step_count
+        req.finish_time = time.monotonic()
+        slot = req.slot
+        if slot >= 0:
+            self.bm.free(req.blocks)
+            self.bt[slot] = NULL_BLOCK
+            self.slot_req[slot] = None
+            req.slot = -1
+
+    def _sample(self, logits_row, req: Request) -> int:
+        if self.sc.temperature == 0.0:
+            return int(jnp.argmax(logits_row))
+        # Per-request stream: seed folds in the rid, then the token index.
+        # Slot assignment and refill order cannot perturb a request's
+        # sampled continuation.
+        k = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.sc.seed), req.rid),
+            len(req.output))
+        return int(jax.random.categorical(
+            k, logits_row / self.sc.temperature))
+
+    # ----------------------------------------------------- engine loop --
+    def step(self):
+        """One engine step: expire deadlines, refill free slots, splice at
+        most one prefill chunk, then one batched decode step."""
+        self.step_count += 1
+        self.queue.expire(self.step_count)
+        self._refill()
+        self._prefill_one()
+        self._decode_active()
+
+    @property
+    def busy(self) -> bool:
+        return (self.queue.depth > 0
+                or any(r is not None for r in self.slot_req))
+
+    def run(self, prompts: list, max_new: int = 32):
+        """Serve prompts to completion; outputs in request order.
+
+        Synchronous wrapper over submit/step/poll for scripts and tests.
+        If the queue cap is hit, steps the engine until depth frees up, so
+        any number of prompts can be passed.  Rejected requests (e.g. a
+        prompt over the token budget) yield an empty output list.
+        """
+        rids = []
+        for p in prompts:
+            while True:
+                rid = self.submit(p, max_new=max_new)
+                req = self.poll(rid)
+                if req.state == REJECTED and req.reason == "queue full":
+                    self.step()
+                    continue
+                rids.append(rid)
+                break
+        while any(self.poll(r).state not in TERMINAL for r in rids):
             self.step()
-            for slot in range(self.sc.max_batch):
-                if slot in submitted and not self.active[slot]:
-                    rid = submitted.pop(slot)
-                    results[rid] = self.outputs[slot][:max_new]
-            if all(len(o) >= max_new for s, o in enumerate(self.outputs)
-                   if self.active[s]) and not queue:
-                for slot in range(self.sc.max_batch):
-                    if self.active[slot]:
-                        self.active[slot] = False
-                        if slot in submitted:
-                            results[submitted.pop(slot)] = \
-                                self.outputs[slot][:max_new]
-        return [results[i] for i in sorted(results)]
+        return [list(self.poll(r).output[:max_new]) for r in rids]
+
+
+# ----------------------------------------------------------- oracle ------
+def reference_generate(cfg: ModelConfig, params, prompt, max_new: int = 32,
+                       *, eos_token: int = 2, max_len: int = 512,
+                       temperature: float = 0.0, seed: int = 0,
+                       rid: int = 0, rt: Runtime = Runtime()):
+    """Dense token-by-token oracle for ONE prompt (any model family).
+
+    The semantics the engine is pinned against: teacher-force the prompt
+    through ``decode_step`` into a dense cache, sample the first
+    continuation token from the final prompt logits, then decode until
+    EOS is sampled, the position budget ``max_len`` is reached, or
+    ``max_new`` tokens exist.  Greedy outputs depend only on the prompt,
+    so this is also the cross-request-contamination check: the engine
+    must reproduce it for every request in any arrival order.  With
+    ``temperature > 0`` pass the engine-assigned ``rid`` and shared
+    ``seed`` to reproduce the per-request sampling stream.
+    """
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    caches = init_decode_caches(cfg, 1, max_len,
+                                jnp.dtype(cfg.param_dtype), enc_len=max_len)
+    step = _dense_step_graph(cfg, rt)
+    logits = None
+    for t, tok in enumerate(prompt):
+        logits, caches = step(params, jnp.full((1, 1), int(tok), jnp.int32),
+                              caches, jnp.full((1,), t, jnp.int32))
+    pos = len(prompt)
+
+    def sample(row, idx):
+        if temperature == 0.0:
+            return int(jnp.argmax(row))
+        k = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), rid), idx)
+        return int(jax.random.categorical(k, row / temperature))
+
+    out = [sample(logits[0, -1], 0)]
+    while len(out) < max_new:
+        logits, caches = step(
+            params, jnp.full((1, 1), out[-1], jnp.int32), caches,
+            jnp.full((1,), pos, jnp.int32))
+        pos += 1
+        nxt = sample(logits[0, -1], len(out))
+        out.append(nxt)
+        if nxt == eos_token or pos >= max_len - 1:
+            break
+    return out[:max_new]

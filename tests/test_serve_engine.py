@@ -1,0 +1,336 @@
+"""Serve-layer tests: paged KV cache, chunked prefill, continuous batching.
+
+The load-bearing invariant everywhere: a request's output depends only on
+its prompt (plus rid/seed when sampling) — never on which slot it landed
+in, when it arrived, how the prompt was chunked, or how its pages were
+scattered across the pool.  The oracle is ``reference_generate``, the
+dense token-by-token path pinned against the pre-paged engine semantics.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, reduced
+from repro.core.numerics import get_plan
+from repro.nn import init_params, init_paged_caches
+from repro.nn.config import MoEConfig, ModelConfig
+from repro.nn.paged import (NULL_BLOCK, paged_gather, paged_write_chunk,
+                            paged_write_token)
+from repro.serve import (DONE, REJECTED, TERMINAL, BlockManager, ServeConfig,
+                         ServingEngine, reference_generate)
+
+TINY = ModelConfig(name="tiny-serve", family="dense", n_layers=2,
+                   d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                   vocab_size=64, d_head=16, vocab_pad_to=64,
+                   numerics="fp32", param_dtype="float32", remat="none",
+                   q_chunk=8)
+
+TINY_MOE = ModelConfig(name="tiny-serve-moe", family="moe", n_layers=3,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=64, d_head=16, vocab_pad_to=64,
+                       numerics="fp32", param_dtype="float32", remat="none",
+                       q_chunk=8,
+                       moe=MoEConfig(n_experts=4, top_k=2, n_shared=1,
+                                     d_expert=32, first_dense_layers=1))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return TINY, init_params(jax.random.PRNGKey(0), TINY)
+
+
+@pytest.fixture(scope="module")
+def tiny_moe():
+    return TINY_MOE, init_params(jax.random.PRNGKey(1), TINY_MOE)
+
+
+def _prompts(n, seed=0, lo=1, hi=7, vocab=64):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(3, vocab, size=int(rng.integers(lo, hi)))
+            for _ in range(n)]
+
+
+@functools.lru_cache(maxsize=None)
+def _ref(which, prompt, max_new, max_len):
+    cfg = {"dense": TINY, "moe": TINY_MOE}[which]
+    params = init_params(
+        jax.random.PRNGKey(0 if which == "dense" else 1), cfg)
+    return reference_generate(cfg, params, np.asarray(prompt, np.int32),
+                              max_new, max_len=max_len)
+
+
+# ------------------------------------------------------ BlockManager -----
+class TestBlockManager:
+    def test_alloc_free_roundtrip(self):
+        bm = BlockManager(8, 4)
+        assert bm.capacity == 7 and bm.available == 7
+        a = bm.alloc(3)
+        assert len(a) == 3 and NULL_BLOCK not in a
+        assert bm.available == 4 and bm.outstanding == 3
+        bm.free(a)
+        assert bm.available == 7 and bm.outstanding == 0
+        bm.check_conserved()
+
+    def test_oom_is_all_or_nothing(self):
+        bm = BlockManager(5, 2)  # capacity 4
+        a = bm.alloc(3)
+        assert bm.alloc(2) is None          # only 1 left: no partial grant
+        assert bm.available == 1            # failed alloc took nothing
+        b = bm.alloc(1)
+        assert bm.alloc(1) is None
+        bm.free(a)
+        bm.free(b)
+        bm.check_conserved()
+
+    def test_double_free_rejected(self):
+        bm = BlockManager(4, 2)
+        a = bm.alloc(2)
+        bm.free(a)
+        with pytest.raises(ValueError, match="double free"):
+            bm.free(a)
+        with pytest.raises(ValueError, match="foreign"):
+            bm.free([NULL_BLOCK])
+
+    def test_budget_math(self):
+        bm = BlockManager(10, 4)
+        assert bm.blocks_for(1) == 1
+        assert bm.blocks_for(4) == 1
+        assert bm.blocks_for(5) == 2
+        assert bm.blocks_for(0) == 1        # a slot always holds a block
+        assert bm.fits_ever(9 * 4)          # capacity 9 blocks = 36 lines
+        assert not bm.fits_ever(9 * 4 + 1)
+
+
+# ---------------------------------------------------- splice vs dense ----
+def test_paged_splice_matches_dense_reference(rng):
+    """Token + chunk writes through an out-of-order block table, gathered
+    back, must equal the dense array they encode."""
+    nb, bs, kv, hd = 7, 4, 2, 3
+    w = 3                                   # logical capacity 12 lines
+    pages = jnp.zeros((nb, bs, kv, hd))
+    bt_row = jnp.array([5, 1, 4], jnp.int32)      # deliberately scrambled
+    vals = jnp.asarray(rng.normal(size=(10, kv, hd)), jnp.float32)
+
+    # chunk splice for lines 0..5 (crosses a block boundary), padded to 8
+    padded = jnp.concatenate([vals[:6], jnp.full((2, kv, hd), 99.0)])
+    pages = paged_write_chunk(pages, bt_row, jnp.int32(0), padded,
+                              jnp.int32(6))
+    # token writes for lines 6..9
+    for t in range(6, 10):
+        pages = paged_write_token(pages, bt_row[None], jnp.int32([t]),
+                                  vals[t][None], jnp.array([True]))
+    got = paged_gather(pages, bt_row[None])[0]       # (w*bs, kv, hd)
+    np.testing.assert_array_equal(np.asarray(got[:10]), np.asarray(vals))
+    # chunk padding went to the null sink, not into the logical view
+    assert not np.any(np.asarray(got) == 99.0)
+    # inactive token writes land in the null block only
+    pages2 = paged_write_token(pages, bt_row[None], jnp.int32([2]),
+                               jnp.full((1, kv, hd), 77.0),
+                               jnp.array([False]))
+    np.testing.assert_array_equal(np.asarray(paged_gather(pages2, bt_row[None])),
+                                  np.asarray(paged_gather(pages, bt_row[None])))
+    assert np.any(np.asarray(pages2[NULL_BLOCK]) == 77.0)
+
+
+def test_init_paged_caches_rejects_unpaged_family():
+    ssm_cfg = TINY.with_(family="ssm", attn_kind="none")
+    with pytest.raises(ValueError, match="no paged KV cache"):
+        init_paged_caches(ssm_cfg, 4, 4)
+
+
+# ------------------------------------------- chunked prefill parity ------
+def test_chunked_prefill_bit_parity_with_token_by_token(tiny):
+    """Greedy outputs are identical for every (chunk, block) geometry —
+    chunked cache splice ≡ token-by-token dense prefill."""
+    cfg, params = tiny
+    prompts = _prompts(3, seed=2, lo=1, hi=8)
+    refs = [_ref("dense", tuple(p), 5, 24) for p in prompts]
+    for chunk in (1, 3, 8):
+        for bs in (2, 8):
+            eng = ServingEngine(cfg, params,
+                                ServeConfig(max_batch=2, max_len=24,
+                                            block_size=bs,
+                                            prefill_chunk=chunk))
+            outs = eng.run(prompts, max_new=5)
+            assert outs == refs, f"chunk={chunk} bs={bs}"
+            eng.bm.check_conserved()
+
+
+def test_arrival_order_invariance(tiny):
+    """Same request set, any submission order → same output per prompt."""
+    cfg, params = tiny
+    prompts = _prompts(4, seed=3)
+    sc = ServeConfig(max_batch=2, max_len=20, block_size=4, prefill_chunk=4)
+    by_prompt = {}
+    for order in ([0, 1, 2, 3], [3, 1, 0, 2], [2, 3, 1, 0]):
+        eng = ServingEngine(cfg, params, sc)
+        outs = eng.run([prompts[i] for i in order], max_new=4)
+        for i, o in zip(order, outs):
+            by_prompt.setdefault(i, o)
+            assert by_prompt[i] == o, f"order {order} changed request {i}"
+
+
+# -------------------------------------------------- admission control ----
+def test_rejection_queue_full(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_batch=1, max_len=16, block_size=4,
+                                    max_queue=1))
+    r0 = eng.submit(np.array([5, 6]), max_new=2)
+    r1 = eng.submit(np.array([7, 8]), max_new=2)
+    assert eng.poll(r0).state not in TERMINAL
+    assert eng.poll(r1).state == REJECTED
+    assert eng.poll(r1).reason == "queue full"
+    while eng.poll(r0).state not in TERMINAL:
+        eng.step()
+    assert eng.poll(r0).state == DONE and len(eng.poll(r0).output) == 2
+
+def test_rejection_prompt_exceeds_budget(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, ServeConfig(max_batch=1, max_len=8,
+                                                 block_size=4))
+    rid = eng.submit(np.arange(3, 11), max_new=4)   # 8 + 1 > 8
+    req = eng.poll(rid)
+    assert req.state == REJECTED and "prompt exceeds max_len" in req.reason
+    assert eng.queue.depth == 0                     # never admitted
+
+
+def test_rejection_reservation_exceeds_pool(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_batch=1, max_len=16, block_size=2,
+                                    num_blocks=3))   # capacity: 4 tokens
+    rid = eng.submit(np.array([3, 4, 5]), max_new=8)  # needs 11 tokens
+    req = eng.poll(rid)
+    assert req.state == REJECTED and "reservation exceeds pool" in req.reason
+    eng.bm.check_conserved()
+
+
+def test_rejection_deadline_exceeded_while_queued(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_batch=1, max_len=16, block_size=4))
+    slow = eng.submit(np.array([5, 6]), max_new=8)   # hogs the only slot
+    eng.step()                                        # admit + prefill slow
+    urgent = eng.submit(np.array([7, 8]), max_new=2, deadline_steps=2)
+    while eng.poll(slow).state not in TERMINAL:
+        eng.step()
+    req = eng.poll(urgent)
+    assert req.state == REJECTED and "deadline" in req.reason
+    assert eng.poll(slow).state == DONE
+    eng.bm.check_conserved()
+
+
+def test_engine_rejects_unpaged_family(tiny):
+    _, params = tiny
+    ssm_cfg = TINY.with_(family="ssm", attn_kind="none")
+    with pytest.raises(ValueError, match="reference_generate"):
+        ServingEngine(ssm_cfg, params, ServeConfig())
+
+
+# ------------------------------------------------- sampling isolation ----
+def test_sampled_continuation_independent_of_slot_and_refill_order(tiny):
+    """Regression: sampling once drew from one engine-level rng stream, so
+    refill order / batch shape perturbed a request's continuation.  Now
+    the stream is (seed, rid, token-index)-keyed."""
+    cfg, params = tiny
+    prompts = _prompts(4, seed=5)
+    outs = []
+    for max_batch, bs, chunk in ((1, 4, 8), (3, 2, 2), (4, 8, 4)):
+        eng = ServingEngine(cfg, params,
+                            ServeConfig(max_batch=max_batch, max_len=20,
+                                        block_size=bs, prefill_chunk=chunk,
+                                        temperature=0.8, seed=7))
+        outs.append(eng.run(prompts, max_new=5))
+    assert outs[0] == outs[1] == outs[2]
+    refs = [reference_generate(cfg, params, p, 5, max_len=20,
+                               temperature=0.8, seed=7, rid=i)
+            for i, p in enumerate(prompts)]
+    assert outs[0] == refs
+
+
+# ------------------------------------------------------ end to end -------
+def test_drain_many_requests_over_few_slots(tiny):
+    cfg, params = tiny
+    prompts = _prompts(7, seed=6)
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_batch=2, max_len=20, block_size=4,
+                                    prefill_chunk=4))
+    outs = eng.run(prompts, max_new=4)
+    assert len(outs) == 7
+    for p, o in zip(prompts, outs):
+        assert o == _ref("dense", tuple(p), 4, 20)
+    assert all(eng.poll(r).state == DONE for r in range(7))
+    eng.bm.check_conserved()
+    assert eng.bm.outstanding == 0
+    assert eng.occupancy > 1.0          # batching actually overlapped
+    assert eng.stats["prefill_chunks"] >= 7
+
+
+def test_moe_paged_serving_matches_reference(tiny_moe):
+    cfg, params = tiny_moe
+    prompts = _prompts(2, seed=8)
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_batch=2, max_len=16, block_size=4,
+                                    prefill_chunk=4))
+    outs = eng.run(prompts, max_new=3)
+    assert outs == [_ref("moe", tuple(p), 3, 16) for p in prompts]
+    eng.bm.check_conserved()
+
+
+# ------------------------------------------------- fused infer parity ----
+@pytest.mark.parametrize("spec", ["fp32", "lns16-qat", "lns16-exact",
+                                  "lns16-exact-pallas",
+                                  "lns16-train-pallas"])
+def test_linear_infer_matches_linear_forward(spec, rng):
+    """The serving dispatch (fused matmul surface) is bit-identical to the
+    training forward on every spec class — fusion is a performance
+    property, never a numerics property."""
+    rt = get_plan(spec).runtime()
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(rt.linear_infer(x, w)),
+                                  np.asarray(rt.linear(x, w)))
+    assert isinstance(rt.infer_path, str) and rt.infer_path
+
+
+# ------------------------------------------------------- property --------
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 20))
+def test_property_random_schedules_never_corrupt_or_leak(tiny, seed):
+    """Random lengths, geometries, and staggered arrival schedules: every
+    request's greedy output equals its isolated reference and the block
+    pool is conserved (no leak, no double-booking)."""
+    cfg, params = tiny
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(2, 5))
+    prompts = [rng.integers(3, cfg.vocab_size, size=int(rng.integers(1, 7)))
+               for _ in range(n_req)]
+    max_new = int(rng.integers(2, 5))
+    sc = ServeConfig(max_batch=int(rng.integers(1, 4)), max_len=16,
+                     block_size=int(rng.choice([2, 4, 8])),
+                     prefill_chunk=int(rng.choice([2, 4, 8])),
+                     max_queue=8)
+    eng = ServingEngine(cfg, params, sc)
+    rids = []
+    for p in prompts:
+        rids.append(eng.submit(p, max_new=max_new))
+        for _ in range(int(rng.integers(0, 3))):   # staggered arrivals
+            eng.step()
+    guard = 0
+    while any(eng.poll(r).state not in TERMINAL for r in rids):
+        eng.step()
+        guard += 1
+        assert guard < 500, "engine failed to drain"
+    for p, r in zip(prompts, rids):
+        req = eng.poll(r)
+        assert req.state == DONE
+        assert list(req.output) == _ref("dense", tuple(p), max_new, 16), \
+            f"seed={seed} rid={r} corrupted"
+    eng.bm.check_conserved()
+    assert eng.bm.outstanding == 0
