@@ -1,0 +1,204 @@
+"""Render a per-layer numerics health report from a metrics JSONL.
+
+Input is the JSONL the obs subsystem writes (``launch.train --metrics``,
+``serve_bench --metrics``, or ``--generate`` below): ``MetricsRegistry``
+snapshot rows stamped per step.  The report aggregates the *final*
+snapshot of every counter (counters are cumulative by contract) and
+prints, per ``(layer, op)``:
+
+* saturation rate — codes pinned at ``fmt.code_max`` / elements seen;
+* zero rate — zero-sentinel codes / elements seen;
+* quantize / convert overflow+underflow rates (``q_*`` / ``convert_*``);
+* Δ-LUT occupancy (``dhist`` rows, layers with ``metrics=full``): the
+  fraction of ⊞ accumulates per |d| bucket, last bucket = beyond the
+  paper LUT's d_max.
+
+``--generate PATH`` produces a self-contained sample: a short
+mixed-format (hidden=lns12, out=lns16) paper-MLP training run through
+``train_step_metrics`` plus a micro serving drain, written as JSONL.
+``benchmarks/baselines/metrics_sample.jsonl`` is a committed instance;
+CI smoke-renders it.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+
+
+# --------------------------------------------------------------- generate --
+def generate(path: str, steps: int = 5, seed: int = 0,
+             spec: str = "lns16-train-emulate;hidden=fmt:lns12,"
+                         "metrics:full") -> str:
+    """Write a sample metrics JSONL: ``steps`` MLP train steps on a mixed
+    lns12/lns16 plan (hidden layer at metrics=full for dhist rows) plus a
+    micro serving drain, both through the structured registry."""
+    import jax
+    import numpy as np
+    from repro.obs import JsonlSink, MetricsRegistry, StepTimer
+    from repro.paper.mlp import LNSMLP, MLPConfig
+
+    cfg = MLPConfig(n_in=24, n_hidden=16, n_out=10, lr=0.01, momentum=0.9,
+                    spec=spec, matmul_block=8)
+    mlp = LNSMLP(cfg)
+    params = mlp.init(jax.random.PRNGKey(seed))
+    mom = mlp.init_momentum(params)
+    rng = np.random.default_rng(seed)
+    registry = MetricsRegistry(base_labels={
+        "component": "train", "arch": "paper-mlp", "spec": str(mlp.plan)})
+    timer = StepTimer()
+    sink = JsonlSink(path)
+    losses = []
+    for step in range(steps):
+        xb = rng.normal(size=(8, cfg.n_in)).astype(np.float32)
+        yb = rng.integers(0, cfg.n_out, size=(8,))
+        with timer.span("train.step"):
+            (params, mom, loss), taps = mlp.train_step_metrics(
+                params, xb, yb, mom)
+            losses.append(float(loss))
+        registry.merge_numerics_taps(jax.device_get(taps),
+                                     lanes=mlp.lanes())
+        sink.write(registry.rows(reset=True), step=step + 1,
+                   loss=losses[-1],
+                   step_time_ms=timer.last("train.step"))
+    sink.write_row({"kind": "summary", "name": "train.step_time_ms",
+                    **timer.summary(skip_first=1)["train.step"],
+                    "arch": "paper-mlp", "spec": str(mlp.plan),
+                    "steps": steps, "final_loss": losses[-1]})
+
+    # Micro serving drain: queue depth / rejections / TTFT-latency rows
+    # from the engine's own registry, including one exercised rejection.
+    from repro.configs import get_config, reduced
+    from repro.nn import init_params
+    from repro.serve import TERMINAL, ServeConfig, ServingEngine
+    scfg = reduced(get_config("qwen3-1.7b")).with_(
+        numerics="fp32", param_dtype="float32", remat="none")
+    sp = init_params(jax.random.PRNGKey(seed), scfg)
+    sreg = MetricsRegistry(base_labels={"component": "serve",
+                                        "arch": "qwen3-1.7b",
+                                        "spec": "fp32"})
+    eng = ServingEngine(scfg, sp, ServeConfig(max_batch=2, max_len=32,
+                                              block_size=8,
+                                              prefill_chunk=8),
+                        registry=sreg)
+    rids = [eng.submit(rng.integers(3, scfg.vocab_size, size=6),
+                       max_new=4) for _ in range(3)]
+    eng.submit(rng.integers(3, scfg.vocab_size, size=64), max_new=4)
+    while any(eng.poll(r).state not in TERMINAL for r in rids):
+        eng.step()
+    sink.write(sreg.rows(), source="serve-drain")
+    sink.close()
+    return path
+
+
+# ----------------------------------------------------------------- report --
+def _final_rows(rows):
+    """Last snapshot per instrument identity (counters are cumulative, so
+    the final row carries the run totals)."""
+    drop = ("step", "loss", "step_time_ms", "source")
+    final = {}
+    for r in rows:
+        ident = tuple(sorted((k, str(v)) for k, v in r.items()
+                             if k not in drop + ("value", "counts", "count",
+                                                 "sum", "min", "max",
+                                                 "values")))
+        final[ident] = r
+    return list(final.values())
+
+
+def _rate(n, d):
+    return f"{1e2 * n / d:6.2f}%" if d else "     -"
+
+
+def report(path: str, out=sys.stdout) -> dict:
+    """Aggregate ``path`` and print the per-layer table; returns the
+    aggregates keyed by ``(layer, op)`` for programmatic use/tests."""
+    from repro.obs import read_jsonl
+    rows = _final_rows(read_jsonl(path))
+    per = {}
+    for r in rows:
+        if not str(r.get("name", "")).startswith("numerics."):
+            continue
+        key = (r.get("layer", "?"), r.get("op", "?"))
+        agg = per.setdefault(key, {"lane": r.get("lane", "-")})
+        counter = r["name"].split(".", 1)[1]
+        if r["kind"] == "bucketed_histogram":
+            agg[counter] = (r["counts"], r["edges"])
+        else:
+            agg[counter] = agg.get(counter, 0) + int(r["value"])
+
+    hdr = (f"{'layer':<14} {'op':<16} {'lane':<16} {'elems':>9} "
+           f"{'sat':>7} {'zero':>7} {'q_sat':>7} {'q_flush':>7} "
+           f"{'cv_sat':>7} {'cv_flush':>8}")
+    print(hdr, file=out)
+    print("-" * len(hdr), file=out)
+    for (layer, op), a in sorted(per.items()):
+        if not any(k in a for k in ("elems", "q_elems", "convert_elems")):
+            continue  # dhist-only scope; rendered below
+        elems = a.get("elems", 0)
+        qe, ce = a.get("q_elems", 0), a.get("convert_elems", 0)
+        print(f"{layer:<14} {op:<16} {a['lane']:<16} "
+              f"{elems or qe or ce:>9} "
+              f"{_rate(a.get('sat', 0), elems):>7} "
+              f"{_rate(a.get('zero', 0), elems):>7} "
+              f"{_rate(a.get('q_sat', 0), qe):>7} "
+              f"{_rate(a.get('q_flush', 0), qe):>7} "
+              f"{_rate(a.get('convert_sat', 0), ce):>7} "
+              f"{_rate(a.get('convert_flush', 0), ce):>8}", file=out)
+    dhists = {k: a["dhist"] for k, a in per.items() if "dhist" in a}
+    if dhists:
+        print("\nΔ-LUT occupancy (|d| buckets, log2 units; last = beyond "
+              "LUT d_max):", file=out)
+        for (layer, op), (counts, edges) in sorted(dhists.items()):
+            total = sum(counts) or 1
+            spans = ([f"[0,{edges[0]:g})"]
+                     + [f"[{a:g},{b:g})" for a, b in zip(edges, edges[1:])]
+                     + [f"[{edges[-1]:g},∞)"])
+            occ = " ".join(f"{s}={1e2 * c / total:.1f}%"
+                           for s, c in zip(spans, counts))
+            print(f"  {layer}/{op}: {occ}  (n={sum(counts)})", file=out)
+
+    serve = [r for r in rows if str(r.get("name", "")).startswith("serve.")]
+    if serve:
+        print("\nserving:", file=out)
+        for r in sorted(serve, key=lambda r: (r["name"], str(r))):
+            if r["kind"] == "counter":
+                lab = "".join(f" {k}={r[k]}" for k in ("reason", "mode")
+                              if k in r)
+                print(f"  {r['name']}{lab}: {r['value']}", file=out)
+            elif r["kind"] == "histogram":
+                print(f"  {r['name']}: n={r['count']} "
+                      f"mean={r['sum'] / max(r['count'], 1):.1f}ms "
+                      f"max={r['max']:.1f}ms", file=out)
+    summaries = [r for r in rows if r.get("kind") == "summary"]
+    for r in summaries:
+        print(f"\n{r['name']} [{r.get('arch', '?')}]: "
+              f"mean={r['mean_ms']:.2f}ms best={r['best_ms']:.2f}ms "
+              f"over {r.get('steps', '?')} steps", file=out)
+    return per
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", nargs="?",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "baselines",
+                                         "metrics_sample.jsonl"),
+                    help="metrics JSONL to report on (default: the "
+                    "committed sample)")
+    ap.add_argument("--generate", metavar="PATH", default=None,
+                    help="first (re)generate a sample metrics JSONL at "
+                    "PATH (short mixed lns12/lns16 MLP train + serve "
+                    "drain), then report on it")
+    args = ap.parse_args(argv)
+    path = args.path
+    if args.generate:
+        path = generate(args.generate)
+        print(f"[metrics_report] generated {path}\n")
+    report(path)
+
+
+if __name__ == "__main__":
+    main()

@@ -64,20 +64,23 @@ def analyze(record: dict, arch_cfg, cell, n_chips: int) -> dict:
     }
 
 
-def run(tag: str = "pod", n_chips: int = 256):
+def run(tag: str = "pod", n_chips: int = 256, measured: str = None):
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
     from repro.configs import get_config
     from repro.nn.config import SHAPE_CELLS
 
     path = os.path.join(RESULTS_DIR, f"dryrun_{tag}.json")
-    if not os.path.exists(path):
-        return [("roofline/missing", 0.0, f"run dryrun --roofline ({tag})")]
-    with open(path) as f:
-        data = json.load(f)
     rows = []
     md = ["| arch/cell | compute s | memory s | collective s | dominant | "
           "useful | bound MFU |", "|---|---|---|---|---|---|---|"]
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    else:
+        data = {}
+        rows.append(("roofline/missing", 0.0,
+                     f"run dryrun --roofline ({tag})"))
     for key in sorted(data):
         rec = data[key]
         if not rec.get("ok") or "roofline" not in rec:
@@ -92,12 +95,43 @@ def run(tag: str = "pod", n_chips: int = 256):
         md.append(f"| {key} | {a['compute_s']:.2e} | {a['memory_s']:.2e} | "
                   f"{a['collective_s']:.2e} | {a['dominant']} | "
                   f"{a['useful_ratio']:.3f} | {a['bound_mfu']:.3f} |")
+    if measured:
+        # Achieved wall-clock step times from a --metrics JSONL (the
+        # launcher's StepTimer summary rows), printed next to the model's
+        # roofline terms so predicted vs. achieved sit in one report.
+        from repro.obs.sink import read_jsonl
+        summaries = [r for r in read_jsonl(measured)
+                     if r.get("kind") == "summary"
+                     and r.get("name") == "train.step_time_ms"]
+        if summaries:
+            md += ["", "## Achieved step time (StepTimer, this host)", "",
+                   "| arch | spec | steps | mean ms | p50 ms | best ms |",
+                   "|---|---|---|---|---|---|"]
+        for r in summaries:
+            rows.append((f"roofline/measured/{r.get('arch', '?')}",
+                         r["mean_ms"] * 1e3,
+                         f"achieved mean step {r['mean_ms']:.1f} ms over "
+                         f"{r.get('steps', '?')} steps (best "
+                         f"{r['best_ms']:.1f} ms; StepTimer wall clock, "
+                         f"spec={r.get('spec', '?')})"))
+            md.append(f"| {r.get('arch', '?')} | {r.get('spec', '?')} | "
+                      f"{r.get('steps', '?')} | {r['mean_ms']:.1f} | "
+                      f"{r['p50_ms']:.1f} | {r['best_ms']:.1f} |")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"roofline_{tag}.md"), "w") as f:
         f.write("\n".join(md) + "\n")
     return rows
 
 
 if __name__ == "__main__":
-    import sys
-    for r in run(sys.argv[1] if len(sys.argv) > 1 else "pod"):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("tag", nargs="?", default="pod")
+    ap.add_argument("--n-chips", type=int, default=256)
+    ap.add_argument("--measured", default=None, metavar="PATH",
+                    help="metrics JSONL from 'launch.train --metrics'; "
+                    "records achieved StepTimer step times next to the "
+                    "model predictions")
+    args = ap.parse_args()
+    for r in run(args.tag, args.n_chips, measured=args.measured):
         print(",".join(map(str, r)))

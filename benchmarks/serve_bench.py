@@ -38,6 +38,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import NumericsPlan
 from repro.nn import init_params
+from repro.obs import JsonlSink, MetricsRegistry
 from repro.serve import (TERMINAL, ServeConfig, ServingEngine,
                          reference_generate)
 
@@ -59,26 +60,24 @@ def _mk_prompts(n, vocab, plen, seed=0):
 
 
 def _drive(engine, prompts, max_new):
-    """Submit all, drain; returns (wall_s, latencies_ms, stall_steps)."""
+    """Submit all, drain; returns (wall_s, latencies_ms, stall_steps).
+
+    Stall detection and per-request latency come from the engine's own
+    telemetry (``stats["stall_steps"]`` and the ``serve.latency_ms``
+    histogram in ``engine.registry``) rather than being recomputed here —
+    the bench consumes the same numbers the metrics sink would emit."""
+    stall0 = engine.stats["stall_steps"]
     rids = [engine.submit(p, max_new=max_new) for p in prompts]
-    stall = 0
     t0 = time.perf_counter()
     while any(engine.poll(r).state not in TERMINAL for r in rids):
-        decoders_before = int(engine.active.sum())
-        d0 = engine.stats["decode_steps"]
-        p0 = engine.stats["prefill_chunks"]
         engine.step()
-        ran_prefill = engine.stats["prefill_chunks"] > p0
-        ran_decode = engine.stats["decode_steps"] > d0
-        if ran_prefill and decoders_before > 0 and not ran_decode:
-            stall += 1  # a prefill chunk displaced ready decode work
     wall = time.perf_counter() - t0
-    lats = [1e3 * (engine.poll(r).finish_time - engine.poll(r).submit_time)
-            for r in rids]
-    return wall, lats, stall
+    lats = engine.registry.histogram_values("serve.latency_ms")
+    return wall, lats, engine.stats["stall_steps"] - stall0
 
 
-def records(arch="qwen3-1.7b", numerics="fp32", micro=False):
+def records(arch="qwen3-1.7b", numerics="fp32", micro=False,
+            metrics_rows=None):
     cfg = reduced(get_config(arch)).with_(numerics=numerics,
                                           param_dtype="float32",
                                           remat="none")
@@ -102,8 +101,15 @@ def records(arch="qwen3-1.7b", numerics="fp32", micro=False):
     seq_prompts = _mk_prompts(loads[0], cfg.vocab_size, plen, seed=1)
     for load in loads:
         prompts = _mk_prompts(load, cfg.vocab_size, plen, seed=1)
-        engine = ServingEngine(cfg, params, sc)
+        # A fresh per-load registry keeps each drive's latency histogram
+        # isolated; rows are folded into the shared --metrics registry.
+        reg = MetricsRegistry(base_labels={"component": "serve",
+                                           "arch": arch, "spec": numerics,
+                                           "mode": f"load{load}"})
+        engine = ServingEngine(cfg, params, sc, registry=reg)
         wall, lats, stall = _drive(engine, prompts, max_new)
+        if metrics_rows is not None:
+            metrics_rows.extend(reg.rows())
         toks = engine.stats["tokens_generated"]
         rows.append(_row(
             "serve_throughput", shape, "engine", wall * 1e3 / max(toks, 1),
@@ -180,10 +186,21 @@ def main(argv=None):
     ap.add_argument("--micro", action="store_true",
                     help="2-slot micro config for the CI tier-1 smoke row")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="also dump the engines' MetricsRegistry rows "
+                         "(rejections, queue depth, TTFT/TPOT/latency) "
+                         "as JSONL")
     args = ap.parse_args(argv)
-    rows = records(args.arch, args.numerics, args.micro)
+    metrics_rows = [] if args.metrics else None
+    rows = records(args.arch, args.numerics, args.micro,
+                   metrics_rows=metrics_rows)
     with open(args.out, "w") as f:
         json.dump({"benchmark": "serve", "rows": rows}, f, indent=1)
+    if args.metrics:
+        with JsonlSink(args.metrics) as sink:
+            sink.write(metrics_rows, source="serve_bench")
+        print(f"[serve_bench] wrote {len(metrics_rows)} metric rows "
+              f"to {args.metrics}")
     for r in rows:
         extra = ""
         if r["op"] == "serve_throughput":

@@ -221,3 +221,44 @@ print(f"occupancy {engine.occupancy:.2f}/{_sc.max_batch} slots, "
 # surface from §6) — bit-identical to the training forward by the
 # fusion contract, one launch per matmul instead of kernel + epilogues.
 print(f"numerics (fused-infer dispatch): {engine.matmul_path}")
+
+print("\n=== 8. Watching your numerics: the obs telemetry subsystem ===")
+# Telemetry is observer-only by contract: counters are pure reads of op
+# inputs/outputs, collected as extra int32 outputs of a SEPARATE jitted
+# entry point (train_step_metrics).  The plain train_step never pushes a
+# collector, so its graph is byte-for-byte the uninstrumented one, and
+# metrics-on weight codes are bit-identical to metrics-off (pinned in
+# tests/test_obs.py).  Per-layer opt-in via the plan's `metrics` axis:
+# off | counters | full (full adds the Δ-LUT |d|-occupancy histogram).
+from repro.obs import DHIST_EDGES, MetricsRegistry
+
+_ocfg = MLPConfig(n_in=24, n_hidden=16, n_out=10, lr=0.01,
+                  spec="lns16-train-emulate;hidden=fmt:lns12,metrics:full",
+                  matmul_block=8)
+_om = make_mlp("lns", _ocfg)
+_op = _om.init(jax.random.PRNGKey(0))
+_ox = np.random.default_rng(0).normal(size=(8, 24)).astype(np.float32)
+_oy = np.random.default_rng(1).integers(0, 10, size=(8,))
+(_op2, _loss), _taps = _om.train_step_metrics(_op, _ox, _oy)
+(_op2_plain, _loss_plain) = _om.train_step(_op, _ox, _oy)
+assert np.array_equal(_op2["w1"].code, _op2_plain["w1"].code)
+print(f"metrics-on == metrics-off weight codes: True "
+      f"({len(_taps)} tap labels collected)")
+
+# Structured sinks: a MetricsRegistry aggregates taps (with the resolved
+# execution lane per layer) into labeled counter/histogram rows; JsonlSink
+# flushes them per step.  The CLI surfaces:
+#   python -m repro.launch.train --arch ... --metrics out.jsonl
+#   python benchmarks/serve_bench.py --micro --metrics serve.jsonl
+#   python benchmarks/metrics_report.py out.jsonl   # per-layer summary
+_reg = MetricsRegistry(base_labels={"spec": str(_om.plan)})
+_reg.merge_numerics_taps(jax.device_get(_taps), lanes=_om.lanes())
+_sat = _reg.counter_value("numerics.sat", layer="hidden", op="act",
+                          lane="emulate")
+_el = _reg.counter_value("numerics.elems", layer="hidden", op="act",
+                         lane="emulate")
+print(f"hidden/act saturation: {_sat}/{_el} codes at lns12 code_max")
+_dh = [r for r in _reg.rows() if r["kind"] == "bucketed_histogram"
+       and r["layer"] == "hidden"][0]
+print(f"Δ-LUT occupancy (edges {DHIST_EDGES}): {_dh['counts']} — last "
+      f"bucket is |d| beyond the paper LUT's d_max (Δ≈0 region)")

@@ -175,6 +175,53 @@ def lns_matmul(x: LNSArray, w: LNSArray, eng: DeltaEngine,
     return boxsum(prod, axis=prod.ndim - 2, eng=eng, order=order)
 
 
+def matmul_dhist(x: LNSArray, w: LNSArray, eng: DeltaEngine,
+                 edges_log2=None) -> jax.Array:
+    """Δ-LUT occupancy of a sequential ⊞-MAC matmul: an int32 histogram of
+    the ``|d| = |X - Y|`` values entering the Δ engine.
+
+    Replays ``lns_matmul(x, w, eng, order="sequential")``'s exact MAC
+    order (the order both backends execute bit-identically) and, at each
+    accumulate, buckets ``|acc.code - prod.code|`` by the log2-magnitude
+    ``edges_log2`` (default :data:`repro.obs.metrics.DHIST_EDGES`) scaled
+    onto the format's code grid.  Zero-operand accumulates are skipped —
+    ``x ⊞ 0`` bypasses the Δ engine (eq. 3's zero handling), so they are
+    not LUT traffic.  Returns shape ``(len(edges) + 1,)``: last bucket =
+    beyond the table's ``d_max`` region.
+
+    Telemetry only: the histogram is carried in the scan state (never
+    leaked), the caller's result comes from the real matmul, and this
+    shadow pass is only run when a layer opts into ``metrics=full``.
+    """
+    if edges_log2 is None:
+        from ..obs.metrics import DHIST_EDGES
+        edges_log2 = DHIST_EDGES
+    fmt = eng.fmt
+    edges = jnp.asarray([int(round(e * fmt.scale)) for e in edges_log2],
+                        jnp.int32)
+    nb = len(edges_log2) + 1
+    px = LNSArray(x.code[..., :, :, None], x.sign[..., :, :, None])
+    pw = LNSArray(w.code[None, :, :], w.sign[None, :, :])
+    prod = boxdot(px, pw, fmt)
+    code = jnp.moveaxis(prod.code, prod.ndim - 2, 0)
+    sign = jnp.moveaxis(prod.sign, prod.ndim - 2, 0)
+    init_acc = LNSArray(jnp.full(code.shape[1:], fmt.zero_code, jnp.int32),
+                        jnp.zeros(code.shape[1:], jnp.int8))
+
+    def step(carry, xs):
+        acc, hist = carry
+        c, s = xs
+        live = (acc.code != fmt.zero_code) & (c != fmt.zero_code)
+        d = jnp.abs(acc.code - c)
+        b = jnp.searchsorted(edges, d, side="right")
+        hist = hist.at[b.ravel()].add(live.ravel().astype(jnp.int32))
+        return (boxplus(acc, LNSArray(c, s), eng), hist), None
+
+    (_, hist), _ = jax.lax.scan(
+        step, (init_acc, jnp.zeros((nb,), jnp.int32)), (code, sign))
+    return hist
+
+
 def bias_add(z: LNSArray, b: LNSArray, eng: DeltaEngine) -> LNSArray:
     """z ⊞ b with the bias broadcast over z's leading axes."""
     bb = LNSArray(jnp.broadcast_to(b.code, z.shape),

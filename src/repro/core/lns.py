@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _obs
 from .formats import LNSFormat
 
 
@@ -70,11 +71,15 @@ def encode(v: jax.Array, fmt: LNSFormat) -> LNSArray:
     # Avoid log2(0): the zero lanes are overwritten below.
     safe = jnp.where(mag > 0, mag, 1.0)
     x = jnp.log2(safe)
-    code = jnp.round(x * fmt.scale).astype(jnp.int32)
+    raw = jnp.round(x * fmt.scale)
+    code = raw.astype(jnp.int32)
+    if _obs.scope_active():
+        # Pre-clip quantization health (pure reads; results unchanged).
+        _obs.observe_quantize(code, mag > 0, fmt)
     code = jnp.clip(code, fmt.min_nonzero_code, fmt.code_max)
     code = jnp.where(mag > 0, code, np.int32(fmt.zero_code))
     # Flush-to-zero for true underflow (rounded below representable range).
-    underflow = jnp.round(x * fmt.scale) < fmt.min_nonzero_code
+    underflow = raw < fmt.min_nonzero_code
     code = jnp.where((mag > 0) & underflow, np.int32(fmt.zero_code), code)
     sign = (v < 0).astype(jnp.int8)
     return LNSArray(code, sign)
@@ -128,6 +133,9 @@ def convert_format(a: LNSArray, src: LNSFormat, dst: LNSFormat) -> LNSArray:
     else:
         half = 1 << (-shift - 1)
         code = (a.code + half) >> (-shift)
+    if _obs.scope_active():
+        # Pre-clip crossing health against the destination grid.
+        _obs.observe_convert(a.code != src.zero_code, code, dst)
     underflow = code < dst.min_nonzero_code
     code = jnp.clip(code, dst.min_nonzero_code, dst.code_max)
     zero = (a.code == src.zero_code) | underflow
@@ -358,22 +366,36 @@ class LNSMatmulBackend:
                              dst_fmt=out_fmt, emit_z_sign=emit_z_sign)
             bm, bn, bk = self._op_blocks("fwd", x.shape[0], w.shape[1],
                                          x.shape[1])
-            return lns_matmul_fused_kernel(
+            out = lns_matmul_fused_kernel(
                 x, w, epilogue=ep, bias=bias, fmt=self.fmt, spec=self.spec,
                 block_m=bm, block_n=bn, block_k=bk,
                 interpret=self._interp())
-        from .activations import llrelu
-        from .arithmetic import bias_add
-        eng = _cached_engine(self.spec, self.fmt)
-        z = self.matmul(x, w)
-        if bias is not None:
-            z = bias_add(z, bias, eng)
-        z_sign = z.sign
-        if llrelu_beta is not None:
-            z = llrelu(z, llrelu_beta, self.fmt)
-        if out_fmt is not None:
-            z = convert_format(z, self.fmt, out_fmt)
-        return (z, z_sign) if emit_z_sign else z
+        else:
+            from .activations import llrelu
+            from .arithmetic import bias_add
+            eng = _cached_engine(self.spec, self.fmt)
+            # Suspend inner taps (the convert_format inside this
+            # composition would tap on emulate but not inside the Pallas
+            # kernel): both backends emit exactly the dispatch-level
+            # epi_fwd tap below, so label sets are backend-identical.
+            with _obs.suspended():
+                z = self.matmul(x, w)
+                if bias is not None:
+                    z = bias_add(z, bias, eng)
+                z_sign = z.sign
+                if llrelu_beta is not None:
+                    z = llrelu(z, llrelu_beta, self.fmt)
+                if out_fmt is not None:
+                    z = convert_format(z, self.fmt, out_fmt)
+            out = (z, z_sign) if emit_z_sign else z
+        if _obs.scope_active():
+            # Flush hook: epilogued output health, identical labels on
+            # both backends (the tap lives at the dispatch level, outside
+            # the kernel's custom_vjp/jit internals).
+            _obs.observe_codes(out[0] if emit_z_sign else out,
+                               out_fmt if out_fmt is not None else self.fmt,
+                               op="epi_fwd")
+        return out
 
     def matmul_dw_update(self, x: "LNSArray", dy: "LNSArray",
                          w: "LNSArray", m: "LNSArray | None", epilogue):
@@ -390,14 +412,18 @@ class LNSMatmulBackend:
             from ..kernels.lns_matmul import lns_matmul_dw_update_kernel
             bk, bn, bm = self._op_blocks("dw", x.shape[1], dy.shape[1],
                                          x.shape[0])
-            return lns_matmul_dw_update_kernel(
+            out = lns_matmul_dw_update_kernel(
                 x, dy, w=w, m=m, epilogue=epilogue, fmt=self.fmt,
                 spec=self.spec, block_k=bk, block_n=bn, block_m=bm,
                 interpret=self._interp())
-        from .sgd import apply_update_codes
-        g = self.matmul_dw(x, dy)
-        return apply_update_codes(w, g, m, epilogue,
-                                  _cached_engine(self.spec, self.fmt))
+        else:
+            from .sgd import apply_update_codes
+            g = self.matmul_dw(x, dy)
+            out = apply_update_codes(w, g, m, epilogue,
+                                     _cached_engine(self.spec, self.fmt))
+        if _obs.scope_active():
+            _obs.observe_codes(out[0], self.fmt, op="epi_dw_update")
+        return out
 
     def fused_update(self, w: "LNSArray", g: "LNSArray",
                      m: "LNSArray | None", epilogue):
@@ -412,9 +438,13 @@ class LNSMatmulBackend:
         """
         if self.backend == "pallas":
             from ..kernels.lns_matmul import lns_fused_update_kernel
-            return lns_fused_update_kernel(
+            out = lns_fused_update_kernel(
                 w, g, m=m, epilogue=epilogue, fmt=self.fmt, spec=self.spec,
                 interpret=self._interp())
-        from .sgd import apply_update_codes
-        return apply_update_codes(w, g, m, epilogue,
-                                  _cached_engine(self.spec, self.fmt))
+        else:
+            from .sgd import apply_update_codes
+            out = apply_update_codes(w, g, m, epilogue,
+                                     _cached_engine(self.spec, self.fmt))
+        if _obs.scope_active():
+            _obs.observe_codes(out[0], self.fmt, op="epi_update")
+        return out

@@ -29,6 +29,7 @@ an N-file threading exercise: every consumer reads the same object.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Optional
@@ -45,6 +46,14 @@ from .lns import MATMUL_BACKENDS, LNSMatmulBackend, _cached_engine
 REDUCE_MODES = ("boxplus", "float-psum")
 REDUCE_SCHEDULES = ("sequential", "tree")
 INTERPRET_MODES = ("auto", "on", "off")
+#: The ``metrics`` axis: telemetry *eligibility* per spec (plan-addressable
+#: per layer).  "counters" — saturation/flush counters when a collector is
+#: active; "full" — additionally the Δ-LUT |d| occupancy histogram (runs a
+#: shadow sequential ⊞-MAC: observably slower, results unchanged); "off" —
+#: this layer never reports.  The master switch is *which entry point* you
+#: call (``train_step`` vs ``train_step_metrics``): with no collector
+#: active, every mode is a true no-op and the jitted graphs are identical.
+METRICS_MODES = ("off", "counters", "full")
 QUANTIZE_AXES = ("params", "acts", "grads")
 COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
 #: The ``blocks`` axis: "default" (caller-/runtime-chosen tile sizes),
@@ -150,6 +159,7 @@ class NumericsSpec:
     ``backend``             ``backend``              emulate | pallas
     ``interpret``           ``interpret``            auto | on | off
     ``blocks``              ``blocks``               default | auto | ``<M>x<N>x<K>``
+    ``metrics``             ``metrics``              off | counters | full
     ``reduce.mode``         ``reduce.mode``          boxplus | float-psum
     ``reduce.grad_segments``  ``reduce.grad_segments``  int >= 0
     ``reduce.schedule``     ``reduce.schedule``      sequential | tree
@@ -166,6 +176,7 @@ class NumericsSpec:
     backend: str = "emulate"         # one of core.lns.MATMUL_BACKENDS
     interpret: str = "auto"          # one of INTERPRET_MODES
     blocks: str = "default"          # one of BLOCK_MODES (kernel tiling)
+    metrics: str = "counters"        # one of METRICS_MODES (telemetry)
     reduce: ReduceSpec = ReduceSpec()
 
     def __post_init__(self):
@@ -175,6 +186,8 @@ class NumericsSpec:
             raise _bad_value("interpret", self.interpret, INTERPRET_MODES)
         if self.blocks not in ("default", "auto"):
             parse_blocks(self.blocks)  # raises with the valid forms
+        if self.metrics not in METRICS_MODES:
+            raise _bad_value("metrics", self.metrics, METRICS_MODES)
         if self.compute_dtype not in COMPUTE_DTYPES:
             raise _bad_value("compute_dtype", self.compute_dtype,
                              COMPUTE_DTYPES)
@@ -283,6 +296,7 @@ class NumericsSpec:
             "backend": self.backend,
             "interpret": self.interpret,
             "blocks": self.blocks,
+            "metrics": self.metrics,
             "reduce.mode": self.reduce.mode,
             "reduce.grad_segments": str(self.reduce.grad_segments),
             "reduce.schedule": self.reduce.schedule,
@@ -374,7 +388,7 @@ def _fmt_from_str(s: str) -> Optional[LNSFormat]:
 
 
 _PARSE_KEYS = ("fmt", "delta", "quantize", "compute_dtype", "backend",
-               "interpret", "blocks", "reduce.mode",
+               "interpret", "blocks", "metrics", "reduce.mode",
                "reduce.grad_segments", "reduce.schedule")
 
 
@@ -584,6 +598,19 @@ class LNSRuntime:
         return str(self.spec)
 
     @property
+    def lane(self) -> str:
+        """The *resolved* execution lane of this runtime's matmuls, for
+        metrics rows: a plan may say ``backend=pallas,interpret=auto`` —
+        this answers what actually runs ("emulate", "pallas-hw",
+        "pallas-interpret", or "float-<dtype>" off the ⊞-MAC path)."""
+        s = self.spec
+        if s.delta_spec is None or s.fmt is None:
+            return f"float-{s.compute_dtype}"
+        if s.backend == "emulate":
+            return "emulate"
+        return "pallas-interpret" if self.matmul._interp() else "pallas-hw"
+
+    @property
     def dtype(self):
         return jnp.dtype(self.spec.compute_dtype)
 
@@ -608,24 +635,30 @@ class LNSRuntime:
         forward otherwise); plain quantized numerics run STE-quantized
         float matmuls on the MXU dtype.
         """
-        s = self.spec
-        if s.delta_spec is not None:
-            if s.quantize_grads:
-                # Forward AND cotangent matmuls on the ⊞-MAC path
-                # (custom_vjp boundary in kernels/lns_matmul/ops.py); lazy
-                # import keeps core importable without the kernels package.
-                from ..kernels.lns_matmul import lns_matmul_trainable
-                return lns_matmul_trainable(
-                    x, w, numerics=s, block_m=self.block_m,
-                    block_n=self.block_n, block_k=self.block_k)
-            if s.backend != "emulate":
-                # Forward-only on the dispatcher (Pallas kernels off the
-                # emulation): the batched-serving path of the kernels.
-                from .qat import lns_dot_dispatch
-                return lns_dot_dispatch(x, w, self.matmul)
-            from .qat import lns_dot_exact
-            return lns_dot_exact(x, w, s.fmt, s.delta_spec)
-        return jnp.matmul(self.q_act(x), self.q_param(w))
+        with self._tapping(op="linear") as observe:
+            s = self.spec
+            if s.delta_spec is not None:
+                if s.quantize_grads:
+                    # Forward AND cotangent matmuls on the ⊞-MAC path
+                    # (custom_vjp boundary in kernels/lns_matmul/ops.py);
+                    # lazy import keeps core importable without the
+                    # kernels package.
+                    from ..kernels.lns_matmul import lns_matmul_trainable
+                    out = lns_matmul_trainable(
+                        x, w, numerics=s, block_m=self.block_m,
+                        block_n=self.block_n, block_k=self.block_k)
+                elif s.backend != "emulate":
+                    # Forward-only on the dispatcher (Pallas kernels off
+                    # the emulation): the batched-serving path.
+                    from .qat import lns_dot_dispatch
+                    out = lns_dot_dispatch(x, w, self.matmul)
+                else:
+                    from .qat import lns_dot_exact
+                    out = lns_dot_exact(x, w, s.fmt, s.delta_spec)
+            else:
+                out = jnp.matmul(self.q_act(x), self.q_param(w))
+        observe(out)
+        return out
 
     def linear_infer(self, x, w):
         """Forward-only :meth:`linear` for serving (decode / prefill).
@@ -641,12 +674,40 @@ class LNSRuntime:
         training must use :meth:`linear`.
         """
         s = self.spec
+        if s.delta_spec is not None and (s.quantize_grads
+                                         or s.backend != "emulate"):
+            with self._tapping(op="linear_infer") as observe:
+                from .qat import lns_dot_fused
+                out = lns_dot_fused(x, w, self.matmul)
+            observe(out)
+            return out
         if s.delta_spec is None:
-            return jnp.matmul(self.q_act(x), self.q_param(w))
-        if s.quantize_grads or s.backend != "emulate":
-            from .qat import lns_dot_fused
-            return lns_dot_fused(x, w, self.matmul)
-        return self.linear(x, w)
+            with self._tapping(op="linear_infer") as observe:
+                out = jnp.matmul(self.q_act(x), self.q_param(w))
+            observe(out)
+            return out
+        return self.linear(x, w)  # observed under op="linear"
+
+    @contextlib.contextmanager
+    def _tapping(self, *, op: str):
+        """Scope-gated float-view health tap on a linear output.
+
+        Yields an ``observe(out)`` callback and, while active, *suspends*
+        collection — the dispatched implementations contain inner traces
+        (``custom_vjp`` rules, STE quantizers, jitted kernel wrappers)
+        where a core-op tap would capture an inner tracer on the
+        Python-side collector and leak it.  The linear-level output tap
+        is the per-layer signal instead.  Fires only when this spec opted
+        in (``metrics != "off"``), a collector is live, AND an ambient
+        ``obs.scope`` names the layer (scopes are never set inside
+        grad-of regions by contract).  Pure reads; never changes results.
+        """
+        from ..obs import metrics as _obs
+        if self.spec.metrics == "off" or not _obs.scope_active():
+            yield lambda out: None
+            return
+        with _obs.suspended():
+            yield lambda out: _obs.observe_float(out, self.spec.fmt, op=op)
 
     @property
     def matmul_path(self) -> str:

@@ -41,6 +41,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.plan import NumericsPlan
 from ..core.spec import ReduceSpec
+from ..obs import metrics as _obs
+from ..obs.trace import phase_scope
 from .lns_reduce import (combine_partials, deterministic_boxplus_allreduce,
                          float_psum_allreduce)
 
@@ -189,8 +191,7 @@ class LNSDataParallelMLP:
         return self.inner.param_runtimes[param].spec.backend == "pallas"
 
     # -- the DP step -----------------------------------------------------
-    @functools.partial(jax.jit, static_argnums=0)
-    def train_step(self, params, xb, yb, momentum=None):
+    def _step_impl(self, params, xb, yb, momentum=None):
         inner, dp = self.inner, self.dp
         segments = dp.segments(xb.shape[0])
         segs_local = segments // dp.num_devices
@@ -220,11 +221,45 @@ class LNSDataParallelMLP:
             in_specs=(P(), P(axis), P(axis)),
             out_specs=(P(), P()),
             check_rep=False)
-        grads, loss = mapped(params, xb, yb)
-        new_params, momentum = inner.apply_updates(params, grads, momentum)
+        # Taps must not fire inside the shard_map body (the per-device
+        # trace's values would leak onto the Python-side collector), so
+        # collection is suspended across the mapped call; the combined
+        # gradients are observed below on the replicated values — the DP
+        # canonical-reduce schedule itself is untouched.
+        with phase_scope("reduce"), _obs.suspended():
+            grads, loss = mapped(params, xb, yb)
+        if _obs.enabled():
+            from ..paper.mlp import PARAM_LAYER
+            for k, g in grads.items():
+                layer = PARAM_LAYER[k]
+                if inner.metrics_levels[layer] != "off":
+                    _obs.observe_codes(g, inner.param_fmts[k], layer=layer,
+                                       op=f"dp_grad.{k}")
+        with phase_scope("update"):
+            new_params, momentum = inner.apply_updates(params, grads,
+                                                       momentum)
         if momentum is None:
             return new_params, loss
         return new_params, momentum, loss
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step(self, params, xb, yb, momentum=None):
+        """Plain DP step — no collector, telemetry gates statically off,
+        jitted graph unchanged from the pre-obs subsystem."""
+        return self._step_impl(params, xb, yb, momentum)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step_metrics(self, params, xb, yb, momentum=None):
+        """:meth:`train_step` + numerics taps → ``(step_outputs, taps)``.
+
+        Per-leaf combined-gradient health (``dp_grad.*``) plus the update
+        epilogue taps from ``inner.apply_updates``; in-shard_map compute
+        reports nothing (collection is suspended there by construction).
+        Step outputs are bit-identical to :meth:`train_step`.
+        """
+        with _obs.collecting() as col:
+            out = self._step_impl(params, xb, yb, momentum)
+            return out, col.taps()
 
 
 def reference_train_step(inner, params, xb, yb, *, grad_segments: int,

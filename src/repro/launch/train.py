@@ -24,6 +24,8 @@ from ..core.plan import NumericsPlan
 from ..data import DataConfig, SyntheticLMDataset
 from ..nn import Runtime, init_params
 from ..nn.config import ShapeCell
+from ..obs import JsonlSink, MetricsRegistry, StepTimer, maybe_profile
+from ..obs import metrics as _obs
 from ..optim.optimizers import AdamWConfig, SGDConfig
 from ..train import TrainConfig, init_train_state, make_train_step
 
@@ -63,6 +65,15 @@ def main(argv=None):
                     "--numerics spec says (reduce.mode=...), else "
                     "float-psum")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write per-step numerics + timing telemetry as "
+                    "JSONL (loss, step_time_ms, per-layer saturation/"
+                    "zero-rate counters).  Uses a separate metrics-enabled "
+                    "jitted step; weight codes stay bit-identical to a "
+                    "run without --metrics")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="dump a jax.profiler trace of the training loop "
+                    "there (also honours $REPRO_TRACE_DIR)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--allow-numerics-mismatch", action="store_true",
                     help="restore a checkpoint whose stamped numerics "
@@ -138,26 +149,88 @@ def main(argv=None):
             print(f"[train] resumed from step {start}")
 
     ds = SyntheticLMDataset(cfg, cell, DataConfig(seed=args.seed))
-    step_fn = jax.jit(make_train_step(cfg, opt, rt, tc), donate_argnums=0)
+    base_step = make_train_step(cfg, opt, rt, tc)
+    if args.metrics:
+        # Metrics lane: a SEPARATE jitted entry point that wraps the same
+        # unjitted step in a collector and observes the *updated* params
+        # per leaf, outside the grad region (observer-only, so weight
+        # codes are bit-identical to the plain step — tests/test_obs.py
+        # pins that for the paper MLP; here the step body is shared).
+        from jax.tree_util import tree_flatten_with_path
+        known = known_layer_paths(cfg)
+
+        def _leaf_layer(path):
+            parts = [str(getattr(k, "key", k)) for k in path]
+            dotted = ".".join(parts)
+            best = ""
+            for kp in known:
+                if ((dotted == kp or dotted.startswith(kp + "."))
+                        and len(kp) > len(best)):
+                    best = kp
+            return best or parts[0]
+
+        def metrics_step(state, batch):
+            with _obs.collecting() as col:
+                state2, metrics = base_step(state, batch)
+                for path, leaf in tree_flatten_with_path(
+                        state2["params"])[0]:
+                    layer = _leaf_layer(path)
+                    spec = plan.resolve(layer)
+                    if spec.metrics == "off" or spec.fmt is None:
+                        continue
+                    name = str(getattr(path[-1], "key", "param"))
+                    _obs.observe_float(leaf, spec.fmt, layer=layer,
+                                       op=f"param.{name}")
+                return state2, metrics, col.taps()
+
+        step_fn = jax.jit(metrics_step, donate_argnums=0)
+        registry = MetricsRegistry(base_labels={
+            "component": "train", "arch": args.arch, "spec": str(plan)})
+        lanes = {p: plan.runtime_for(p).lane for p in known}
+        sink = JsonlSink(args.metrics)
+    else:
+        step_fn = jax.jit(base_step, donate_argnums=0)
+        registry = sink = None
+    timer = StepTimer()
     if state_sharding is not None:
         state = jax.device_put(state, state_sharding)
 
     t0 = time.time()
     losses = []
-    for step in range(start, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
-        if batch_sharding is not None:
-            batch = jax.device_put(batch, batch_sharding)
-        state, metrics = step_fn(state, batch)
-        losses.append(float(metrics["loss"]))
-        if (step + 1) % args.log_every == 0 or step == args.steps - 1:
-            dt = (time.time() - t0) / max(len(losses), 1)
-            print(f"[train] step {step + 1}/{args.steps} "
-                  f"loss {losses[-1]:.4f} ({dt * 1e3:.0f} ms/step)")
-        if mgr is not None and (step + 1) % args.ckpt_every == 0:
-            mgr.save(step + 1, state, blocking=False)
+    with maybe_profile(args.profile_dir):
+        for step in range(start, args.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in ds.batch_at(step).items()}
+            if batch_sharding is not None:
+                batch = jax.device_put(batch, batch_sharding)
+            with timer.span("train.step"):
+                if sink is not None:
+                    state, metrics, taps = step_fn(state, batch)
+                else:
+                    state, metrics = step_fn(state, batch)
+                losses.append(float(metrics["loss"]))  # blocks on device
+            if sink is not None:
+                registry.merge_numerics_taps(
+                    jax.device_get(taps), lanes=lanes)
+                sink.write(registry.rows(reset=True), step=step + 1,
+                           loss=losses[-1],
+                           step_time_ms=timer.last("train.step"))
+            if (step + 1) % args.log_every == 0 or step == args.steps - 1:
+                dt = (time.time() - t0) / max(len(losses), 1)
+                print(f"[train] step {step + 1}/{args.steps} "
+                      f"loss {losses[-1]:.4f} ({dt * 1e3:.0f} ms/step)")
+            if mgr is not None and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, state, blocking=False)
     if mgr is not None:
         mgr.save(args.steps, state, blocking=True)
+    if sink is not None:
+        summary = timer.summary(skip_first=1)["train.step"]
+        sink.write_row({"kind": "summary", "name": "train.step_time_ms",
+                        **summary, "arch": args.arch, "spec": str(plan),
+                        "steps": len(losses), "final_loss": losses[-1]})
+        sink.close()
+        print(f"[train] metrics written to {args.metrics} "
+              f"(mean step {summary['mean_ms']:.1f} ms)")
     print(f"[train] done: first loss {losses[0]:.4f} → last "
           f"{losses[-1]:.4f}")
     return losses

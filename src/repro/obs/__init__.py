@@ -1,0 +1,55 @@
+"""Observability: in-graph numerics counters, step tracing, metric sinks.
+
+Import discipline: this package must not import ``repro.core`` (core ops
+import *it* for the tap hooks) — only jax + stdlib.
+"""
+from .metrics import (
+    DHIST_EDGES,
+    NumericsCollector,
+    collecting,
+    current_scope,
+    dhist_edges_codes,
+    enabled,
+    observe_codes,
+    observe_convert,
+    observe_float,
+    observe_quantize,
+    scope,
+    scope_active,
+    suspended,
+    tap,
+)
+from .registry import MetricsRegistry
+from .sink import JsonlSink, read_jsonl
+from .trace import (
+    StepTimer,
+    TRACE_DIR_ENV,
+    maybe_profile,
+    phase_scope,
+    profiler_session,
+)
+
+__all__ = [
+    "DHIST_EDGES",
+    "NumericsCollector",
+    "collecting",
+    "current_scope",
+    "dhist_edges_codes",
+    "enabled",
+    "observe_codes",
+    "observe_convert",
+    "observe_float",
+    "observe_quantize",
+    "scope",
+    "scope_active",
+    "suspended",
+    "tap",
+    "MetricsRegistry",
+    "JsonlSink",
+    "read_jsonl",
+    "StepTimer",
+    "TRACE_DIR_ENV",
+    "maybe_profile",
+    "phase_scope",
+    "profiler_session",
+]

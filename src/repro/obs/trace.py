@@ -1,0 +1,102 @@
+"""Step tracing: profiler named scopes + host-side monotonic timers.
+
+Two complementary clocks:
+
+* ``phase_scope(name)`` — a ``jax.named_scope`` wrapper, safe inside
+  jitted bodies: it annotates HLO ops for the profiler UI and changes no
+  results.  The train/serve steps tag their phases (``fwd`` / ``dx`` /
+  ``dw`` / ``reduce`` / ``update``, ``prefill`` / ``decode``) with it.
+* ``StepTimer`` — host-side ``perf_counter`` wall times around dispatch
+  boundaries (the number a user actually waits for).  Callers must
+  ``block_until_ready`` (or read a host value) before ``record`` if they
+  want device time included; the launch CLI does.
+
+``profiler_session`` / ``maybe_profile`` wrap ``jax.profiler`` trace
+dumps behind a directory argument or the ``REPRO_TRACE_DIR`` env var.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+
+import jax
+
+#: Env var that, when set to a directory, makes ``maybe_profile`` dump a
+#: jax.profiler trace there even without an explicit CLI flag.
+TRACE_DIR_ENV = "REPRO_TRACE_DIR"
+
+
+def phase_scope(name):
+    """Profiler-visible named scope; trace-safe, results unchanged."""
+    return jax.named_scope(name)
+
+
+class StepTimer:
+    """Named host-side monotonic timers with simple summaries.
+
+    >>> t = StepTimer()
+    >>> with t.span("train.step"):
+    ...     out = step_fn(...); jax.block_until_ready(out)
+    >>> t.last("train.step")  # ms
+    """
+
+    def __init__(self):
+        self._samples: dict = {}
+
+    def record(self, name, ms):
+        self._samples.setdefault(name, []).append(float(ms))
+
+    @contextlib.contextmanager
+    def span(self, name):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.record(name, (time.perf_counter() - t0) * 1e3)
+
+    def last(self, name):
+        s = self._samples.get(name)
+        return s[-1] if s else None
+
+    def samples(self, name):
+        return list(self._samples.get(name, ()))
+
+    def summary(self, skip_first=0):
+        """Per-name stats dict: count / mean_ms / p50_ms / best_ms.
+        ``skip_first`` drops warmup (compile) samples from the stats of
+        every series that has more than that many samples."""
+        out = {}
+        for name, s in sorted(self._samples.items()):
+            body = s[skip_first:] if len(s) > skip_first else s
+            srt = sorted(body)
+            out[name] = {
+                "count": len(s),
+                "mean_ms": sum(body) / len(body),
+                "p50_ms": srt[len(srt) // 2],
+                "best_ms": srt[0],
+            }
+        return out
+
+
+@contextlib.contextmanager
+def profiler_session(trace_dir):
+    """Dump a jax.profiler trace of the enclosed region to trace_dir."""
+    os.makedirs(trace_dir, exist_ok=True)
+    jax.profiler.start_trace(trace_dir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+@contextlib.contextmanager
+def maybe_profile(trace_dir=None):
+    """``profiler_session`` if a directory is given via argument or
+    ``$REPRO_TRACE_DIR``; otherwise a no-op context."""
+    trace_dir = trace_dir or os.environ.get(TRACE_DIR_ENV)
+    if not trace_dir:
+        yield None
+        return
+    with profiler_session(trace_dir):
+        yield trace_dir

@@ -28,6 +28,7 @@ under mixed-format plans.  The legacy loose knobs (``matmul_backend=`` /
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import warnings
@@ -36,6 +37,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import metrics as _obs
+from ..obs.trace import phase_scope
 
 from ..core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
                     DELTA_SOFTMAX, FXP12, FXP16, LNS12, LNS16, DeltaEngine,
@@ -381,6 +385,33 @@ class LNSMLP:
         self.eng = self.engs["hidden"]
         self.runtime = self.runtimes["hidden"]
         self.mm = self.runtime.matmul
+        # Telemetry eligibility per layer (the plan's `metrics` axis); the
+        # master switch is which entry point runs (train_step vs
+        # train_step_metrics) — see repro.obs.metrics.
+        self.metrics_levels = {p: self.runtimes[p].spec.metrics
+                               for p in LAYER_PATHS}
+
+    def lanes(self) -> dict:
+        """Layer path → resolved execution lane, for metrics rows."""
+        return {p: self.runtimes[p].lane for p in LAYER_PATHS}
+
+    # -- telemetry gates (no-ops unless a collector is active) -------------
+    def _collect(self, layer: str, level: str = "counters") -> bool:
+        """Should this layer tap at ``level`` right now?"""
+        if not _obs.enabled():
+            return False
+        mode = self.metrics_levels[layer]
+        if mode == "off":
+            return False
+        return mode == "full" if level == "full" else True
+
+    def _scope(self, layer: str, op: str):
+        """Ambient tap scope for ``layer`` — a null context unless a
+        collector is live and the layer's spec opted in, so the plain
+        train_step never even pushes scope state."""
+        if self._collect(layer):
+            return _obs.scope(layer, op)
+        return contextlib.nullcontext()
 
     def init(self, key):
         k1, k2 = jax.random.split(key)
@@ -419,16 +450,25 @@ class LNSMLP:
         mm_o = self.runtimes["out"].matmul
         fh, fo = self.fmts["hidden"], self.fmts["out"]
         if self.cfg.fused:
-            a1, z1_sign = mm_h.matmul_fused(
-                x, params["w1"], bias=params["b1"], llrelu_beta=self.beta,
-                out_fmt=fo, emit_z_sign=True)
-            z2 = mm_o.matmul_fused(a1, params["w2"], bias=params["b2"])
-            return z1_sign, a1, z2
-        z1 = mm_h.affine(x, params["w1"], params["b1"])
-        a1 = llrelu(z1, self.beta, fh)
-        a1 = convert_format(a1, fh, fo)
-        z2 = mm_o.affine(a1, params["w2"], params["b2"])
-        return z1.sign, a1, z2
+            with self._scope("hidden", "fwd"):  # epi_fwd flush tap
+                a1, z1_sign = mm_h.matmul_fused(
+                    x, params["w1"], bias=params["b1"],
+                    llrelu_beta=self.beta, out_fmt=fo, emit_z_sign=True)
+            with self._scope("out", "fwd"):
+                z2 = mm_o.matmul_fused(a1, params["w2"], bias=params["b2"])
+        else:
+            with self._scope("hidden", "fwd"):  # convert_* taps
+                z1 = mm_h.affine(x, params["w1"], params["b1"])
+                a1 = llrelu(z1, self.beta, fh)
+                a1 = convert_format(a1, fh, fo)
+            with self._scope("out", "fwd"):
+                z2 = mm_o.affine(a1, params["w2"], params["b2"])
+            z1_sign = z1.sign
+        if self._collect("hidden"):
+            _obs.observe_codes(a1, fo, layer="hidden", op="act")
+        if self._collect("out"):
+            _obs.observe_codes(z2, fo, layer="out", op="logits")
+        return z1_sign, a1, z2
 
     def _bwd_core(self, params, xb, yb):
         """Forward + error backprop; returns ``(x, a1, d1, d2, loss)``.
@@ -441,16 +481,37 @@ class LNSMLP:
         """
         fh, fo = self.fmts["hidden"], self.fmts["out"]
         mm_o = self.runtimes["out"].matmul
-        x = encode(xb, fh)                      # dataset conversion (Sec. 4)
-        z1_sign, a1, z2 = self._forward(params, x)
-        p = log_softmax_lns(z2, self.eng_sm)
+        with self._scope("hidden", "encode"):   # q_* quantization taps
+            x = encode(xb, fh)                  # dataset conversion (Sec. 4)
+        with phase_scope("fwd"):
+            z1_sign, a1, z2 = self._forward(params, x)
+            p = log_softmax_lns(z2, self.eng_sm)
+        # Δ-LUT occupancy (metrics=full): shadow replay of each forward
+        # matmul's exact sequential MAC order — telemetry only, the chain
+        # above is what flows on.
+        if self._collect("hidden", "full"):
+            from ..core.arithmetic import matmul_dhist
+            _obs.tap("dhist",
+                     matmul_dhist(x, params["w1"], self.engs["hidden"]),
+                     layer="hidden", op="fwd")
+        if self._collect("out", "full"):
+            from ..core.arithmetic import matmul_dhist
+            _obs.tap("dhist",
+                     matmul_dhist(a1, params["w2"], self.engs["out"]),
+                     layer="out", op="fwd")
         d2 = ce_grad_init(p, yb, fo, self.eng_sm)         # (B, K), out fmt
+        if self._collect("out"):
+            _obs.observe_codes(d2, fo, layer="out", op="dgrad")
         # Sum-reduction over the minibatch, matching the fxp baseline.
         # The transposed MACs run on each layer's backward path (Pallas
         # kernels when that layer's spec says backend=pallas).
-        bp = mm_o.matmul_dx(d2, params["w2"])             # (B, H), out fmt
-        bp = convert_format(bp, fo, fh)
-        d1 = boxdot(bp, llrelu_grad_from_sign(z1_sign, self.beta), fh)
+        with phase_scope("dx"):
+            bp = mm_o.matmul_dx(d2, params["w2"])         # (B, H), out fmt
+            with self._scope("hidden", "dx"):   # convert_* taps
+                bp = convert_format(bp, fo, fh)
+            d1 = boxdot(bp, llrelu_grad_from_sign(z1_sign, self.beta), fh)
+        if self._collect("hidden"):
+            _obs.observe_codes(d1, fh, layer="hidden", op="dgrad")
         return x, a1, d1, d2, ce_loss_readout(p, yb, fo)
 
     def _backward(self, params, xb, yb, num_segments=None):
@@ -501,8 +562,9 @@ class LNSMLP:
                 layer = PARAM_LAYER[k]
                 m_k = momentum[k] if has_mom and momentum is not None \
                     else None
-                w_new, m_new = self.runtimes[layer].matmul.fused_update(
-                    params[k], grads[k], m_k, self.update_eps[layer])
+                with self._scope(layer, f"update.{k}"):  # epi_update tap
+                    w_new, m_new = self.runtimes[layer].matmul.fused_update(
+                        params[k], grads[k], m_k, self.update_eps[layer])
                 new_p[k] = w_new
                 if momentum is not None:
                     new_m[k] = m_new if has_mom else momentum[k]
@@ -515,27 +577,24 @@ class LNSMLP:
             p2, m2 = apply_update({k: params[k] for k in keys},
                                   {k: grads[k] for k in keys},
                                   sub_m, self.sgd, self.engs[layer])
+            if self._collect(layer):
+                for k in keys:
+                    _obs.observe_codes(p2[k], self.fmts[layer],
+                                       layer=layer, op=f"update.{k}")
             new_p.update(p2)
             if momentum is not None:
                 new_m.update(m2)
         return new_p, new_m
 
-    @functools.partial(jax.jit, static_argnums=0)
-    def train_step(self, params, xb, yb, momentum=None):
-        """One step; returns (params, loss), or (params, momentum, loss)
-        when a momentum pytree is passed (``cfg.momentum > 0``).
-
-        With ``cfg.fused`` (default) the step is one pass per matmul: the
-        forward kernels fold bias/llrelu/format conversion into their
-        flush, and the weight gradients never materialize — each dW
-        kernel's flush applies the ⊞-SGD update (momentum + weight decay)
-        against the resident weight/momentum tiles directly.  Bias
-        gradients (⊞-folds, not matmuls) go through the standalone
-        fused-update kernel.  Bit-identical to the unfused step.
-        """
+    def _step_impl(self, params, xb, yb, momentum=None):
+        """The train-step body, shared by :meth:`train_step` (plain) and
+        :meth:`train_step_metrics` (collector active) — one trace source,
+        so telemetry can never fork the arithmetic."""
         if not self.cfg.fused or self.update_eps is None:
             grads, loss = self._backward(params, xb, yb)
-            params, momentum = self.apply_updates(params, grads, momentum)
+            with phase_scope("update"):
+                params, momentum = self.apply_updates(params, grads,
+                                                      momentum)
             if momentum is None:
                 return params, loss
             return params, momentum, loss
@@ -551,12 +610,16 @@ class LNSMLP:
             ep = self.update_eps[layer]
             m_w = momentum[wk] if has_mom and momentum is not None \
                 else None
-            w_new, mw_new = mm.matmul_dw_update(act, d, params[wk], m_w,
-                                                ep)
+            with phase_scope("dw"), \
+                    self._scope(layer, f"update.{wk}"):  # epi_dw_update tap
+                w_new, mw_new = mm.matmul_dw_update(act, d, params[wk],
+                                                    m_w, ep)
             gb = boxsum(d, 0, self.engs[layer])
             m_b = momentum[bk] if has_mom and momentum is not None \
                 else None
-            b_new, mb_new = mm.fused_update(params[bk], gb, m_b, ep)
+            with phase_scope("update"), \
+                    self._scope(layer, f"update.{bk}"):  # epi_update tap
+                b_new, mb_new = mm.fused_update(params[bk], gb, m_b, ep)
             new_p[wk], new_p[bk] = w_new, b_new
             if momentum is not None:
                 new_m[wk] = mw_new if has_mom else momentum[wk]
@@ -564,6 +627,38 @@ class LNSMLP:
         if momentum is None:
             return new_p, loss
         return new_p, new_m, loss
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step(self, params, xb, yb, momentum=None):
+        """One step; returns (params, loss), or (params, momentum, loss)
+        when a momentum pytree is passed (``cfg.momentum > 0``).
+
+        With ``cfg.fused`` (default) the step is one pass per matmul: the
+        forward kernels fold bias/llrelu/format conversion into their
+        flush, and the weight gradients never materialize — each dW
+        kernel's flush applies the ⊞-SGD update (momentum + weight decay)
+        against the resident weight/momentum tiles directly.  Bias
+        gradients (⊞-folds, not matmuls) go through the standalone
+        fused-update kernel.  Bit-identical to the unfused step.
+
+        No collector is active here, so every telemetry gate is
+        statically false: the jitted graph has no extra outputs and is
+        the same graph as before the obs subsystem existed.
+        """
+        return self._step_impl(params, xb, yb, momentum)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step_metrics(self, params, xb, yb, momentum=None):
+        """:meth:`train_step` with numerics telemetry: returns
+        ``(step_outputs, taps)`` where ``step_outputs`` is exactly what
+        ``train_step`` returns — bit-identical codes, the counters are
+        pure reads — and ``taps`` maps ``"layer/op/counter"`` to int32
+        counts (feed to ``MetricsRegistry.merge_numerics_taps`` with
+        :meth:`lanes`).  Layers whose spec says ``metrics=off`` stay
+        silent; ``metrics=full`` adds the Δ-LUT ``dhist`` shadow pass."""
+        with _obs.collecting() as col:
+            out = self._step_impl(params, xb, yb, momentum)
+            return out, col.taps()
 
     @functools.partial(jax.jit, static_argnums=0)
     def predict(self, params, xb):

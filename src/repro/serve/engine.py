@@ -54,9 +54,11 @@ from ..nn import (PAGED_FAMILIES, Runtime, decode_step, decode_step_paged,
                   init_decode_caches, init_paged_caches, prefill_chunk)
 from ..nn.config import ModelConfig
 from ..nn.paged import NULL_BLOCK
+from ..obs.registry import MetricsRegistry
 from .paged_cache import BlockManager
-from .queue import (DECODE, DONE, PREFILL, QUEUED, REJECTED, TERMINAL,
-                    Request, RequestQueue)
+from .queue import (DECODE, DONE, PREFILL, QUEUED,
+                    REJECT_PROMPT_OVER_BUDGET, REJECT_RESERVATION_OVER_POOL,
+                    REJECTED, TERMINAL, Request, RequestQueue)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,7 +114,8 @@ class ServingEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
-                 rt: Runtime = Runtime()):
+                 rt: Runtime = Runtime(),
+                 registry: Optional[MetricsRegistry] = None):
         if cfg.family not in PAGED_FAMILIES:
             raise ValueError(
                 f"ServingEngine serves {PAGED_FAMILIES} families; "
@@ -143,7 +146,13 @@ class ServingEngine:
         self.slot_req: list[Optional[Request]] = [None] * sc.max_batch
         self.step_count = 0
         self.stats = {"decode_steps": 0, "prefill_chunks": 0,
-                      "tokens_generated": 0, "occupancy_sum": 0}
+                      "tokens_generated": 0, "occupancy_sum": 0,
+                      "stall_steps": 0}
+        # Structured telemetry: rejection counters by reason code, queue
+        # depth / occupancy gauges, per-request TTFT / TPOT / latency
+        # histograms.  Observer-only — nothing on the data plane reads it.
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry())
         self._decode = _decode_graph(cfg, rt)
         self._prefill = _prefill_graph(cfg, rt)
 
@@ -190,18 +199,22 @@ class ServingEngine:
         req = self.queue.submit(prompt, max_new, deadline_steps,
                                 self.step_count)
         if req.state != QUEUED:
+            self.registry.counter_inc("serve.rejected",
+                                      reason=req.reason_code)
             return req.rid
-        reason = None
+        reason, code = None, ""
         if req.prompt_len + 1 > self.sc.max_len:
             reason = (f"prompt exceeds max_len "
                       f"({req.prompt_len} + 1 > {self.sc.max_len})")
+            code = REJECT_PROMPT_OVER_BUDGET
         elif not self.bm.fits_ever(self._reservation_tokens(req)):
             reason = (f"reservation exceeds pool "
                       f"({self.bm.blocks_for(self._reservation_tokens(req))}"
                       f" > {self.bm.capacity} blocks)")
+            code = REJECT_RESERVATION_OVER_POOL
         if reason is not None:
-            self.queue.withdraw(req)
-            req.reject(reason, self.step_count)
+            self.queue.reject(req, reason, self.step_count, code)
+            self.registry.counter_inc("serve.rejected", reason=code)
         return req.rid
 
     def poll(self, rid: int) -> Request:
@@ -262,6 +275,7 @@ class ServingEngine:
             # from the last valid position's logits and join the batch.
             nxt = self._sample(logits[0, -1], req)
             req.output.append(nxt)
+            req.first_token_time = time.monotonic()
             self.stats["tokens_generated"] += 1
             self.pos[req.slot] = req.prompt_len
             self.tok[req.slot, 0] = nxt
@@ -304,6 +318,21 @@ class ServingEngine:
             self.bt[slot] = NULL_BLOCK
             self.slot_req[slot] = None
             req.slot = -1
+        # Per-request latency telemetry (all wall-clock ms).
+        reg = self.registry
+        reg.counter_inc("serve.requests_finished")
+        reg.counter_inc("serve.tokens_out", len(req.output))
+        reg.histogram_record(
+            "serve.latency_ms", 1e3 * (req.finish_time - req.submit_time))
+        if req.first_token_time:
+            reg.histogram_record(
+                "serve.ttft_ms",
+                1e3 * (req.first_token_time - req.submit_time))
+            if len(req.output) > 1:
+                reg.histogram_record(
+                    "serve.tpot_ms",
+                    1e3 * (req.finish_time - req.first_token_time)
+                    / (len(req.output) - 1))
 
     def _sample(self, logits_row, req: Request) -> int:
         if self.sc.temperature == 0.0:
@@ -320,12 +349,29 @@ class ServingEngine:
     # ----------------------------------------------------- engine loop --
     def step(self):
         """One engine step: expire deadlines, refill free slots, splice at
-        most one prefill chunk, then one batched decode step."""
+        most one prefill chunk, then one batched decode step.
+
+        Also maintains the engine's own telemetry: ``stats["stall_steps"]``
+        counts steps where a prefill chunk displaced ready decode work
+        (decode-ready slots existed at the top of the step, a chunk was
+        spliced, and no decode step ran) — chunked prefill interleaves, so
+        this should stay 0; the registry gets a queue-depth gauge plus any
+        deadline-expiry rejection counters."""
+        decoders_before = int(self.active.sum())
+        d0 = self.stats["decode_steps"]
+        p0 = self.stats["prefill_chunks"]
         self.step_count += 1
-        self.queue.expire(self.step_count)
+        for r in self.queue.expire(self.step_count):
+            self.registry.counter_inc("serve.rejected", reason=r.reason_code)
         self._refill()
         self._prefill_one()
         self._decode_active()
+        ran_prefill = self.stats["prefill_chunks"] > p0
+        ran_decode = self.stats["decode_steps"] > d0
+        if ran_prefill and decoders_before > 0 and not ran_decode:
+            self.stats["stall_steps"] += 1
+        self.registry.gauge_set("serve.queue_depth", self.queue.depth)
+        self.registry.gauge_set("serve.occupancy", self.occupancy)
 
     @property
     def busy(self) -> bool:

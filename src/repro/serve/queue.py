@@ -13,6 +13,12 @@ without bound.  The engine rejects at *admission time* (when a slot would
 be assigned) for requests whose prompt exceeds the token budget or whose
 deadline lapsed while waiting.  Rejected and finished requests stay in the
 registry so :meth:`RequestQueue.poll` can always answer for a known rid.
+
+Every rejection carries both a human ``reason`` string (free-form, may
+embed numbers) and a machine ``reason_code`` from the closed
+:data:`REJECT_CODES` vocabulary, and every rejection — whichever code
+path raised it — is counted in :attr:`RequestQueue.rejections`, so
+telemetry never has to re-parse reason strings.
 """
 from __future__ import annotations
 
@@ -32,6 +38,16 @@ REJECTED = "REJECTED"    # refused admission; see ``reason``
 
 TERMINAL = (DONE, REJECTED)
 
+# Machine-readable rejection codes.  ``Request.reason`` stays the human
+# string (tests pin some of those verbatim); ``reason_code`` is the stable
+# counter key.
+REJECT_QUEUE_FULL = "queue-full"
+REJECT_PROMPT_OVER_BUDGET = "prompt-over-budget"
+REJECT_RESERVATION_OVER_POOL = "reservation-over-pool"
+REJECT_DEADLINE_EXPIRED = "deadline-expired"
+REJECT_CODES = (REJECT_QUEUE_FULL, REJECT_PROMPT_OVER_BUDGET,
+                REJECT_RESERVATION_OVER_POOL, REJECT_DEADLINE_EXPIRED)
+
 
 @dataclasses.dataclass
 class Request:
@@ -41,7 +57,8 @@ class Request:
     max_new: int                        # cap on sampled continuation length
     deadline_steps: Optional[int] = None  # engine steps allowed in QUEUED
     state: str = QUEUED
-    reason: str = ""                    # set when REJECTED
+    reason: str = ""                    # set when REJECTED (human string)
+    reason_code: str = ""               # set when REJECTED (REJECT_* slug)
     output: list = dataclasses.field(default_factory=list)  # sampled tokens
     blocks: list = dataclasses.field(default_factory=list)  # owned block ids
     slot: int = -1                      # decode-batch slot while scheduled
@@ -50,15 +67,17 @@ class Request:
     start_step: int = -1                # engine step entering PREFILL
     finish_step: int = -1               # engine step entering a terminal state
     submit_time: float = 0.0            # wall clock at submit()
+    first_token_time: float = 0.0       # wall clock of first sampled token
     finish_time: float = 0.0            # wall clock entering a terminal state
 
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
 
-    def reject(self, reason: str, step: int) -> None:
+    def reject(self, reason: str, step: int, code: str = "") -> None:
         self.state = REJECTED
         self.reason = reason
+        self.reason_code = code
         self.finish_step = step
         self.finish_time = time.monotonic()
 
@@ -77,6 +96,10 @@ class RequestQueue:
         self._q: deque[Request] = deque()
         self._registry: dict[int, Request] = {}
         self._next_rid = 0
+        # First-class rejection counters, keyed by REJECT_* code.  All
+        # rejection paths — queue-level and engine-driven — route through
+        # :meth:`reject`, so these can never drift from poll()'s view.
+        self.rejections: dict[str, int] = {c: 0 for c in REJECT_CODES}
 
     def __len__(self) -> int:
         return len(self._q)
@@ -94,9 +117,23 @@ class RequestQueue:
         self._next_rid += 1
         self._registry[req.rid] = req
         if len(self._q) >= self.max_depth:
-            req.reject("queue full", step)
+            self.reject(req, "queue full", step, REJECT_QUEUE_FULL)
         else:
             self._q.append(req)
+        return req
+
+    def reject(self, req: Request, reason: str, step: int,
+               code: str) -> Request:
+        """Terminal-reject ``req`` (dequeuing it first if still queued) and
+        bump the per-code rejection counter.  The single funnel for every
+        rejection path, so counters and poll() state cannot disagree."""
+        if code not in REJECT_CODES:
+            raise ValueError(f"unknown rejection code {code!r}; "
+                             f"expected one of {REJECT_CODES}")
+        if req in self._q:
+            self._q.remove(req)
+        req.reject(reason, step, code)
+        self.rejections[code] += 1
         return req
 
     def peek(self) -> Optional[Request]:
@@ -115,8 +152,8 @@ class RequestQueue:
                    if r.deadline_steps is not None
                    and step - r.submit_step > r.deadline_steps]
         for r in expired:
-            self._q.remove(r)
-            r.reject("deadline exceeded while queued", step)
+            self.reject(r, "deadline exceeded while queued", step,
+                        REJECT_DEADLINE_EXPIRED)
         return expired
 
     def poll(self, rid: int) -> Request:
