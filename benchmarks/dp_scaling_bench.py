@@ -33,6 +33,33 @@ import jax
 import numpy as np
 
 
+def _combine_blocks_label(model, segments) -> str:
+    """The DP ⊞-combine fold tiles each parameter's reduce launches.
+
+    Resolved through the same path the step uses (``dp_combine_blocks``:
+    the parameter's layer spec `blocks` axis against the op="boxsum"
+    autotuner cache) — when ``blocks=auto`` this call also eagerly primes
+    the measured entries outside jit, so the timed steps below find them.
+    Parameters whose combine is the jnp fold (no kernel) report "-".
+    """
+    from repro.distributed.lns_reduce import dp_combine_blocks
+    inner = model.inner
+    params = inner.init(jax.random.PRNGKey(0))
+    labels = []
+    for k in sorted(inner.param_runtimes):
+        if not model._use_kernel(k) \
+                or model.dp.reduce.schedule != "sequential":
+            continue
+        rt = inner.param_runtimes[k]
+        n_el = int(np.prod(params[k].shape))
+        bm, bk = dp_combine_blocks(n_el, segments, inner.param_engines[k],
+                                   blocks=rt.spec.blocks,
+                                   interpret=rt.matmul._interp())
+        labels.append(f"{k}:{bm}x{bk}"
+                      + (":auto" if rt.spec.blocks == "auto" else ""))
+    return ",".join(labels) or "-"
+
+
 def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
         n_in=64, n_hidden=32, n_out=10, backend="emulate", steps=5,
         numerics=None):
@@ -77,6 +104,11 @@ def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
                             spec=plan, matmul_block=16)
             model = LNSDataParallelMLP(
                 cfg, DPConfig.from_spec(plan, num_devices=devices))
+            # Resolve (and, for blocks=auto, eagerly tune) the ⊞-combine
+            # fold shapes before timing, so the rows record the blocks
+            # the timed steps actually launched under.
+            blocks = _combine_blocks_label(model, segs) \
+                if mode == "boxplus" else "-"
             params = model.init(jax.random.PRNGKey(0))
             params, _ = model.train_step(params, xb, yb)   # compile
             t0 = time.perf_counter()
@@ -90,6 +122,7 @@ def run(device_counts=(1, 2, 4), *, batch=32, grad_segments=4,
                              devices=devices,
                              ms_per_step=ms, tok_per_s=batch / (ms / 1e3),
                              note=f"loss={float(loss):.4f}",
+                             blocks=blocks,
                              spec=str(plan.default), plan=str(plan)))
             print(f"[dp_bench] devices={devices} reduce={mode:10s} "
                   f"{ms:8.1f} ms/step  {batch / (ms / 1e3):8.0f} samples/s"

@@ -262,3 +262,26 @@ _dh = [r for r in _reg.rows() if r["kind"] == "bucketed_histogram"
        and r["layer"] == "hidden"][0]
 print(f"Δ-LUT occupancy (edges {DHIST_EDGES}): {_dh['counts']} — last "
       f"bucket is |d| beyond the paper LUT's d_max (Δ≈0 region)")
+
+print("\n=== 9. Plan autosearch: derive the mixed plan automatically ===")
+# §5 hand-wrote the lns12-hidden plan.  The search subsystem derives it:
+# sweep per-layer fmt rules over NumericsPlan candidates, score each by
+# short-horizon accuracy vs the anchor + a deterministic datapath cost,
+# rank the narrowing order by the §8 obs counters, and keep the Pareto
+# frontier.  Seeded and journaled — run twice, byte-identical frontier;
+# kill it mid-sweep and rerun, it resumes from the journal.
+#   CLI: python -m repro.launch.search --smoke   (what CI runs)
+from repro.search import PlanSearch, SearchConfig, SearchSpace
+from repro.search.report import frontier_table
+
+_sspace = SearchSpace.for_paper_mlp("lns16-train-emulate",
+                                    fmts=("lns16", "lns12"))
+_scfg = SearchConfig(epochs=1, steps_per_epoch=6, batch_size=5, seed=0,
+                     refine_generations=1, refine_population=2)
+_search = PlanSearch(_sspace, _scfg)
+_sres = _search.run()
+print(f"evaluated {len(_sres.evals)} candidate plans "
+      f"(narrowing order from obs counters: {', '.join(_sres.order)})")
+print(frontier_table(_sres.frontier, _sres.winner))
+print(f"winning plan — paste into launch/train.py:")
+print(f"  --numerics '{_sres.winner['plan']}'")

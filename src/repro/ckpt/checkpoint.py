@@ -126,13 +126,15 @@ def load_checkpoint(directory: str, step: int, like, shardings=None, *,
     have = manifest.get("numerics")
     if want is not None and have is not None and want != have \
             and not allow_numerics_mismatch:
+        from ..core.plan import plan_diff
         raise ValueError(
             f"checkpoint {path} was saved under numerics {have!r} but is "
             f"being restored under {want!r}; LNS codes are not portable "
             f"across arithmetics.  Re-run with the matching --numerics, "
             f"or pass allow_numerics_mismatch=True (CheckpointManager("
             f"allow_numerics_mismatch=True)) for a deliberate format "
-            f"migration")
+            f"migration.\n"
+            + plan_diff(have, want, labels=("saved", "requested")))
     leaves, treedef = _tree_paths(like)
     assert manifest["n_leaves"] == len(leaves), \
         f"checkpoint has {manifest['n_leaves']} leaves, tree has {len(leaves)}"

@@ -35,7 +35,7 @@ from .lns import (MATMUL_BACKENDS, LNSArray, LNSMatmulBackend,
                   convert_format, decode, encode, from_parts,
                   quantization_bound, scalar, zeros)
 from .numerics import POLICIES, NumericsPolicy, get_plan, get_policy
-from .plan import NumericsPlan, PlanRule
+from .plan import NumericsPlan, PlanRule, plan_diff
 from .qat import lns_dot_dispatch, lns_dot_exact, lns_quantize_ste
 from .spec import (ALIASES, BLOCK_MODES, INTERPRET_MODES, REDUCE_MODES,
                    REDUCE_SCHEDULES, LNSRuntime, NumericsSpec, ReduceSpec,

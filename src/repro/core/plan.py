@@ -176,6 +176,57 @@ class NumericsPlan:
                 f"known layer paths: {', '.join(paths)}")
         return self
 
+    # -- diffing ------------------------------------------------------------
+    def diff(self, other, paths=None) -> dict:
+        """Which spec axes differ from ``other``, and where.
+
+        Returns ``{where: {key: (mine, theirs)}}`` with only the differing
+        keys (serialized value strings, the ``_flat`` vocabulary).  With
+        ``paths`` the comparison is *resolved* per layer path — what each
+        layer actually runs under, regardless of which patterns produced
+        it — plus a ``"<default>"`` entry for the default-spec axes.
+        Without ``paths`` the rules are compared pattern-by-pattern
+        (``None`` marks an override only one side sets), which is the
+        best available view when the layer vocabulary is unknown (e.g.
+        a checkpoint stamped by a different model family).
+        """
+        other = NumericsPlan.parse(other)
+        out: dict = {}
+        mine_d, theirs_d = self.default._flat(), other.default._flat()
+        d = {k: (mine_d[k], theirs_d[k]) for k in mine_d
+             if mine_d[k] != theirs_d[k]}
+        if d:
+            out["<default>"] = d
+        if paths is not None:
+            for p in paths:
+                a, b = self.resolve(p)._flat(), other.resolve(p)._flat()
+                dd = {k: (a[k], b[k]) for k in a if a[k] != b[k]}
+                if dd:
+                    out[p] = dd
+            return out
+        # Pattern-wise view: the *effective* override per (pattern, key)
+        # is the last rule's value (declaration order — the precedence
+        # contract resolve() applies).
+        def effective(plan):
+            eff: dict = {}
+            for r in plan.rules:
+                eff.setdefault(r.pattern, {}).update(dict(r.overrides))
+            return eff
+        mine, theirs = effective(self), effective(other)
+        seen = []
+        for plan in (self, other):
+            for r in plan.rules:
+                if r.pattern not in seen:
+                    seen.append(r.pattern)
+        for pat in seen:
+            a_kv, b_kv = mine.get(pat, {}), theirs.get(pat, {})
+            dd = {k: (a_kv.get(k), b_kv.get(k))
+                  for k in sorted(set(a_kv) | set(b_kv))
+                  if a_kv.get(k) != b_kv.get(k)}
+            if dd:
+                out[pat] = dd
+        return out
+
     # -- overrides ----------------------------------------------------------
     def with_(self, **kw) -> "NumericsPlan":
         """Typed overrides applied to the *default* spec (rules kept).
@@ -313,3 +364,30 @@ def _resolve_cached(plan: NumericsPlan, path: str) -> NumericsSpec:
 def get_plan(name: "str | NumericsSpec | NumericsPlan") -> NumericsPlan:
     """Resolve any numerics descriptor (alias / spec / plan) to a plan."""
     return NumericsPlan.parse(name)
+
+
+def plan_diff(a, b, paths=None, labels=("a", "b")) -> str:
+    """Human-readable :meth:`NumericsPlan.diff` — one line per layer.
+
+    ``a`` / ``b`` accept anything :meth:`NumericsPlan.parse` does.  The
+    output reads ``<where>: <key> <a-value> -> <b-value>`` with ``labels``
+    naming the two sides in the header; identical plans render as a
+    single ``(no differences)`` line.  Used by the plan-search report
+    (``search/report.py``) and the checkpoint-restore mismatch message.
+    """
+    a, b = NumericsPlan.parse(a), NumericsPlan.parse(b)
+    delta = a.diff(b, paths=paths)
+    if not delta:
+        return f"numerics diff ({labels[0]} vs {labels[1]}): " \
+               f"(no differences)"
+    lines = [f"numerics diff ({labels[0]} vs {labels[1]}):"]
+    order = ["<default>"] + [w for w in delta if w != "<default>"]
+    for where in order:
+        if where not in delta:
+            continue
+        changes = ", ".join(
+            f"{k} {'-' if av is None else av} -> "
+            f"{'-' if bv is None else bv}"
+            for k, (av, bv) in sorted(delta[where].items()))
+        lines.append(f"  {where}: {changes}")
+    return "\n".join(lines)

@@ -206,11 +206,16 @@ class LNSDataParallelMLP:
             for k, g in grads.items():
                 eng = inner.param_engines[k]
                 if dp.reduce.mode == "boxplus":
+                    # The combine's fold shape follows the parameter's
+                    # own layer spec's `blocks` axis (auto = autotuned
+                    # op="boxsum" entries) — tiling-invariant, so the
+                    # canonical-schedule contract is untouched.
                     red[k] = deterministic_boxplus_allreduce(
                         g, axis_name=axis, eng=eng,
                         schedule=dp.reduce.schedule,
                         use_kernel=self._use_kernel(k),
-                        interpret=inner.param_runtimes[k].matmul._interp())
+                        interpret=inner.param_runtimes[k].matmul._interp(),
+                        blocks=inner.param_runtimes[k].spec.blocks)
                 else:
                     red[k] = float_psum_allreduce(g, axis_name=axis,
                                                   eng=eng)

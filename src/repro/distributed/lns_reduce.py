@@ -58,16 +58,47 @@ def gather_partials(p: LNSArray, axis_name: str) -> LNSArray:
     return LNSArray(code, sign)
 
 
+def dp_combine_blocks(n_elements: int, segments: int, eng: DeltaEngine, *,
+                      blocks: str = "default", interpret: bool = True):
+    """The (block_m, block_k) tiles :func:`combine_partials` launches.
+
+    Resolves the DP combine's fold shape exactly like the kernel path
+    below: ``blocks="auto"`` consults the autotuner's op="boxsum" cache
+    for the ``(elements, 1, S)`` reshaped fold (measured entries when one
+    exists, the deterministic heuristic inside traces), an explicit
+    ``MxNxK`` pins its M/K slots, ``"default"`` keeps the legacy fixed
+    tiles (PR 5).  Tiling never changes results — this is the
+    introspection hook DP bench rows record their chosen blocks through.
+    """
+    if blocks == "auto":
+        from ..kernels import autotune
+        bm, _, bk = autotune.lookup(
+            "boxsum", (n_elements, 1, segments), fmt=eng.fmt,
+            spec=eng.spec, interpret=interpret)
+        return bm, bk
+    from ..core.spec import resolve_blocks_arg
+    bm, _, bk, _ = resolve_blocks_arg(
+        blocks, min(256, n_elements), 1, segments)
+    return bm, bk
+
+
 def combine_partials(parts: LNSArray, eng: DeltaEngine, *,
                      schedule: str = "sequential",
                      use_kernel: bool = False,
-                     interpret: bool = True) -> LNSArray:
+                     interpret: bool = True,
+                     blocks: str = "default") -> LNSArray:
     """⊞-combine (S, ...) stacked partials along axis 0, fixed schedule.
 
     ``use_kernel=True`` routes the sequential fold through the
     ``lns_boxsum`` Pallas kernel (reduce axis walked sequentially in-VMEM,
     bit-exact vs the jnp fold); the partial planes are reshaped to
     (elements, S) rows so one kernel launch reduces every weight entry.
+    ``blocks`` is the spec's tiling axis for that launch:
+    ``"auto"`` resolves the fold shape through the autotuner
+    (op="boxsum"; :func:`dp_combine_blocks`), an explicit ``MxNxK``
+    pins it, ``"default"`` keeps the legacy fixed tiles.  Blocks never
+    change the combined codes — the kernel's reduce walk is sequential
+    at any tiling — only the launch geometry.
     """
     if not use_kernel or schedule != "sequential":
         return boxsum_partials(parts, eng, schedule=schedule)
@@ -77,9 +108,11 @@ def combine_partials(parts: LNSArray, eng: DeltaEngine, *,
     code = parts.code.reshape(s, -1).T          # (elements, S)
     sign = parts.sign.reshape(s, -1).T
     n = code.shape[0]
+    bm, bk = dp_combine_blocks(n, s, eng, blocks=blocks,
+                               interpret=interpret)
     out = lns_boxsum_kernel(LNSArray(code, sign), fmt=eng.fmt,
-                            spec=eng.spec, block_m=min(256, n),
-                            block_k=s, interpret=interpret)
+                            spec=eng.spec, block_m=bm,
+                            block_k=bk, interpret=interpret)
     return LNSArray(out.code.reshape(tail), out.sign.reshape(tail))
 
 
@@ -87,15 +120,18 @@ def deterministic_boxplus_allreduce(p: LNSArray, axis_name: str,
                                     eng: DeltaEngine, *,
                                     schedule: str = "sequential",
                                     use_kernel: bool = False,
-                                    interpret: bool = True) -> LNSArray:
+                                    interpret: bool = True,
+                                    blocks: str = "default") -> LNSArray:
     """The ⊞-allreduce: gather partials, combine with the fixed schedule.
 
     Must be called inside ``shard_map`` over ``axis_name``; every device
-    returns the identical combined LNS gradient (replicated).
+    returns the identical combined LNS gradient (replicated).  ``blocks``
+    tiles the kernel combine (``"auto"`` = autotuned fold shapes) and
+    never changes the combined codes.
     """
     return combine_partials(gather_partials(p, axis_name), eng,
                             schedule=schedule, use_kernel=use_kernel,
-                            interpret=interpret)
+                            interpret=interpret, blocks=blocks)
 
 
 def float_psum_allreduce(p: LNSArray, axis_name: str,

@@ -1,0 +1,25 @@
+"""Plan autosearch: derive minimal-bitwidth NumericsPlans automatically.
+
+The subsystem that turns the numerics substrate from *configurable* into
+*self-configuring* (ROADMAP item 4): a deterministic, journaled,
+resumable driver (:class:`~repro.search.driver.PlanSearch`) sweeps
+per-layer ``fmt``/``delta``/``interpret`` rules over
+:class:`~repro.core.plan.NumericsPlan` candidates
+(:class:`~repro.search.space.SearchSpace`), evaluates each by
+short-horizon accuracy vs the anchor, a deterministic datapath cost
+model (or opt-in measured step time), and obs-counter narrowing
+evidence, and emits the Pareto frontier
+(:mod:`~repro.search.pareto`) plus a per-layer rationale report
+(:mod:`~repro.search.report`).  CLI: ``python -m repro.launch.search``.
+"""
+from .driver import (PlanSearch, SearchBudgetExhausted, SearchConfig,
+                     SearchResult)
+from .pareto import dominates, pareto_frontier, select_winner
+from .report import frontier_table, render_report
+from .space import SWEEP_AXES, SearchSpace
+
+__all__ = [
+    "PlanSearch", "SearchBudgetExhausted", "SearchConfig", "SearchResult",
+    "SearchSpace", "SWEEP_AXES", "dominates", "pareto_frontier",
+    "select_winner", "frontier_table", "render_report",
+]

@@ -268,3 +268,68 @@ def test_prime_matmul_fills_all_three_ops(tuner_dir):
     assert set(seen) == {"fwd", "dx", "dw"}
     assert out["fwd"] == autotune.lookup("fwd", (8, 4, 16), fmt=LNS16,
                                          spec=DELTA_DEFAULT)
+
+
+# ------------------------------------------------- interpret-lane keys
+def test_cache_key_partitioned_by_interpret_lane(tuner_dir):
+    """A tune measured on the interpret lane must never satisfy a
+    compiled-lane lookup (and vice versa): the lanes time differently,
+    so sharing entries would pin interpreter-shaped tiles on hardware."""
+    shape = (64, 100, 784)
+    heuristic = autotune.heuristic_blocks("fwd", shape)
+    # the stub prefers a candidate the heuristic would NOT pick
+    cands = autotune.candidate_blocks("fwd", shape)
+    seeded = next(c for c in cands if c != heuristic)
+
+    def stub(op, shape, blocks):
+        return 1.0 if blocks == seeded else 2.0
+
+    got = autotune.lookup("fwd", shape, fmt=LNS16, spec=DELTA_DEFAULT,
+                          interpret=True, measure=True, measure_fn=stub)
+    assert got == seeded
+    # compiled-lane lookup: no measurement allowed -> must fall back to
+    # the heuristic, NOT the interpret-tuned entry
+    assert autotune.lookup("fwd", shape, fmt=LNS16, spec=DELTA_DEFAULT,
+                           interpret=False, measure=False) == heuristic
+    # ... and the other direction: tune compiled, look up interpret
+    def stub2(op, shape, blocks):
+        return 1.0 if blocks == seeded else 2.0
+    autotune.clear_caches()
+    got2 = autotune.lookup("dx", shape, fmt=LNS16, spec=DELTA_DEFAULT,
+                           interpret=False, measure=True, measure_fn=stub2)
+    assert got2 == seeded
+    assert autotune.lookup("dx", shape, fmt=LNS16, spec=DELTA_DEFAULT,
+                           interpret=True, measure=False) \
+        == autotune.heuristic_blocks("dx", shape)
+    # the partition is visible in the key itself
+    k_i = autotune.entry_key("fwd", shape, LNS16, DELTA_DEFAULT, True)
+    k_c = autotune.entry_key("fwd", shape, LNS16, DELTA_DEFAULT, False)
+    assert k_i != k_c
+    assert "interpret=True" in k_i and "interpret=False" in k_c
+
+
+def test_per_layer_interpret_overrides_reach_autotuner(tuner_dir,
+                                                       monkeypatch):
+    """blocks=auto consults the tuner with each layer's *resolved*
+    interpret lane: a per-layer ``interpret:off`` override must surface
+    as interpret=False in that layer's lookups only."""
+    monkeypatch.setenv("LNS_AUTOTUNE_DISABLE", "1")
+    plan = NumericsPlan.parse(
+        "lns16-train-emulate,blocks=auto,interpret=on;hidden=interpret:off")
+    seen = {}
+    real = autotune.lookup
+
+    def spy(op, shape, **kw):
+        seen.setdefault(kw["interpret"], 0)
+        seen[kw["interpret"]] += 1
+        return real(op, shape, **kw)
+
+    monkeypatch.setattr(autotune, "lookup", spy)
+    mm_h = plan.runtime_for("hidden").matmul
+    mm_o = plan.runtime_for("out").matmul
+    assert mm_h._op_blocks("fwd", 8, 16, 32) \
+        == real("fwd", (8, 16, 32), fmt=mm_h.fmt, spec=mm_h.spec,
+                interpret=False)
+    assert seen == {False: 1}
+    mm_o._op_blocks("fwd", 8, 16, 32)
+    assert seen == {False: 1, True: 1}

@@ -318,3 +318,44 @@ def test_trainconfig_dp_validation():
     # float-psum + data_parallel is the supported LM combination
     make_train_step(cfg, SGDConfig(), tc=TrainConfig(
         data_parallel=2, reduce_mode="float-psum"))
+
+
+def test_combine_partials_blocks_modes_bitexact(rng, tmp_path, monkeypatch):
+    """The combine fold's launch tiles (default / pinned / autotuned)
+    never change the reduction result — blocks are geometry, reduction
+    order is semantics and stays sequential-over-segments."""
+    monkeypatch.setenv("LNS_AUTOTUNE_DIR", str(tmp_path))
+    monkeypatch.setenv("LNS_AUTOTUNE_DISABLE", "1")
+    from repro.kernels import autotune
+    autotune.clear_caches()
+    parts = encode(rng.normal(size=(6, 9, 4)).astype(np.float32), LNS16)
+    eng = DeltaEngine(DELTA_DEFAULT, LNS16)
+    ref = combine_partials(parts, eng, use_kernel=False)
+    for blocks in ("default", "auto", "16x1x6"):
+        ker = combine_partials(parts, eng, use_kernel=True,
+                               interpret=True, blocks=blocks)
+        _codes_equal(ref, ker)
+    autotune.clear_caches()
+
+
+def test_dp_combine_blocks_resolution(tmp_path, monkeypatch):
+    """``dp_combine_blocks`` routes 'auto' through the autotuner's
+    boxsum entry for the combine fold's (elements, 1, segments) shape
+    and honors explicit pins."""
+    monkeypatch.setenv("LNS_AUTOTUNE_DIR", str(tmp_path))
+    monkeypatch.setenv("LNS_AUTOTUNE_DISABLE", "1")
+    from repro.distributed.lns_reduce import dp_combine_blocks
+    from repro.kernels import autotune
+    autotune.clear_caches()
+    eng = DeltaEngine(DELTA_DEFAULT, LNS16)
+    # auto == the tuner's answer for the fold shape
+    bm, bk = dp_combine_blocks(48, 4, eng, blocks="auto")
+    tm, _, tk = autotune.lookup("boxsum", (48, 1, 4), fmt=eng.fmt,
+                                spec=eng.spec, interpret=True)
+    assert (bm, bk) == (tm, tk)
+    # explicit pin wins
+    assert dp_combine_blocks(48, 4, eng, blocks="32x1x2") == (32, 2)
+    # default keeps the caller's fixed tiling
+    bm, bk = dp_combine_blocks(48, 4, eng, blocks="default")
+    assert bm == min(256, 48) and bk == 4
+    autotune.clear_caches()

@@ -304,3 +304,46 @@ def test_checkpoint_numerics_stamp(tmp_path, rng):
     # the async writer thread (where it would silently drop every save)
     with pytest.raises(ValueError, match="alias"):
         CheckpointManager(str(tmp_path / "bad"), numerics="lns17-qat")
+
+
+# ------------------------------------------------------------ plan diff
+def test_plan_diff_by_paths():
+    from repro.core import plan_diff
+    a = NumericsPlan.parse("lns16-train-pallas")
+    b = NumericsPlan.parse(MIXED)
+    d = a.diff(b, paths=("hidden", "out"))
+    assert d["hidden"] == {"fmt": ("lns16", "lns12")}
+    assert "out" not in d            # same effective spec there
+    assert "<default>" not in d      # defaults equal
+    text = plan_diff(a, b, paths=("hidden", "out"),
+                     labels=("have", "want"))
+    assert "have vs want" in text
+    assert "hidden: fmt lns16 -> lns12" in text
+
+
+def test_plan_diff_defaults_and_rules():
+    from repro.core import plan_diff
+    a = NumericsPlan.parse("lns16-train-emulate")
+    b = NumericsPlan.parse(
+        "lns16-train-emulate,fmt=lns12;out=delta:bitshift")
+    d = a.diff(b)
+    assert d["<default>"]["fmt"] == ("lns16", "lns12")
+    assert d["out"]["delta"][1] == "bitshift"
+    assert d["out"]["delta"][0] is None     # one-sided override
+    # reflexive: no differences
+    assert a.diff(a) == {}
+    assert "(no differences)" in plan_diff(a, a)
+
+
+def test_checkpoint_mismatch_message_carries_diff(tmp_path):
+    from repro.ckpt import load_checkpoint, save_checkpoint
+    tree = {"w": encode(np.ones((2, 2), np.float32), LNS16)}
+    save_checkpoint(str(tmp_path), 1, tree, numerics=MIXED)
+    with pytest.raises(ValueError) as ei:
+        load_checkpoint(str(tmp_path), 1, tree,
+                        numerics="lns16-train-pallas")
+    msg = str(ei.value)
+    assert "numerics diff (saved vs requested)" in msg
+    # the saved plan's hidden=fmt:lns12 rule has no counterpart in the
+    # requested plan: one-sided overrides render as '-'
+    assert "hidden: fmt lns12 -> -" in msg

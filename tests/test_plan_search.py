@@ -1,0 +1,263 @@
+"""Plan autosearch: determinism, journal resume, Pareto logic, space
+validation — and the contract that the winning plan string round-trips
+losslessly through ``NumericsPlan.parse`` (pasteable into
+``launch/train.py --numerics``).
+
+The driver tests run against stub evaluate/probe functions: the search
+logic (proposal order, greedy narrowing, refinement, journaling) is
+exactly the code the real CLI runs; only the expensive measurement is
+replaced.  ``test_smoke_end_to_end`` exercises the real evaluator once.
+"""
+import json
+
+import pytest
+
+from repro.core import NumericsPlan
+from repro.search import (PlanSearch, SearchBudgetExhausted, SearchConfig,
+                          SearchSpace, dominates, pareto_frontier,
+                          select_winner)
+from repro.search.report import frontier_table, render_report
+
+
+# ------------------------------------------------------------- fixtures
+def make_space(**kw):
+    kw.setdefault("deltas", ())
+    return SearchSpace.for_paper_mlp("lns16-train-emulate", **kw)
+
+
+def fake_eval(plan_str):
+    """Deterministic synthetic accuracy: narrowing ``hidden`` is nearly
+    free, narrowing ``out`` is expensive — so greedy narrowing should
+    accept hidden=lns12 and reject out=lns12 at max_acc_drop=0.02."""
+    plan = NumericsPlan.parse(plan_str)
+    acc = 0.9
+    if plan.resolve("hidden")._flat()["fmt"] == "lns12":
+        acc -= 0.005
+    if plan.resolve("out")._flat()["fmt"] == "lns12":
+        acc -= 0.05
+    if plan.resolve("out")._flat()["delta"] == "bitshift":
+        acc -= 0.03
+    if plan.resolve("hidden")._flat()["delta"] == "bitshift":
+        acc -= 0.001
+    return {"acc": acc}
+
+
+def fake_probe():
+    # out saturates + fills upper Δ-LUT buckets, hidden does not →
+    # hidden is the stronger narrowing candidate but the counter-ranked
+    # order still visits out first only if its totals are *lower*
+    return {"hidden": {"sat": 0, "zero": 5, "elems": 1000,
+                       "upper_dhist": 0},
+            "out": {"sat": 40, "zero": 0, "elems": 200,
+                    "upper_dhist": 9}}
+
+
+def run_search(tmp_path, name="j.jsonl", space=None, config=None,
+               evaluate_fn=fake_eval, max_evals=None):
+    space = space or make_space()
+    config = config or SearchConfig()
+    s = PlanSearch(space, config, journal=str(tmp_path / name),
+                   evaluate_fn=evaluate_fn, probe_fn=fake_probe)
+    try:
+        return s.run(max_evals=max_evals)
+    finally:
+        s.close()
+
+
+# ---------------------------------------------------------- pareto unit
+def test_dominates_weak_plus_strict():
+    a = {"acc_delta": 0.0, "time_cost": 10.0}
+    b = {"acc_delta": -0.1, "time_cost": 10.0}
+    assert dominates(a, b) and not dominates(b, a)
+    assert not dominates(a, dict(a))          # equal: no strict edge
+    c = {"acc_delta": 0.1, "time_cost": 20.0}
+    assert not dominates(a, c) and not dominates(c, a)   # trade-off
+
+
+def test_pareto_frontier_sorted_and_deduped():
+    rows = [
+        {"plan": "p1", "acc_delta": 0.0, "time_cost": 10.0},
+        {"plan": "p2", "acc_delta": -0.01, "time_cost": 5.0},
+        {"plan": "p3", "acc_delta": -0.5, "time_cost": 9.0},   # dominated
+        {"plan": "p1", "acc_delta": -9.9, "time_cost": 99.0},  # dup plan
+    ]
+    front = pareto_frontier(rows)
+    assert [r["plan"] for r in front] == ["p2", "p1"]   # cost ascending
+
+
+def test_select_winner_cheapest_feasible():
+    rows = [
+        {"plan": "cheap", "acc_delta": -0.05, "time_cost": 1.0},
+        {"plan": "mid", "acc_delta": -0.01, "time_cost": 2.0},
+        {"plan": "anchor", "acc_delta": 0.0, "time_cost": 3.0},
+    ]
+    assert select_winner(rows, max_acc_drop=0.02)["plan"] == "mid"
+    assert select_winner(rows, max_acc_drop=0.1)["plan"] == "cheap"
+    assert select_winner(rows, max_acc_drop=0.001)["plan"] == "anchor"
+    assert select_winner([], max_acc_drop=0.02) is None
+
+
+# ------------------------------------------------- space validation (S6)
+def test_validate_paths_runs_before_any_measurement():
+    space = SearchSpace.for_paper_mlp(layers=("hiden",))   # typo'd glob
+    with pytest.raises(ValueError) as ei:
+        space.validate()
+    msg = str(ei.value)
+    assert "hiden" in msg
+    # the error lists the known layer paths — the regression guard
+    assert "hidden" in msg and "out" in msg
+
+    calls = []
+    with pytest.raises(ValueError):
+        PlanSearch(space, SearchConfig(),
+                   evaluate_fn=lambda p: calls.append(p) or {"acc": 1.0},
+                   probe_fn=lambda: calls.append("probe") or {})
+    assert calls == []   # failed before probing or evaluating anything
+
+
+def test_validate_rejects_bad_axis_vocabulary():
+    with pytest.raises(ValueError):
+        make_space(fmts=("lns16", "nosuchfmt")).validate()
+    with pytest.raises(ValueError):
+        make_space(deltas=("nosuchdelta",)).validate()
+
+
+def test_build_rejects_non_sweepable_axis():
+    space = make_space()
+    with pytest.raises(ValueError, match="non-sweepable"):
+        space.build({"hidden": {"quantize": "off"}})
+
+
+# ------------------------------------------------- driver: determinism
+def test_two_fresh_runs_identical(tmp_path):
+    space = make_space(deltas=("lut20", "bitshift"))
+    r1 = run_search(tmp_path, "a.jsonl", space=space)
+    r2 = run_search(tmp_path, "b.jsonl", space=space)
+    assert [e["plan"] for e in r1.evals] == [e["plan"] for e in r2.evals]
+    assert [f["plan"] for f in r1.frontier] \
+        == [f["plan"] for f in r2.frontier]
+    assert r1.winner == r2.winner
+    assert r1.order == r2.order
+
+
+def test_greedy_narrowing_respects_acc_budget(tmp_path):
+    r = run_search(tmp_path)
+    win = NumericsPlan.parse(r.winner["plan"])
+    assert win.resolve("hidden")._flat()["fmt"] == "lns12"   # cheap drop
+    assert win.resolve("out")._flat()["fmt"] == "lns16"      # too lossy
+    assert r.winner["acc_delta"] >= -SearchConfig().max_acc_drop
+    # counter-ranked proposal order: hidden (sat 0, upper 0) first
+    assert r.order == ["hidden", "out"]
+
+
+def test_winner_round_trips_through_plan_parse(tmp_path):
+    r = run_search(tmp_path)
+    s = r.winner["plan"]
+    assert str(NumericsPlan.parse(s)) == s
+    # and every frontier row's plan string does too
+    for row in r.frontier:
+        assert str(NumericsPlan.parse(row["plan"])) == row["plan"]
+
+
+def test_frontier_rows_carry_plan_and_costs(tmp_path):
+    r = run_search(tmp_path)
+    for row in r.evals:
+        assert set(row) >= {"plan", "acc", "cost", "acc_delta",
+                            "time_cost"}
+    anchor_rows = [e for e in r.evals
+                   if e["plan"] == "lns16-train-emulate"]
+    assert anchor_rows and anchor_rows[0]["acc_delta"] == 0.0
+
+
+# ---------------------------------------------------- driver: journal
+def test_resume_reproduces_identical_frontier(tmp_path):
+    full = run_search(tmp_path, "full.jsonl")
+    lines = (tmp_path / "full.jsonl").read_text().splitlines()
+
+    # truncate after 2 eval rows (keep header + probe evidence)
+    kept, n = [lines[0]], 0
+    for ln in lines[1:]:
+        if json.loads(ln).get("kind") == "eval":
+            if n >= 2:
+                break
+            n += 1
+        kept.append(ln)
+    (tmp_path / "cut.jsonl").write_text("\n".join(kept) + "\n")
+
+    fresh = []
+    r = run_search(tmp_path, "cut.jsonl",
+                   evaluate_fn=lambda p: fresh.append(p) or fake_eval(p))
+    assert [e["plan"] for e in r.evals] \
+        == [e["plan"] for e in full.evals]
+    assert [f["plan"] for f in r.frontier] \
+        == [f["plan"] for f in full.frontier]
+    assert r.winner == full.winner
+    assert len(fresh) == len(full.evals) - 2   # cached rows not re-run
+
+
+def test_resume_tolerates_torn_tail_line(tmp_path):
+    full = run_search(tmp_path, "full.jsonl")
+    text = (tmp_path / "full.jsonl").read_text()
+    (tmp_path / "torn.jsonl").write_text(text + '{"kind": "eval", "pl')
+    r = run_search(tmp_path, "torn.jsonl")
+    assert r.winner == full.winner
+
+
+def test_journal_header_mismatch_rejected(tmp_path):
+    run_search(tmp_path, "j.jsonl")
+    other = make_space(fmts=("lns16",))
+    with pytest.raises(ValueError, match="journal"):
+        PlanSearch(other, SearchConfig(), journal=str(tmp_path / "j.jsonl"),
+                   evaluate_fn=fake_eval, probe_fn=fake_probe)
+
+
+def test_budget_exhaustion_marks_incomplete_and_resumes(tmp_path):
+    r1 = run_search(tmp_path, "j.jsonl", max_evals=2)
+    assert not r1.complete
+    assert r1.winner is None
+    assert len(r1.evals) == 2
+    # rerunning with the same journal completes to the full-run result
+    full = run_search(tmp_path, "ref.jsonl")
+    r2 = run_search(tmp_path, "j.jsonl")
+    assert r2.complete
+    assert r2.winner == full.winner
+    assert [f["plan"] for f in r2.frontier] \
+        == [f["plan"] for f in full.frontier]
+
+
+def test_budget_zero_raises_nothing_but_returns_empty(tmp_path):
+    r = run_search(tmp_path, max_evals=0)
+    assert not r.complete and r.evals == [] and r.winner is None
+
+
+# -------------------------------------------------------------- report
+def test_report_contains_winner_and_rationale(tmp_path):
+    space = make_space()
+    r = run_search(tmp_path, space=space)
+    rep = render_report(r, space, SearchConfig())
+    assert f"--numerics '{r.winner['plan']}'" in rep
+    assert "numerics diff (anchor vs winner)" in rep
+    assert "hidden:" in rep and "out:" in rep
+    tbl = frontier_table(r.frontier, r.winner)
+    assert r.winner["plan"] in tbl
+
+
+# ------------------------------------------------ real-evaluator smoke
+def test_smoke_end_to_end(tmp_path):
+    """One real (tiny) evaluation path: the driver's run_experiment /
+    obs-probe wiring works against the actual model."""
+    space = make_space()
+    cfg = SearchConfig(epochs=1, steps_per_epoch=2, batch_size=5,
+                       refine_generations=0, refine_population=0,
+                       data_dir=str(tmp_path / "data"))
+    s = PlanSearch(space, cfg, journal=str(tmp_path / "j.jsonl"))
+    try:
+        r = s.run(max_evals=2)
+    finally:
+        s.close()
+    assert len(r.evals) == 2
+    for e in r.evals:
+        assert 0.0 <= e["acc"] <= 1.0
+    assert set(r.evidence) == {"hidden", "out"}
+    for ev in r.evidence.values():
+        assert {"sat", "zero", "elems", "upper_dhist"} <= set(ev)
