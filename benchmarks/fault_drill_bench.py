@@ -1,0 +1,22 @@
+"""Fault-drill bench: inject → detect → recover, scored deterministically.
+
+Thin wrapper over :mod:`repro.launch.drill` so the drill rows ride the
+same bench plumbing as the kernel/serve benches: emits
+``BENCH_fault_drill.json`` in the shared row schema and is gated by::
+
+    python benchmarks/compare_bench.py BENCH_fault_drill.json \
+        --baseline benchmarks/baselines/fault_drill.json \
+        --gate-ops fault_drill --require-rows
+
+``ms_per_step`` carries **detection latency in steps** (a deterministic
+integer — no wall clock enters the JSON), so the perf gate doubles as a
+"did fault detection get slower" gate and never flakes on machine speed;
+``--normalize`` must NOT be passed for this file.  Same seed ⇒
+byte-identical JSON (``--selfcheck`` asserts it).
+"""
+import sys
+
+from repro.launch.drill import main
+
+if __name__ == "__main__":
+    sys.exit(0 if main() is not None else 1)

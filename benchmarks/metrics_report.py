@@ -115,8 +115,8 @@ def _rate(n, d):
 def report(path: str, out=sys.stdout) -> dict:
     """Aggregate ``path`` and print the per-layer table; returns the
     aggregates keyed by ``(layer, op)`` for programmatic use/tests."""
-    from repro.obs import read_jsonl
-    rows = _final_rows(read_jsonl(path))
+    from repro.obs import read_jsonl_tolerant
+    rows = _final_rows(read_jsonl_tolerant(path))
     per = {}
     for r in rows:
         if not str(r.get("name", "")).startswith("numerics."):

@@ -99,8 +99,8 @@ def run(tag: str = "pod", n_chips: int = 256, measured: str = None):
         # Achieved wall-clock step times from a --metrics JSONL (the
         # launcher's StepTimer summary rows), printed next to the model's
         # roofline terms so predicted vs. achieved sit in one report.
-        from repro.obs.sink import read_jsonl
-        summaries = [r for r in read_jsonl(measured)
+        from repro.obs.sink import read_jsonl_tolerant
+        summaries = [r for r in read_jsonl_tolerant(measured)
                      if r.get("kind") == "summary"
                      and r.get("name") == "train.step_time_ms"]
         if summaries:

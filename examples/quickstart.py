@@ -285,3 +285,34 @@ print(f"evaluated {len(_sres.evals)} candidate plans "
 print(frontier_table(_sres.frontier, _sres.winner))
 print(f"winning plan — paste into launch/train.py:")
 print(f"  --numerics '{_sres.winner['plan']}'")
+
+print("\n=== 10. Fault drill: inject → detect → recover ===")
+# Faults are injected, never accidental: a seed-keyed FaultPlan (same
+# glob-rule grammar as NumericsPlan) flips weight/activation code bits,
+# pins lanes at saturation, corrupts Δ-LUT entries, or drops DP segment
+# partials — identically on both lanes, and as a true no-op (identical
+# traced graph) when no plan is active.  Guardrails watch the §8 metrics
+# taps and recover: snapshot rollback, per-layer format widening (a plan
+# override + exact code conversion), DP recompute-and-splice.
+#   CLI: python -m repro.launch.drill --smoke        (the CI chaos job)
+#        python benchmarks/fault_drill_bench.py --selfcheck
+from repro.paper.mlp import MLPConfig, make_mlp
+from repro.resil import GuardConfig, GuardedTrainer
+
+_fcfg = MLPConfig(n_in=12, n_hidden=9, n_out=4, lr=0.01, momentum=0.9,
+                  spec="lns16-train-emulate;hidden=fmt:lns12,metrics:full",
+                  matmul_block=8,
+                  faults="seed=7,start=3;hidden=sat_lanes:4")
+_fm = make_mlp("lns", _fcfg)
+_fp = _fm.init(jax.random.PRNGKey(0))
+_ft = GuardedTrainer(_fm, _fp, _fm.init_momentum(_fp),
+                     guard=GuardConfig(sat_frac=0.10))
+_frng = np.random.default_rng(5)
+for _ in range(5):
+    _fr = _ft.step(_frng.normal(size=(8, 12)).astype(np.float32),
+                   _frng.integers(0, 4, size=(8,)))
+    if _fr["action"]:
+        print(f"step {_fr['step']}: "
+              f"{[a.kind for a in _fr['alerts']]} → {_fr['action']}")
+print(f"recovery events: {[e['action'] for e in _ft.events]} — hidden "
+      f"widened from lns12 to lns16 under a stuck-at-saturation storm")

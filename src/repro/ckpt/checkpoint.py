@@ -86,9 +86,21 @@ def save_checkpoint(directory: str, step: int, tree, *,
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    # Swap dance: never a moment where ``final`` is half-deleted.  The old
+    # checkpoint is renamed aside (atomic), the new one renamed in
+    # (atomic), and only then is the old one deleted — a kill at any
+    # point leaves either the old or the new directory intact under
+    # ``final`` (or, between the two renames, a complete new dir at
+    # ``tmp`` plus a complete old dir at ``.old.tmp``; GC cleans both and
+    # restore ignores them).
+    old = final + ".old.tmp"
+    if os.path.exists(old):
+        shutil.rmtree(old)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        os.rename(final, old)
+    os.replace(tmp, final)
+    if os.path.exists(old):
+        shutil.rmtree(old)
     return final
 
 
@@ -120,8 +132,20 @@ def load_checkpoint(directory: str, step: int, like, shardings=None, *,
     ``allow_numerics_mismatch=True`` for a deliberate format migration.
     """
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        raise ValueError(
+            f"checkpoint {path} is torn/partial: no manifest.json.  Writes "
+            f"are atomic (tmp dir + rename), so a directory without a "
+            f"manifest was never a complete checkpoint — delete it and "
+            f"restore an earlier step.")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except ValueError as e:
+        raise ValueError(
+            f"checkpoint {path} is torn/partial: manifest.json is not "
+            f"valid JSON ({e}).  Delete it and restore an earlier step.")
     want = _canonical_numerics(numerics)
     have = manifest.get("numerics")
     if want is not None and have is not None and want != have \
@@ -138,6 +162,13 @@ def load_checkpoint(directory: str, step: int, like, shardings=None, *,
     leaves, treedef = _tree_paths(like)
     assert manifest["n_leaves"] == len(leaves), \
         f"checkpoint has {manifest['n_leaves']} leaves, tree has {len(leaves)}"
+    missing = [f"leaf_{i}.npy" for i in range(len(leaves))
+               if not os.path.exists(os.path.join(path, f"leaf_{i}.npy"))]
+    if missing:
+        raise ValueError(
+            f"checkpoint {path} is torn/partial: manifest promises "
+            f"{manifest['n_leaves']} leaves but {missing} are missing.  "
+            f"Delete it and restore an earlier step.")
     arrs = [np.load(os.path.join(path, f"leaf_{i}.npy"))
             for i in range(len(leaves))]
     if shardings is not None:

@@ -43,6 +43,7 @@ from ..core.plan import NumericsPlan
 from ..core.spec import ReduceSpec
 from ..obs import metrics as _obs
 from ..obs.trace import phase_scope
+from ..resil import inject as _inj
 from .lns_reduce import (combine_partials, deterministic_boxplus_allreduce,
                          float_psum_allreduce)
 
@@ -173,6 +174,7 @@ class LNSDataParallelMLP:
         self.cfg = cfg
         self.dp = dp
         self.inner = LNSMLP(cfg)
+        self.fault_plan = self.inner.fault_plan
         self.mesh = make_data_mesh(dp.num_devices, dp.axis_name)
 
     # -- passthroughs ----------------------------------------------------
@@ -196,10 +198,27 @@ class LNSDataParallelMLP:
         segments = dp.segments(xb.shape[0])
         segs_local = segments // dp.num_devices
         axis = dp.axis_name
+        # Fault wiring (resil/inject), all no-ops without an ambient plan:
+        # weight-code flips apply here on the replicated params (the
+        # outer trace owns the step tracer); segment-partial faults apply
+        # *inside* the mapped body with the plan captured statically and
+        # the global slot recovered from lax.axis_index — the outer step
+        # tracer must not cross into the per-device trace (the same
+        # tracer-leak discipline that suspends obs collection below).
+        from ..paper.mlp import PARAM_LAYER
+        fplan = _inj.active_plan()
+        params = _inj.inject_param_codes(params,
+                                         param_fmts=inner.param_fmts,
+                                         param_layer=PARAM_LAYER)
 
         def local_fn(params, xb_l, yb_l):
             grads, loss = inner.per_segment_grads(params, xb_l, yb_l,
                                                   segs_local)
+            if fplan is not None:
+                grads = _inj.inject_segment_partials(
+                    grads, param_fmts=inner.param_fmts,
+                    param_layer=PARAM_LAYER, segs_local=segs_local,
+                    axis_name=axis, plan=fplan)
             # Format-correct ⊞-allreduce per parameter: each leaf's
             # partials combine under its own layer's Δ engine.
             red = {}
@@ -231,7 +250,7 @@ class LNSDataParallelMLP:
         # collection is suspended across the mapped call; the combined
         # gradients are observed below on the replicated values — the DP
         # canonical-reduce schedule itself is untouched.
-        with phase_scope("reduce"), _obs.suspended():
+        with phase_scope("reduce"), _obs.suspended(), _inj.suspended():
             grads, loss = mapped(params, xb, yb)
         if _obs.enabled():
             from ..paper.mlp import PARAM_LAYER
@@ -265,6 +284,24 @@ class LNSDataParallelMLP:
         with _obs.collecting() as col:
             out = self._step_impl(params, xb, yb, momentum)
             return out, col.taps()
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step_faults(self, params, xb, yb, step, momentum=None):
+        """DP step with the config's :class:`FaultPlan` armed (traced
+        ``step`` keys the per-step faults; activation faults inside the
+        mapped per-device bodies stay suspended — see ``_step_impl``)."""
+        with _inj.injecting(self.fault_plan, step):
+            return self._step_impl(params, xb, yb, momentum)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step_faults_metrics(self, params, xb, yb, step,
+                                  momentum=None):
+        """:meth:`train_step_faults` + numerics taps (the guardrail
+        entry point)."""
+        with _inj.injecting(self.fault_plan, step):
+            with _obs.collecting() as col:
+                out = self._step_impl(params, xb, yb, momentum)
+                return out, col.taps()
 
 
 def reference_train_step(inner, params, xb, yb, *, grad_segments: int,

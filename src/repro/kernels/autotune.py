@@ -52,6 +52,7 @@ import json
 import os
 import subprocess
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -199,6 +200,26 @@ def entry_key(op: str, shape, fmt: LNSFormat, spec: DeltaSpec,
             f"|interpret={bool(interpret)}")
 
 
+# Files already warned about this process (one RuntimeWarning per file,
+# not one per lookup).
+_WARNED_CORRUPT: set = set()
+
+
+def _quarantine(path: str, err: Exception) -> None:
+    """Move an unparsable cache file aside as ``<path>.corrupt`` so the
+    next lookup re-tunes into a fresh file instead of failing forever
+    (e.g. a crash mid-``_persist`` leaving a torn JSON)."""
+    try:
+        os.replace(path, path + ".corrupt")
+    except OSError:
+        pass  # read-only FS: still fall through to re-tune in memory
+    if path not in _WARNED_CORRUPT:
+        _WARNED_CORRUPT.add(path)
+        warnings.warn(
+            f"autotune cache {path} is corrupt ({err}); quarantined as "
+            f"{path}.corrupt and re-tuning", RuntimeWarning, stacklevel=3)
+
+
 def _load_disk() -> dict:
     path = cache_path()
     if path not in _DISK:
@@ -206,10 +227,14 @@ def _load_disk() -> dict:
         try:
             with open(path) as f:
                 data = json.load(f)
+            if not isinstance(data, dict):
+                raise ValueError(f"expected object, got {type(data).__name__}")
             if data.get("env") == env_stamp():
                 entries = data.get("entries", {})
-        except (OSError, ValueError):
-            pass
+        except OSError:
+            pass  # missing file: first run in this env
+        except ValueError as e:
+            _quarantine(path, e)
         _DISK[path] = entries
     return _DISK[path]
 

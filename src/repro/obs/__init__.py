@@ -20,7 +20,7 @@ from .metrics import (
     tap,
 )
 from .registry import MetricsRegistry
-from .sink import JsonlSink, read_jsonl
+from .sink import JsonlSink, read_jsonl, read_jsonl_tolerant
 from .trace import (
     StepTimer,
     TRACE_DIR_ENV,
@@ -47,6 +47,7 @@ __all__ = [
     "MetricsRegistry",
     "JsonlSink",
     "read_jsonl",
+    "read_jsonl_tolerant",
     "StepTimer",
     "TRACE_DIR_ENV",
     "maybe_profile",

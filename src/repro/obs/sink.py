@@ -2,8 +2,11 @@
 
 Rows come from ``MetricsRegistry.rows()``; the sink stamps each with the
 flush ``step`` plus any row-level extras the caller passes (loss,
-step_time_ms, ...).  ``read_jsonl`` is the matching loader used by
-``benchmarks/metrics_report.py`` and ``benchmarks/roofline.py``.
+step_time_ms, ...).  ``read_jsonl`` is the strict loader;
+``read_jsonl_tolerant`` is the crash-safe one — a process killed
+mid-write leaves at most one torn final line, which the tolerant reader
+drops instead of raising (the shared helper behind the search journal's
+resume, metrics replay, and the fault-drill bench).
 """
 from __future__ import annotations
 
@@ -39,8 +42,11 @@ class JsonlSink:
         if step is not None:
             stamp["step"] = int(step)
         for row in rows:
+            # Per-row flush: a crash mid-batch loses at most the row
+            # being written (a torn tail read_jsonl_tolerant drops),
+            # never whole flushed batches.
             fh.write(json.dumps({**stamp, **row}, sort_keys=True) + "\n")
-        fh.flush()
+            fh.flush()
 
     def write_row(self, row, step=None, **extra):
         self.write([row], step=step, **extra)
@@ -58,11 +64,35 @@ class JsonlSink:
 
 
 def read_jsonl(path):
-    """Load a JSONL metrics file back into a list of dicts."""
+    """Load a JSONL metrics file back into a list of dicts (strict:
+    any unparsable line raises)."""
     rows = []
     with open(path) as fh:
         for line in fh:
             line = line.strip()
             if line:
                 rows.append(json.loads(line))
+    return rows
+
+
+def read_jsonl_tolerant(path):
+    """Load a JSONL file, dropping unparsable lines (the torn tail a
+    mid-write kill leaves behind).
+
+    Every line that parses is kept — with per-row flushing
+    (:class:`JsonlSink`, the search journal) a crash can tear at most
+    the final line, so tolerance never hides whole batches.  Used by the
+    search journal's resume, metrics replay (``metrics_report.py`` /
+    ``roofline.py``), and the fault-drill bench.
+    """
+    rows = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rows.append(json.loads(line))
+            except ValueError:
+                continue
     return rows

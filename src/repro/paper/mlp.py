@@ -40,6 +40,7 @@ import numpy as np
 
 from ..obs import metrics as _obs
 from ..obs.trace import phase_scope
+from ..resil import inject as _inj
 
 from ..core import (DELTA_BITSHIFT, DELTA_DEFAULT, DELTA_EXACT,
                     DELTA_SOFTMAX, FXP12, FXP16, LNS12, LNS16, DeltaEngine,
@@ -92,6 +93,11 @@ class MLPConfig:
                                     # composition; False = separate-pass
                                     # reference path (benchmarks)
     data_parallel: int = 1          # lns only: devices on the 'data' axis
+    faults: Any = None              # lns only: FaultPlan | plan string |
+                                    # None (resil/inject).  None → no
+                                    # injection, graphs bit-identical to a
+                                    # fault-free build.  Normalized to a
+                                    # FaultPlan in __post_init__.
     # -- legacy loose knobs, deprecated: fold into ``spec`` ----------------
     matmul_backend: dataclasses.InitVar[Any] = None   # → spec.backend
     reduce_mode: dataclasses.InitVar[Any] = None      # → spec.reduce.mode
@@ -126,6 +132,7 @@ class MLPConfig:
                 f"MLPConfig(spec={str(spec)!r})",
                 DeprecationWarning, stacklevel=3)
         object.__setattr__(self, "spec", spec)
+        object.__setattr__(self, "faults", _inj.FaultPlan.parse(self.faults))
 
     @property
     def lns_fmt(self):
@@ -357,6 +364,20 @@ class LNSMLP:
         self.runtimes = {p: cfg.layer_runtime(p) for p in LAYER_PATHS}
         self.fmts = {p: self.runtimes[p].spec.fmt for p in LAYER_PATHS}
         self.engs = {p: self.runtimes[p].delta_engine for p in LAYER_PATHS}
+        # Fault surface (resil/inject): Δ-LUT corruption is a build-time
+        # fault, applied to *copies* — the runtime-cached engines are
+        # shared across models and must never be mutated.  The corrupted
+        # engines feed every shared-jnp ⊞ site (bias-gradient boxsum,
+        # boxdot, the unfused update, the DP combine), identically on the
+        # emulate and pallas lanes; the matmul kernels' baked tables are
+        # out of scope for this fault.  No plan ⇒ the engines pass
+        # through untouched (identical objects, identical graphs).
+        self.fault_plan = cfg.faults
+        if self.fault_plan is not None:
+            self.fault_plan.validate_paths(LAYER_PATHS + ("serve",))
+            self.engs = {p: _inj.corrupt_engine(self.engs[p],
+                                                self.fault_plan, p)
+                         for p in LAYER_PATHS}
         # Softmax sits in the output layer: its (approximation-sensitive,
         # r = 1/64) Δ table lives in the *output* format.
         out_delta = self.runtimes["out"].spec.delta_spec
@@ -464,6 +485,13 @@ class LNSMLP:
             with self._scope("out", "fwd"):
                 z2 = mm_o.affine(a1, params["w2"], params["b2"])
             z1_sign = z1.sign
+        # Fault sites (no-ops unless a FaultPlan is ambient — identical
+        # objects, identical graphs): activation-plane bit flips and
+        # stuck-at-saturation lanes land *after* the layer's compute and
+        # *before* the obs taps, so the detectors see what the next layer
+        # sees.
+        a1 = _inj.inject_codes(a1, fo, layer="hidden", site="act")
+        z2 = _inj.inject_codes(z2, fo, layer="out", site="act")
         if self._collect("hidden"):
             _obs.observe_codes(a1, fo, layer="hidden", op="act")
         if self._collect("out"):
@@ -590,6 +618,12 @@ class LNSMLP:
         """The train-step body, shared by :meth:`train_step` (plain) and
         :meth:`train_step_metrics` (collector active) — one trace source,
         so telemetry can never fork the arithmetic."""
+        # Weight-code bit flips (fault site; same-object no-op without an
+        # ambient FaultPlan): the step trains on the flipped codes, but
+        # the *stored* params are untouched — a flip is transient unless
+        # the update bakes it in, matching SEU semantics.
+        params = _inj.inject_param_codes(params, param_fmts=self.param_fmts,
+                                         param_layer=PARAM_LAYER)
         if not self.cfg.fused or self.update_eps is None:
             grads, loss = self._backward(params, xb, yb)
             with phase_scope("update"):
@@ -659,6 +693,29 @@ class LNSMLP:
         with _obs.collecting() as col:
             out = self._step_impl(params, xb, yb, momentum)
             return out, col.taps()
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step_faults(self, params, xb, yb, step, momentum=None):
+        """:meth:`train_step` with the config's :class:`FaultPlan` armed.
+
+        ``step`` is a traced int32: per-step fault keying (and the plan's
+        ``[start, stop)`` window) is data, not trace state, so one jitted
+        graph serves every step.  With ``cfg.faults=None`` this is the
+        plain step plus an unused ``step`` input — same arithmetic graph.
+        """
+        with _inj.injecting(self.fault_plan, step):
+            return self._step_impl(params, xb, yb, momentum)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def train_step_faults_metrics(self, params, xb, yb, step,
+                                  momentum=None):
+        """:meth:`train_step_faults` + numerics taps — the guardrail
+        entry point: detectors read taps computed *after* injection, so
+        the drills can measure detection latency in steps."""
+        with _inj.injecting(self.fault_plan, step):
+            with _obs.collecting() as col:
+                out = self._step_impl(params, xb, yb, momentum)
+                return out, col.taps()
 
     @functools.partial(jax.jit, static_argnums=0)
     def predict(self, params, xb):

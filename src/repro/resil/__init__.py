@@ -1,0 +1,25 @@
+"""Resilience subsystem: deterministic fault injection + guardrails.
+
+``inject`` makes hardware-realistic faults (bit flips, Δ-LUT corruption,
+stuck saturation lanes, dropped/duplicated DP segment partials, serve
+hangs) first-class seed-keyed inputs via :class:`FaultPlan`; ``guard``
+wires the obs numerics taps to recovery policies (snapshot rollback,
+per-layer format widening, DP device-drop recovery).  The contract
+mirrors telemetry: with no plan active and guardrails disabled, every
+traced graph is bit-identical to a build without this package.
+"""
+from .inject import (FAULT_KINDS, FaultPlan, FaultRule, active_plan,
+                     active_step, corrupt_engine, fault_plan, inject_codes,
+                     inject_param_codes, inject_segment_partials, injecting,
+                     serve_faults, suspended)
+from .guard import (Alert, GuardConfig, GuardedTrainer, SnapshotRing,
+                    detect, recover_segment_partials, shrink)
+
+__all__ = [
+    "FAULT_KINDS", "FaultPlan", "FaultRule", "fault_plan", "injecting",
+    "suspended", "active_plan", "active_step", "inject_codes",
+    "inject_param_codes", "inject_segment_partials", "corrupt_engine",
+    "serve_faults",
+    "Alert", "GuardConfig", "GuardedTrainer", "SnapshotRing", "detect",
+    "recover_segment_partials", "shrink",
+]

@@ -133,25 +133,23 @@ class PlanSearch:
     def _open_journal(self, path: str) -> None:
         header = self._header()
         if os.path.exists(path) and os.path.getsize(path):
-            with open(path) as f:
-                lines = f.read().splitlines()
-            try:
-                have = json.loads(lines[0])
-            except (ValueError, IndexError):
+            # Torn-tail-tolerant replay via the shared obs helper: a
+            # killed-mid-write journal parses up to the torn line and
+            # resumes from there (--selfcheck-resume pins the identical-
+            # frontier property in CI).
+            from ..obs.sink import read_jsonl_tolerant
+            rows = read_jsonl_tolerant(path)
+            if not rows:
                 raise ValueError(
                     f"search journal {path} has no readable header; "
                     f"delete it to start fresh")
-            if have != header:
+            if rows[0] != header:
                 raise ValueError(
                     f"search journal {path} was written by a different "
                     f"search (space/config mismatch); resuming would "
                     f"splice incomparable evaluations — delete it or "
                     f"point --journal elsewhere")
-            for line in lines[1:]:
-                try:
-                    row = json.loads(line)
-                except ValueError:
-                    continue    # killed mid-write: drop the torn tail
+            for row in rows[1:]:
                 if row.get("kind") == "eval":
                     row = {k: v for k, v in row.items() if k != "kind"}
                     self._cache[row["plan"]] = row

@@ -55,10 +55,13 @@ from ..nn import (PAGED_FAMILIES, Runtime, decode_step, decode_step_paged,
 from ..nn.config import ModelConfig
 from ..nn.paged import NULL_BLOCK
 from ..obs.registry import MetricsRegistry
+from ..resil import inject as _inj
 from .paged_cache import BlockManager
 from .queue import (DECODE, DONE, PREFILL, QUEUED,
-                    REJECT_PROMPT_OVER_BUDGET, REJECT_RESERVATION_OVER_POOL,
-                    REJECTED, TERMINAL, Request, RequestQueue)
+                    REJECT_DEADLINE_EXPIRED, REJECT_PROMPT_OVER_BUDGET,
+                    REJECT_RESERVATION_OVER_POOL, REJECT_RETRY_EXHAUSTED,
+                    REJECT_WATCHDOG_ABORT, REJECTED, TERMINAL, Request,
+                    RequestQueue)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +75,12 @@ class ServeConfig:
     num_blocks: Optional[int] = None  # pool size; None → full occupancy
     prefill_chunk: int = 16      # prompt tokens spliced per engine step
     max_queue: int = 128         # admission queue depth cap
+    retry_budget: int = 0        # re-queues allowed after an engine abort
+                                 # (0 = abort is terminal)
+    watchdog_s: float = 0.0      # wall-clock step budget; a slower step
+                                 # trips the watchdog (0 = off; injected
+                                 # hang faults trip it regardless, so
+                                 # drills stay wall-clock-free)
 
     @property
     def table_width(self) -> int:
@@ -115,7 +124,8 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
                  rt: Runtime = Runtime(),
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 faults=None):
         if cfg.family not in PAGED_FAMILIES:
             raise ValueError(
                 f"ServingEngine serves {PAGED_FAMILIES} families; "
@@ -153,6 +163,14 @@ class ServingEngine:
         # histograms.  Observer-only — nothing on the data plane reads it.
         self.registry = (registry if registry is not None
                          else MetricsRegistry())
+        # Fault surface (resil/inject): engine-level faults live under
+        # the pseudo-path 'serve' of a FaultPlan (hang_step: simulate one
+        # hung engine step; slow_req: every rid % N == 0 slot decodes at
+        # half speed).  ``faults=None`` leaves every hot path untouched.
+        self.fault_plan = _inj.FaultPlan.parse(faults)
+        self._serve_faults = _inj.serve_faults(self.fault_plan)
+        self._hung = False           # set by the hang fault (or a real
+        self._last_step_s = None     # over-budget step vs watchdog_s)
         self._decode = _decode_graph(cfg, rt)
         self._prefill = _prefill_graph(cfg, rt)
 
@@ -287,6 +305,17 @@ class ServingEngine:
     def _decode_active(self):
         """One batched decode step for every DECODE slot."""
         act = self.active
+        slow = self._serve_faults.get("slow_req")
+        if slow:
+            # Injected slow-request fault: every rid % slow == 0 slot
+            # only participates in every other decode step — the
+            # deterministic way a straggler pushes an admitted request
+            # past its deadline *mid-flight*.
+            for slot in range(self.sc.max_batch):
+                r = self.slot_req[slot]
+                if (r is not None and r.state == DECODE
+                        and r.rid % slow == 0 and self.step_count % 2):
+                    act[slot] = False
         if not act.any():
             return
         logits, self.caches = self._decode(
@@ -296,7 +325,7 @@ class ServingEngine:
         self.stats["occupancy_sum"] += int(act.sum())
         for slot in range(self.sc.max_batch):
             req = self.slot_req[slot]
-            if req is None or req.state != DECODE:
+            if req is None or req.state != DECODE or not act[slot]:
                 continue
             self.pos[slot] += 1
             nxt = self._sample(logits[slot, -1], req)
@@ -334,6 +363,69 @@ class ServingEngine:
                     1e3 * (req.finish_time - req.first_token_time)
                     / (len(req.output) - 1))
 
+    # ------------------------------------------------- failure handling --
+    def _abort_request(self, req: Request, reason: str, code: str,
+                       allow_retry: bool = True):
+        """Tear an in-flight request out of the batch on *any* failure
+        path: its slot and blocks are released first (block conservation
+        holds on every exit path — ``BlockManager.check_conserved``),
+        then the request either re-queues at the front (within
+        ``retry_budget``, progress reset — re-admission re-reserves
+        blocks, so a retry can never leak or double-book) or terminally
+        rejects through the single ``RequestQueue.reject`` funnel."""
+        slot = req.slot
+        if slot >= 0:
+            self.bm.free(req.blocks)
+            self.bt[slot] = NULL_BLOCK
+            self.slot_req[slot] = None
+            req.slot = -1
+            req.blocks = []
+        req.output = []
+        req.prefill_pos = 0
+        req.first_token_time = 0.0
+        if allow_retry and self.sc.retry_budget > 0:
+            if req.retries < self.sc.retry_budget:
+                req.retries += 1
+                self.queue.requeue(req)
+                self.registry.counter_inc("serve.retries")
+                return
+            reason = (f"retry budget exhausted after {req.retries} "
+                      f"retries: {reason}")
+            code = REJECT_RETRY_EXHAUSTED
+        self.queue.reject(req, reason, self.step_count, code)
+        self.registry.counter_inc("serve.rejected", reason=code)
+
+    def force_abort(self, reason: str = "engine abort"):
+        """Abort every in-flight request (no retry) — the operator's big
+        red button, and the drill's stand-in for an engine crash.  Queued
+        requests stay queued; block conservation holds."""
+        for req in list(self.slot_req):
+            if req is not None:
+                self._abort_request(req, reason, REJECT_WATCHDOG_ABORT,
+                                    allow_retry=False)
+
+    def _watchdog_check(self):
+        """Fire the step watchdog when the previous step hung.
+
+        Two triggers: the injected ``hang_step`` fault (deterministic —
+        what the drills use) or a real wall-clock over-budget step
+        (``watchdog_s > 0``).  Firing aborts every in-flight request
+        through the retry path: requests are re-queued within their
+        budget, terminally rejected (``watchdog-abort`` /
+        ``retry-exhausted``) beyond it."""
+        hung, self._hung = self._hung, False
+        if (not hung and self.sc.watchdog_s > 0
+                and self._last_step_s is not None
+                and self._last_step_s > self.sc.watchdog_s):
+            hung = True
+        if not hung:
+            return
+        self.registry.counter_inc("serve.watchdog_fired")
+        for req in list(self.slot_req):
+            if req is not None:
+                self._abort_request(req, "step watchdog fired (hung step)",
+                                    REJECT_WATCHDOG_ABORT)
+
     def _sample(self, logits_row, req: Request) -> int:
         if self.sc.temperature == 0.0:
             return int(jnp.argmax(logits_row))
@@ -360,12 +452,27 @@ class ServingEngine:
         decoders_before = int(self.active.sum())
         d0 = self.stats["decode_steps"]
         p0 = self.stats["prefill_chunks"]
+        t0 = time.monotonic()
         self.step_count += 1
+        if self._serve_faults.get("hang_step") == self.step_count:
+            self._hung = True  # injected hung step: watchdog fires below
+        self._watchdog_check()
         for r in self.queue.expire(self.step_count):
             self.registry.counter_inc("serve.rejected", reason=r.reason_code)
+        # Mid-flight deadline: an admitted request whose budget lapses
+        # during prefill/decode is aborted (not retried — its deadline is
+        # already gone), releasing slot + blocks on the spot.
+        for req in list(self.slot_req):
+            if (req is not None and req.deadline_steps is not None
+                    and self.step_count - req.submit_step
+                    > req.deadline_steps):
+                self._abort_request(req, "deadline exceeded mid-flight",
+                                    REJECT_DEADLINE_EXPIRED,
+                                    allow_retry=False)
         self._refill()
         self._prefill_one()
         self._decode_active()
+        self._last_step_s = time.monotonic() - t0
         ran_prefill = self.stats["prefill_chunks"] > p0
         ran_decode = self.stats["decode_steps"] > d0
         if ran_prefill and decoders_before > 0 and not ran_decode:

@@ -45,8 +45,13 @@ REJECT_QUEUE_FULL = "queue-full"
 REJECT_PROMPT_OVER_BUDGET = "prompt-over-budget"
 REJECT_RESERVATION_OVER_POOL = "reservation-over-pool"
 REJECT_DEADLINE_EXPIRED = "deadline-expired"
+REJECT_RETRY_EXHAUSTED = "retry-exhausted"
+REJECT_WATCHDOG_ABORT = "watchdog-abort"
+# Pinned append-only vocabulary (tests/test_obs.py): dashboards and
+# committed metric samples key on these — extend only by appending.
 REJECT_CODES = (REJECT_QUEUE_FULL, REJECT_PROMPT_OVER_BUDGET,
-                REJECT_RESERVATION_OVER_POOL, REJECT_DEADLINE_EXPIRED)
+                REJECT_RESERVATION_OVER_POOL, REJECT_DEADLINE_EXPIRED,
+                REJECT_RETRY_EXHAUSTED, REJECT_WATCHDOG_ABORT)
 
 
 @dataclasses.dataclass
@@ -63,6 +68,7 @@ class Request:
     blocks: list = dataclasses.field(default_factory=list)  # owned block ids
     slot: int = -1                      # decode-batch slot while scheduled
     prefill_pos: int = 0                # prompt tokens already spliced
+    retries: int = 0                    # times re-queued after an abort
     submit_step: int = -1               # engine step at submit()
     start_step: int = -1                # engine step entering PREFILL
     finish_step: int = -1               # engine step entering a terminal state
@@ -145,6 +151,14 @@ class RequestQueue:
     def withdraw(self, req: Request) -> None:
         """Remove a still-queued request (caller sets its terminal state)."""
         self._q.remove(req)
+
+    def requeue(self, req: Request) -> None:
+        """Put an aborted in-flight request back at the *front* of the
+        queue (retry path: it already waited its turn once — a retry must
+        not pay the full queue again).  The caller has already released
+        the request's slot/blocks and reset its progress."""
+        req.state = QUEUED
+        self._q.appendleft(req)
 
     def expire(self, step: int) -> list:
         """Reject every queued request whose deadline lapsed; return them."""

@@ -43,6 +43,10 @@ class TrainConfig:
     matmul_backend: Optional[str] = None  # DEPRECATED → numerics spec
                                      # 'backend=' override
     data_parallel: int = 1           # devices on the 'data' mesh axis
+    nan_guard: bool = False          # skip the update (params/opt state
+                                     # unchanged, step still advances) when
+                                     # loss or any grad is nonfinite;
+                                     # metrics report 'update_skipped'
     reduce_mode: Optional[str] = None  # DEPRECATED → numerics spec
                                      # 'reduce.mode='.  None resolves to
                                      # the spec's reduce.mode; the LM path
@@ -180,6 +184,20 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
             grads, res = fake_compress_roundtrip(grads, state["residual"])
         new_params, new_opt = opt_update(params, grads, state["opt"],
                                          state["step"])
+        if tc.nan_guard:
+            # A nonfinite loss or gradient poisons params/opt state
+            # irreversibly (momentum carries the NaN forward); drop the
+            # whole update instead.  jnp.where keeps the step a single
+            # traced graph — no host round-trip, works under pmap/shard_map.
+            finite = jnp.isfinite(loss)
+            for g in jax.tree.leaves(grads):
+                finite = finite & jnp.all(jnp.isfinite(
+                    g.astype(jnp.float32)))
+            keep = lambda new, old: jax.tree.map(
+                lambda n, o: jnp.where(finite, n, o), new, old)
+            new_params = keep(new_params, params)
+            new_opt = keep(new_opt, state["opt"])
+            metrics["update_skipped"] = (~finite).astype(jnp.int32)
         new_state = {"params": new_params, "opt": new_opt,
                      "step": state["step"] + 1}
         if tc.compress_grads:

@@ -82,7 +82,8 @@ def test_dhist_edges_pinned():
 
 def test_reject_code_vocabulary_pinned():
     assert REJECT_CODES == ("queue-full", "prompt-over-budget",
-                            "reservation-over-pool", "deadline-expired")
+                            "reservation-over-pool", "deadline-expired",
+                            "retry-exhausted", "watchdog-abort")
 
 
 # ----------------------------------------------------------- bit-parity ---
